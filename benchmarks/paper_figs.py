@@ -1,0 +1,127 @@
+"""Reproductions of the paper's experiments (Figs. 3, 4, 7).
+
+Each function returns (rows, summary) where rows are CSV-able tuples
+(name, us_per_call, derived). Numbers land in EXPERIMENTS.md.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import consensus, dc_elm, elm
+from repro.data.partition import partition_equal
+from repro.data.sinc import make_sinc_dataset
+from repro.data.synthetic_mnist import make_mnist36_dataset
+
+
+def _timeit(fn, *args, repeats=3):
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / repeats * 1e6  # us
+
+
+# ---------------------------------------------------------------------------
+# Fig. 3: centralized ELM MSE/DEV vs number of hidden neurons L
+# ---------------------------------------------------------------------------
+
+
+def fig3_centralized_sinc(trials: int = 10):
+    rows = []
+    Ls = [5, 10, 20, 50, 100, 200]
+    C = 2**8
+    for L in Ls:
+        mses = []
+        for t in range(trials):
+            X, Y, Xt, Yt = make_sinc_dataset(
+                jax.random.key(100 + t), num_nodes=1, per_node=5000,
+                num_test=2000,
+            )
+            model = elm.train_centralized(
+                jax.random.key(t), X[0], Y[0], num_features=L, C=C
+            )
+            mses.append(float(elm.mse(model, Xt, Yt)))
+        mse, dev = float(np.mean(mses)), float(np.std(mses))
+        rows.append((f"fig3/sinc_centralized_L{L}", 0.0,
+                     f"mse={mse:.5f};dev={dev:.5f}"))
+    return rows, {"Ls": Ls}
+
+
+# ---------------------------------------------------------------------------
+# Fig. 4: DC-ELM on SinC — convergence and the documented divergence
+# ---------------------------------------------------------------------------
+
+
+def fig4_dcelm_sinc(iters: int = 300):
+    from repro.core.features import make_random_features
+
+    rows = []
+    graph = consensus.paper_fig2()  # V=4, d_max=2
+    X, Y, Xt, Yt = make_sinc_dataset(jax.random.key(0))
+    X, Y = X.astype(jnp.float64), Y.astype(jnp.float64)
+    settings = [
+        ("a", 2**2, 1 / 1.9),  # gamma > 1/d_max: paper shows divergence
+        ("b", 2**2, 1 / 2.1),
+        ("c", 2**8, 1 / 2.1),
+    ]
+    fmap = make_random_features(
+        jax.random.key(1), 1, 100, "sigmoid", dtype=X.dtype
+    )
+    for tag, C, gamma in settings:
+        H = jax.vmap(fmap)(X)
+        _, P_, Q_ = dc_elm.simulate_init(H, Y, C)
+        state = dc_elm.simulate_init_from_stats(P_, Q_, C)
+        trace_fn = dc_elm.average_empirical_risk_fn(fmap, Xt, Yt)
+        final, risks = dc_elm.simulate_run(
+            state, graph, gamma, C, iters, trace_fn=trace_fn
+        )
+        beta_c = dc_elm.centralized_from_node_stats(P_, Q_, C)
+        cent = elm.ELM(feature_map=fmap, beta=beta_c)
+        r_c = float(elm.empirical_risk(cent(Xt), Yt))
+        r_d0, r_dk = float(risks[0]), float(risks[-1])
+        dist = float(dc_elm.distance_to(final.betas, beta_c))
+        rows.append((
+            f"fig4{tag}/C{C:g}_gamma{gamma:.3f}", 0.0,
+            f"Rc={r_c:.4f};Rd0={r_d0:.4f};Rdk={r_dk:.4f};dist={dist:.4f}",
+        ))
+    return rows, {}
+
+
+# ---------------------------------------------------------------------------
+# Fig. 7: MNIST(3v6 surrogate) over random geometric networks
+# ---------------------------------------------------------------------------
+
+
+def fig7_mnist(iters: int = 1500):
+    rows = []
+    X, T, Xt, Tt = make_mnist36_dataset(seed=0)
+    X, T = jnp.asarray(X), jnp.asarray(T)
+    Xt, Tt = jnp.asarray(Xt), jnp.asarray(Tt)
+    L, C = 25, 2**-2
+    # centralized reference (paper: 0.8989 for V=25 setup, 0.9200 for V=100)
+    cent = elm.train_centralized(jax.random.key(0), X, T, num_features=L, C=C)
+    acc_c = float(elm.accuracy(cent(Xt), Tt))
+    rows.append(("fig7/centralized", 0.0, f"acc={acc_c:.4f}"))
+    for V, gamma, radius, seed in [(25, 0.076, 0.35, 1), (100, 0.038, 0.2, 2)]:
+        g = consensus.random_geometric(V, radius, seed=seed)
+        Xn, Tn = partition_equal(np.asarray(X), np.asarray(T), V)
+        fmap = cent.feature_map
+        H = jax.vmap(fmap)(jnp.asarray(Xn))
+        state, P_, Q_ = dc_elm.simulate_init(H, jnp.asarray(Tn), C)
+        trace_fn = dc_elm.test_error_fn(fmap, Xt, Tt)
+        final, errs = dc_elm.simulate_run(
+            state, g, gamma, C, iters, trace_fn=trace_fn
+        )
+        rows.append((
+            f"fig7/V{V}", 0.0,
+            f"err0={float(errs[0]):.4f};errK={float(errs[-1]):.4f};"
+            f"acc={1-float(errs[-1]):.4f};lambda2={g.algebraic_connectivity:.4f};"
+            f"dmax={g.d_max:.0f};acc_centralized={acc_c:.4f}",
+        ))
+    return rows, {}

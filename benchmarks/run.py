@@ -1,0 +1,111 @@
+"""Benchmark entry point. One function per paper table/figure, plus the
+kernel / online / communication microbenches and the roofline table from
+the dry-run sweep. Prints ``name,us_per_call,derived`` CSV.
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.run [--suite fig3,fig4,...] [--fast]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+
+def _roofline_table():
+    """Summarize the dry-run sweep results (benchmarks/dryrun_sweep.py)."""
+    path = os.path.join(
+        os.path.dirname(__file__), "results", "dryrun_table.json"
+    )
+    rows = []
+    if not os.path.exists(path):
+        rows.append(("roofline/table", 0.0, "missing: run benchmarks.dryrun_sweep"))
+        return rows, {}
+    results_dir = os.path.join(os.path.dirname(__file__), "results", "dryrun")
+    recs = []
+    for f in sorted(os.listdir(results_dir)):
+        if f.endswith(".json"):
+            with open(os.path.join(results_dir, f)) as fh:
+                recs.append(json.load(fh))
+    for rec in recs:
+        tag = f"roofline/{rec['arch']}/{rec['shape']}/{rec['mesh']}"
+        if rec.get("skipped"):
+            rows.append((tag, 0.0, f"skipped:{rec['reason'][:60]}"))
+            continue
+        if not rec.get("ok"):
+            rows.append((tag, 0.0, "FAILED"))
+            continue
+        r = rec["roofline"]
+        rows.append((
+            tag, 0.0,
+            f"bottleneck={r['bottleneck']};"
+            f"t_compute={r['t_compute_s']:.4g};t_memory={r['t_memory_s']:.4g};"
+            f"t_collective={r['t_collective_s']:.4g};"
+            f"peak_GiB={rec['memory']['peak_bytes_per_chip']/2**30:.1f};"
+            f"useful_flops={r['useful_flops_ratio']:.3f}",
+        ))
+    return rows, {}
+
+
+SUITES = {}
+
+
+def _register():
+    from benchmarks import micro, paper_figs
+
+    SUITES.update({
+        "fig3": paper_figs.fig3_centralized_sinc,
+        "fig4": paper_figs.fig4_dcelm_sinc,
+        "fig7": paper_figs.fig7_mnist,
+        "gram": micro.bench_gram,
+        "ssd": micro.bench_ssd,
+        "attn": micro.bench_attention,
+        "online": micro.bench_online_vs_direct,
+        "comm": micro.bench_consensus_vs_incremental,
+        "topology": micro.bench_gossip_topologies,
+        "roofline": _roofline_table,
+    })
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--suite", default=None, help="comma-separated subset")
+    ap.add_argument("--fast", action="store_true")
+    args = ap.parse_args()
+    # The fidelity reproductions invert ill-conditioned Gram matrices
+    # (C up to 2^14); the paper's MATLAB runs were f64 — match it.
+    import jax
+
+    jax.config.update("jax_enable_x64", True)
+    _register()
+    names = args.suite.split(",") if args.suite else list(SUITES)
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in names:
+        fn = SUITES[name]
+        t0 = time.time()
+        try:
+            kw = {}
+            if args.fast and name == "fig3":
+                kw = {"trials": 3}
+            if args.fast and name == "fig7":
+                kw = {"iters": 300}
+            rows, _ = fn(**kw)
+            for r in rows:
+                print(f"{r[0]},{r[1]:.1f},{r[2]}")
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"{name},0.0,ERROR:{type(e).__name__}:{e}")
+        print(
+            f"# suite {name} finished in {time.time()-t0:.1f}s",
+            file=sys.stderr,
+        )
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

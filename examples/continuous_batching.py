@@ -1,0 +1,42 @@
+"""Continuous batching: requests of different lengths share decode slots.
+
+Three requests, two slots — slot 0 finishes early and is refilled
+mid-flight while slot 1 keeps decoding. Output is token-identical to
+generating each request alone (tests/test_serving.py proves it).
+
+Run:  PYTHONPATH=src python examples/continuous_batching.py
+"""
+
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get
+from repro.models import Model
+from repro.serving import ContinuousBatchingEngine, Request
+
+cfg = get("h2o-danube-1.8b").reduced()
+model = Model(cfg)
+params = model.init(jax.random.key(0))
+
+rng = np.random.default_rng(0)
+requests = [
+    Request(uid=0, prompt=rng.integers(0, cfg.vocab_size, 12), max_new=5),
+    Request(uid=1, prompt=rng.integers(0, cfg.vocab_size, 30), max_new=10),
+    Request(uid=2, prompt=rng.integers(0, cfg.vocab_size, 8), max_new=7),
+]
+
+engine = ContinuousBatchingEngine(model, params, slots=2, max_seq=96)
+for r in requests:
+    engine.submit(r)
+    print(f"submitted request {r.uid}: prompt={len(r.prompt)} tokens, "
+          f"max_new={r.max_new}")
+
+t0 = time.time()
+results = engine.run()
+dt = time.time() - t0
+total = sum(len(v) for v in results.values())
+print(f"\ndecoded {total} tokens across {len(results)} requests in {dt:.1f}s")
+for uid in sorted(results):
+    print(f"request {uid}: {results[uid]}")

@@ -1,0 +1,89 @@
+"""End-to-end driver: consensus-train a ~100M-param LM for a few hundred
+steps (the beyond-paper D-PSGD extension, DESIGN.md §3).
+
+Each consensus node holds its own replica + local token stream; after
+every optimizer step the replicas mix with graph neighbors using the
+paper's rule. On one CPU device this runs V=2 nodes of a ~100M model;
+on a pod the identical code runs V=16 nodes of the full architectures
+(launch/train.py --devices production).
+
+Run:  PYTHONPATH=src python examples/decentralized_lm_train.py [--steps 300]
+"""
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get
+from repro.core import consensus, dsgd
+from repro.data.lm import TokenStream
+from repro.models import Model
+from repro.optim import adamw, linear_warmup_cosine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    # CPU-demo defaults (~10 s/step on one core). On real hardware use
+    # e.g. --steps 300 --batch 8 --seq 1024, or launch/train.py with
+    # --devices production for the full assigned architectures.
+    ap.add_argument("--steps", type=int, default=40)
+    ap.add_argument("--nodes", type=int, default=2)
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--seq", type=int, default=128)
+    args = ap.parse_args()
+
+    # ~100M params: a scaled-down starcoder2 family member
+    cfg = dataclasses.replace(
+        get("starcoder2-3b"),
+        name="starcoder2-100m",
+        num_layers=6,
+        d_model=768,
+        num_heads=12,
+        num_kv_heads=2,
+        head_dim=64,
+        d_ff=2048,
+        vocab_size=16384,
+        dtype="float32",
+        remat=False,
+    )
+    model = Model(cfg)
+    print(f"{cfg.name}: {cfg.param_count():,} params, V={args.nodes} nodes")
+
+    V = args.nodes
+    graph = consensus.ring(V) if V > 2 else consensus.line(V)
+    opt = adamw(linear_warmup_cosine(3e-4, 20, args.steps))
+    step = dsgd.make_simulated_train_step(
+        lambda p, b: model.loss(p, b)[0], opt, graph
+    )
+    state = dsgd.init_simulated(jax.random.key(0), model.init, opt, V)
+
+    stream = TokenStream(cfg.vocab_size, seed=0)
+    rng = np.random.default_rng(0)
+
+    def batch():
+        t = stream.sample(rng, V * args.batch, args.seq)
+        t = t.reshape(V, args.batch, args.seq + 1)
+        return {
+            "tokens": jnp.asarray(t[..., :-1], jnp.int32),
+            "labels": jnp.asarray(t[..., 1:], jnp.int32),
+        }
+
+    t0 = time.time()
+    for i in range(args.steps):
+        state, losses = step(state, batch())
+        if i % 25 == 0 or i == args.steps - 1:
+            cd = float(dsgd.consensus_distance(state.params))
+            print(
+                f"step {i:4d} loss/node {np.asarray(losses).round(3)} "
+                f"consensus_dist {cd:.2e} ({time.time()-t0:.0f}s)"
+            )
+    print("done — replicas agree and the loss fell without any gradient "
+          "all-reduce (neighbor gossip only).")
+
+
+if __name__ == "__main__":
+    main()

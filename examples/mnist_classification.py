@@ -1,0 +1,43 @@
+"""Paper Test Case 2: distributed 3-vs-6 digit classification.
+
+25 sensor nodes on a random geometric graph each hold 400 local images;
+DC-ELM learns a global classifier without any node sharing raw pixels.
+
+Run:  PYTHONPATH=src python examples/mnist_classification.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import consensus, dc_elm, elm
+from repro.data.partition import partition_equal
+from repro.data.synthetic_mnist import make_mnist36_dataset
+
+V, L, C, gamma = 25, 25, 2.0**-2, 0.076  # paper Fig. 7(a) settings
+
+X, T, X_test, T_test = make_mnist36_dataset(seed=0)
+graph = consensus.random_geometric(V, radius=0.35, seed=1)
+print(f"network: V={V}, lambda2={graph.algebraic_connectivity:.4f}, "
+      f"d_max={graph.d_max:.0f}")
+
+Xn, Tn = partition_equal(X, T, V)  # (25, 400, 784)
+print(f"each node holds {Xn.shape[1]} images; none are ever transmitted")
+
+cent = elm.train_centralized(
+    jax.random.key(0), jnp.asarray(X), jnp.asarray(T), num_features=L, C=C
+)
+acc_c = float(elm.accuracy(cent(jnp.asarray(X_test)), jnp.asarray(T_test)))
+
+H = jax.vmap(cent.feature_map)(jnp.asarray(Xn))
+state, _, _ = dc_elm.simulate_init(H, jnp.asarray(Tn), C)
+trace = dc_elm.test_error_fn(cent.feature_map, jnp.asarray(X_test),
+                             jnp.asarray(T_test))
+final, errs = dc_elm.simulate_run(state, graph, gamma, C, 1500,
+                                  trace_fn=trace)
+errs = np.asarray(errs)
+for k in [0, 10, 100, 500, 1499]:
+    print(f"iter {k:5d}: average test error {errs[k]:.4f}")
+print(f"centralized accuracy: {acc_c:.4f} "
+      f"(paper reports 0.8989 on real MNIST for this setup)")
+print(f"DC-ELM accuracy:      {1 - errs[-1]:.4f}")

@@ -1,0 +1,51 @@
+"""Online DC-ELM (Algorithm 2): chunk-by-chunk streaming with expiry.
+
+Each node receives new samples and drops expired ones; the Woodbury
+updates keep per-chunk cost at O(L^2 dN) instead of O(L^3) re-solves.
+
+Run:  PYTHONPATH=src python examples/online_streaming.py
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import consensus, dc_elm, online
+from repro.core.features import make_random_features
+from repro.data.sinc import make_sinc_dataset
+
+V, L, C = 4, 100, 2.0**6
+graph = consensus.paper_fig2()
+key = jax.random.key(0)
+fmap = make_random_features(jax.random.key(1), 1, L)
+
+# initial data: a small warm-up set per node
+X, Y, X_test, Y_test = make_sinc_dataset(key, num_nodes=V, per_node=100)
+H0 = jax.vmap(fmap)(X)
+states = jax.vmap(lambda h, t: online.init_state(h, t, C, V))(H0, Y)
+
+stream_key = jax.random.key(7)
+H_test = fmap(X_test)
+
+for step in range(6):
+    # each node receives a fresh chunk of 50 samples...
+    stream_key, k1, k2 = jax.random.split(stream_key, 3)
+    Xn = jax.random.uniform(k1, (V, 50, 1), minval=-10, maxval=10)
+    Yn = jnp.sin(Xn) / jnp.where(Xn == 0, 1.0, Xn) + jax.random.uniform(
+        k2, (V, 50, 1), minval=-0.2, maxval=0.2
+    )
+    t0 = time.perf_counter()
+    states = online.batched_add_chunk(states, jax.vmap(fmap)(Xn), Yn)
+    # ...then re-seed the consensus iteration from the updated stats
+    betas = online.reseed_betas(states)
+    dc_state = dc_elm.DCELMState(
+        betas=betas, omegas=states.omega, k=jnp.zeros((), jnp.int32)
+    )
+    final, _ = dc_elm.simulate_run(dc_state, graph, 1 / 2.1, C, 200)
+    jax.block_until_ready(final.betas)
+    dt = time.perf_counter() - t0
+    preds = jnp.einsum("nl,vlm->vnm", H_test, final.betas)
+    mse = float(jnp.mean((preds - Y_test[None]) ** 2))
+    print(f"chunk {step}: +50 samples/node, update+consensus in "
+          f"{dt*1e3:.0f} ms, network test MSE {mse:.5f}")

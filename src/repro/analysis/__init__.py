@@ -1,0 +1,4 @@
+from repro.analysis.hlo import collective_bytes
+from repro.analysis.roofline import RooflineTerms, roofline_from_compiled
+
+__all__ = ["collective_bytes", "RooflineTerms", "roofline_from_compiled"]

@@ -1,0 +1,81 @@
+"""Checkpointing: pytree <-> .npz with key-path flattening.
+
+Deliberately dependency-free (no orbax here). Arrays are gathered to
+host; restore re-shards via the caller's shardings if provided.
+Layout: <dir>/step_<k>.npz with keys like 'params/layers/attn/wq'.
+"""
+
+from __future__ import annotations
+
+import os
+import re
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(_seg(p) for p in path)
+        arr = np.asarray(jax.device_get(leaf))
+        if arr.dtype.name == "bfloat16":  # npz can't store ml_dtypes
+            flat[key + "@bf16"] = arr.view(np.uint16)
+        else:
+            flat[key] = arr
+    return flat
+
+
+def _seg(p) -> str:
+    if isinstance(p, jax.tree_util.DictKey):
+        return str(p.key)
+    if isinstance(p, jax.tree_util.SequenceKey):
+        return str(p.idx)
+    if isinstance(p, jax.tree_util.GetAttrKey):
+        return p.name
+    return str(p)
+
+
+def save_pytree(directory: str, step: int, tree) -> str:
+    os.makedirs(directory, exist_ok=True)
+    path = os.path.join(directory, f"step_{step:08d}.npz")
+    tmp = path + ".tmp.npz"  # keep .npz suffix so np.savez doesn't append
+    np.savez(tmp, **_flatten(tree))
+    os.replace(tmp, path)
+    return path
+
+
+def load_pytree(path: str, like, shardings=None):
+    """Restore into the structure of `like` (names must match)."""
+    with np.load(path) as data:
+        flat = {k: data[k] for k in data.files}
+    paths, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for path_keys, leaf in paths:
+        key = "/".join(_seg(p) for p in path_keys)
+        if key + "@bf16" in flat:
+            import ml_dtypes
+
+            arr = flat[key + "@bf16"].view(ml_dtypes.bfloat16)
+        elif key in flat:
+            arr = flat[key]
+        else:
+            raise KeyError(f"checkpoint missing {key!r}")
+        if arr.shape != leaf.shape:
+            raise ValueError(f"{key}: shape {arr.shape} != {leaf.shape}")
+        leaves.append(arr.astype(leaf.dtype))
+    tree = jax.tree_util.tree_unflatten(treedef, leaves)
+    if shardings is not None:
+        tree = jax.device_put(tree, shardings)
+    return tree
+
+
+def latest_step(directory: str) -> int | None:
+    if not os.path.isdir(directory):
+        return None
+    steps = [
+        int(m.group(1))
+        for f in os.listdir(directory)
+        if (m := re.match(r"step_(\d+)\.npz$", f))
+    ]
+    return max(steps) if steps else None

@@ -1,0 +1,46 @@
+"""Config registry: ``get(name)`` / ``registry()`` / ``--arch`` ids."""
+
+from __future__ import annotations
+
+from repro.configs.base import INPUT_SHAPES, ArchConfig, InputShape
+from repro.configs.grok_1_314b import CONFIG as grok_1_314b
+from repro.configs.qwen2_72b import CONFIG as qwen2_72b
+from repro.configs.starcoder2_3b import CONFIG as starcoder2_3b
+from repro.configs.internvl2_2b import CONFIG as internvl2_2b
+from repro.configs.mamba2_780m import CONFIG as mamba2_780m
+from repro.configs.h2o_danube_1_8b import CONFIG as h2o_danube_1_8b
+from repro.configs.dbrx_132b import CONFIG as dbrx_132b
+from repro.configs.musicgen_large import CONFIG as musicgen_large
+from repro.configs.gemma2_2b import CONFIG as gemma2_2b
+from repro.configs.zamba2_1_2b import CONFIG as zamba2_1_2b
+
+_REGISTRY: dict[str, ArchConfig] = {
+    c.name: c
+    for c in [
+        grok_1_314b,
+        qwen2_72b,
+        starcoder2_3b,
+        internvl2_2b,
+        mamba2_780m,
+        h2o_danube_1_8b,
+        dbrx_132b,
+        musicgen_large,
+        gemma2_2b,
+        zamba2_1_2b,
+    ]
+}
+
+
+def registry() -> dict[str, ArchConfig]:
+    return dict(_REGISTRY)
+
+
+def get(name: str) -> ArchConfig:
+    if name not in _REGISTRY:
+        raise KeyError(
+            f"unknown arch {name!r}; available: {sorted(_REGISTRY)}"
+        )
+    return _REGISTRY[name]
+
+
+__all__ = ["ArchConfig", "InputShape", "INPUT_SHAPES", "get", "registry"]

@@ -1,0 +1,202 @@
+"""Architecture configuration system.
+
+One ``ArchConfig`` per assigned architecture (see sibling modules, each
+citing its source), plus the paper's own ELM configs (sinc.py,
+mnist.py). ``reduced()`` derives the CPU smoke-test variant (<=2 layers,
+d_model<=512, <=4 experts) of the same family.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+Family = Literal["dense", "moe", "ssm", "hybrid", "vlm", "audio"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: Family
+    num_layers: int
+    d_model: int
+    num_heads: int  # 0 => attention-free (pure SSM)
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 128
+
+    # --- attention variants ---
+    attn_bias: bool = False  # qwen2: bias on QKV projections
+    sliding_window: int | None = None  # SWA width (h2o-danube, gemma2 local)
+    local_global_period: int = 0  # gemma2: every p-th layer is global, rest local
+    attn_logit_softcap: float = 0.0  # gemma2: softcap on attention logits
+    final_logit_softcap: float = 0.0  # gemma2: softcap on LM logits
+    post_block_norms: bool = False  # gemma2: post-attn / post-ffn norms
+    rope_theta: float = 10_000.0
+    mlp_activation: str = "silu"  # "silu" (SwiGLU) | "gelu" (GeGLU)
+
+    # --- MoE ---
+    num_experts: int = 0
+    experts_per_token: int = 0
+    router_aux_coef: float = 0.01  # load-balance loss coefficient
+    capacity_factor: float = 1.25
+
+    # --- SSM (Mamba2 / SSD) ---
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_conv_width: int = 4
+    ssm_chunk: int = 256  # SSD chunk length
+
+    # --- hybrid (zamba2): shared attention block every k SSM layers ---
+    hybrid_attn_every: int = 0
+
+    # --- modality frontend (the one permitted stub) ---
+    frontend: Literal["none", "vision", "audio"] = "none"
+    frontend_tokens: int = 256  # patch/frame embeddings prepended per sample
+
+    # --- misc ---
+    tie_embeddings: bool = True
+    norm_eps: float = 1e-6
+    dtype: str = "bfloat16"
+    remat: bool = True
+
+    # --- distribution defaults (see DESIGN.md §5) ---
+    consensus_axis: Literal["data", "pod"] = "data"  # "pod" for >=70B archs
+    gossip_kind: str = "ring"
+    # Activation sharding over the "model" axis between blocks (§Perf):
+    # "batch" = batch-parallel attention/MLP (fixes replicated-attention
+    # archs whose head counts don't divide the TP axis); "seq" =
+    # sequence parallelism (turns residual all-reduce into RS+AG and
+    # shards activation memory). "none" = paper-faithful baseline.
+    act_shard: Literal["none", "batch", "seq"] = "none"
+
+    # citation for the numbers above
+    source: str = ""
+
+    def __post_init__(self):
+        if self.family in ("ssm",) and self.num_heads:
+            raise ValueError("pure SSM configs are attention-free")
+        if self.family in ("moe",) and not self.num_experts:
+            raise ValueError("moe family needs num_experts")
+        if self.num_heads and self.num_kv_heads:
+            if self.num_heads % self.num_kv_heads:
+                raise ValueError("num_heads must be divisible by num_kv_heads")
+
+    # ---- derived quantities -------------------------------------------
+    @property
+    def d_inner(self) -> int:
+        """SSM inner width."""
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+    @property
+    def attention_free(self) -> bool:
+        return self.num_heads == 0
+
+    @property
+    def uses_subquadratic_decode(self) -> bool:
+        """Eligible for long_500k (see DESIGN.md §6)."""
+        return (
+            self.family in ("ssm", "hybrid")
+            or self.sliding_window is not None
+            or self.local_global_period > 0
+        )
+
+    def param_count(self) -> int:
+        """Exact parameter count (embeddings included once if tied)."""
+        d, f, V = self.d_model, self.d_ff, self.vocab_size
+        n = V * d  # embedding
+        if not self.tie_embeddings:
+            n += V * d
+        per_layer = 0
+        if self.family in ("dense", "moe", "vlm", "audio"):
+            H, K, hd = self.num_heads, self.num_kv_heads, self.head_dim
+            attn = d * H * hd + 2 * d * K * hd + H * hd * d
+            if self.attn_bias:
+                attn += (H + 2 * K) * hd
+            if self.family == "moe":
+                mlp = self.num_experts * 3 * d * f + d * self.num_experts
+            else:
+                mlp = 3 * d * f
+            per_layer = attn + mlp + 2 * d
+            if self.post_block_norms:
+                per_layer += 2 * d
+            n += self.num_layers * per_layer
+        elif self.family in ("ssm", "hybrid"):
+            di, ds, nh = self.d_inner, self.ssm_state, self.ssm_heads
+            g = 1  # single SSM group
+            in_proj = d * (2 * di + 2 * g * ds + nh)
+            conv = (di + 2 * g * ds) * self.ssm_conv_width
+            ssm_layer = in_proj + conv + 3 * nh + di + di * d + d
+            n += self.num_layers * ssm_layer
+            if self.family == "hybrid" and self.hybrid_attn_every:
+                H, K, hd = self.num_heads, self.num_kv_heads, self.head_dim
+                attn = d * H * hd + 2 * d * K * hd + H * hd * d
+                n += attn + 3 * d * f + 2 * d  # one shared block
+        return n
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: top-k experts only)."""
+        if self.family != "moe":
+            return self.param_count()
+        d, f = self.d_model, self.d_ff
+        dense_like = self.param_count() - self.num_layers * (
+            self.num_experts * 3 * d * f
+        )
+        return dense_like + self.num_layers * self.experts_per_token * 3 * d * f
+
+    # ---- smoke-test reduction ------------------------------------------
+    def reduced(self) -> "ArchConfig":
+        """Same family, toy size: <=2 layers, d_model<=256, <=4 experts."""
+        H = min(self.num_heads, 4) if self.num_heads else 0
+        K = 0
+        if H:
+            ratio = max(1, self.num_heads // max(self.num_kv_heads, 1))
+            K = max(1, H // min(ratio, H))
+        return dataclasses.replace(
+            self,
+            name=self.name + "-reduced",
+            num_layers=2,
+            d_model=128,
+            num_heads=H,
+            num_kv_heads=K,
+            head_dim=32,
+            d_ff=256,
+            vocab_size=min(self.vocab_size, 512),
+            num_experts=min(self.num_experts, 4) if self.num_experts else 0,
+            experts_per_token=(
+                min(self.experts_per_token, 2) if self.experts_per_token else 0
+            ),
+            capacity_factor=4.0,  # avoid stochastic drops in smoke tests
+            ssm_state=min(self.ssm_state, 16) if self.ssm_state else 0,
+            ssm_head_dim=32 if self.ssm_state else self.ssm_head_dim,
+            ssm_chunk=32,
+            sliding_window=64 if self.sliding_window else None,
+            hybrid_attn_every=(2 if self.hybrid_attn_every else 0),
+            frontend_tokens=8 if self.frontend != "none" else self.frontend_tokens,
+            dtype="float32",
+            remat=False,
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    """One of the four assigned global input shapes."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: Literal["train", "prefill", "decode"]
+
+
+INPUT_SHAPES: dict[str, InputShape] = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}

@@ -1,0 +1,21 @@
+"""dbrx-132b [hf:databricks/dbrx-base] — 40L fine-grained MoE 16e top-4."""
+
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="dbrx-132b",
+    family="moe",
+    num_layers=40,
+    d_model=6144,
+    num_heads=48,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=10752,
+    vocab_size=100352,
+    num_experts=16,
+    experts_per_token=4,
+    rope_theta=500_000.0,
+    tie_embeddings=False,
+    consensus_axis="pod",  # 132B total params
+    source="hf:databricks/dbrx-base",
+)

@@ -1,0 +1,23 @@
+"""gemma2-2b [arXiv:2408.00118] — local/global alternating, logit softcap."""
+
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="gemma2-2b",
+    family="dense",
+    num_layers=26,
+    d_model=2304,
+    num_heads=8,
+    num_kv_heads=4,
+    head_dim=256,
+    d_ff=9216,
+    vocab_size=256000,
+    sliding_window=4096,
+    local_global_period=2,  # even layers local (SWA), odd layers global
+    attn_logit_softcap=50.0,
+    final_logit_softcap=30.0,
+    post_block_norms=True,
+    mlp_activation="gelu",
+    tie_embeddings=True,
+    source="arXiv:2408.00118",
+)

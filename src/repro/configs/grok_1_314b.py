@@ -1,0 +1,22 @@
+"""grok-1-314b [hf:xai-org/grok-1] — 64L MoE 8e top-2, GQA kv=8."""
+
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="grok-1-314b",
+    family="moe",
+    num_layers=64,
+    d_model=6144,
+    num_heads=48,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=32768,
+    vocab_size=131072,
+    num_experts=8,
+    experts_per_token=2,
+    tie_embeddings=False,
+    # 314B params: per-node replica cannot fit a 16-chip TP slice of a
+    # single pod -> consensus over the pod axis, FSDP inside (DESIGN §5).
+    consensus_axis="pod",
+    source="hf:xai-org/grok-1",
+)

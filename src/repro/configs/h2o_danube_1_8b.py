@@ -1,0 +1,18 @@
+"""h2o-danube-1.8b [arXiv:2401.16818] — llama+mistral mix, sliding window."""
+
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="h2o-danube-1.8b",
+    family="dense",
+    num_layers=24,
+    d_model=2560,
+    num_heads=32,
+    num_kv_heads=8,
+    head_dim=80,
+    d_ff=6912,
+    vocab_size=32000,
+    sliding_window=4096,
+    tie_embeddings=False,
+    source="arXiv:2401.16818",
+)

@@ -1,0 +1,25 @@
+"""internvl2-2b [arXiv:2404.16821] — InternViT + InternLM2 VLM.
+
+We implement the InternLM2-1.8B language trunk (24L, GQA kv=8); the
+InternViT vision encoder + MLP projector is the permitted stub —
+``input_specs()`` supplies precomputed patch embeddings (256 tokens of
+d_model) that are prepended to the text sequence.
+"""
+
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="internvl2-2b",
+    family="vlm",
+    num_layers=24,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=8192,
+    vocab_size=92553,
+    frontend="vision",
+    frontend_tokens=256,
+    tie_embeddings=False,
+    source="arXiv:2404.16821",
+)

@@ -1,0 +1,20 @@
+"""qwen2-72b [arXiv:2407.10671] — 80L dense, GQA kv=8, QKV bias."""
+
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen2-72b",
+    family="dense",
+    num_layers=80,
+    d_model=8192,
+    num_heads=64,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=29568,
+    vocab_size=152064,
+    attn_bias=True,
+    rope_theta=1_000_000.0,
+    tie_embeddings=False,
+    consensus_axis="pod",  # 72B: FSDP inside a pod, consensus across pods
+    source="arXiv:2407.10671",
+)

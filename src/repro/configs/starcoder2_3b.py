@@ -1,0 +1,19 @@
+"""starcoder2-3b [arXiv:2402.19173] — 30L dense, GQA kv=2, RoPE."""
+
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="starcoder2-3b",
+    family="dense",
+    num_layers=30,
+    d_model=3072,
+    num_heads=24,
+    num_kv_heads=2,
+    head_dim=128,
+    d_ff=12288,
+    vocab_size=49152,
+    mlp_activation="gelu",
+    rope_theta=100_000.0,
+    tie_embeddings=True,
+    source="arXiv:2402.19173",
+)

@@ -1,0 +1,21 @@
+"""zamba2-1.2b [arXiv:2411.15242] — Mamba2 backbone + shared attention block."""
+
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="zamba2-1.2b",
+    family="hybrid",
+    num_layers=38,
+    d_model=2048,
+    num_heads=32,
+    num_kv_heads=32,  # shared block uses MHA
+    head_dim=64,
+    d_ff=8192,
+    vocab_size=32000,
+    ssm_state=64,
+    ssm_expand=2,
+    ssm_head_dim=64,
+    hybrid_attn_every=6,  # shared attn+MLP block applied every 6 SSM layers
+    tie_embeddings=True,
+    source="arXiv:2411.15242",
+)

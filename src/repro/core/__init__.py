@@ -1,0 +1,25 @@
+"""Core: the paper's contribution (DC-ELM and friends) in JAX.
+
+Modules:
+  features    random ELM feature maps h(x)
+  elm         centralized ELM (paper Sec. II-A)
+  consensus   communication graphs, Laplacians, rates (Sec. III-A)
+  dc_elm      DC-ELM Algorithm 1 (simulated + ppermute-sharded)
+  online      Online DC-ELM Algorithm 2 (Woodbury updates)
+  gossip      ppermute neighbor-exchange primitives
+  dsgd        beyond-paper decentralized deep training (paper rule on pytrees)
+  incremental Hamiltonian-cycle baseline (Sec. II-B1)
+  fusion_elm  fusion-center / MapReduce baseline (refs [17][18])
+"""
+
+from repro.core import (  # noqa: F401
+    consensus,
+    dc_elm,
+    dsgd,
+    elm,
+    features,
+    fusion_elm,
+    gossip,
+    incremental,
+    online,
+)

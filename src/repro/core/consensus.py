@@ -1,0 +1,259 @@
+"""Communication graphs and consensus machinery (paper Sec. III-A).
+
+The network is an undirected, connected, static V-node graph G(V, E)
+with adjacency A (a_ii = 0, a_ij > 0 iff (i,j) in E), degree matrix
+D = diag(d_i), Laplacian Lap = D - A. Connectivity <=> lambda_2(Lap) > 0
+(algebraic connectivity). The DC-ELM step size must satisfy
+0 < gamma < 1/d_max (paper Thm. 2).
+
+Two families of graphs:
+  * "simulation" graphs — anything, incl. the paper's random geometric
+    graphs (Fig. 6); used by the vmap-simulated DC-ELM and fidelity
+    benchmarks.
+  * "ICI-realizable" graphs — ring / 2-D torus / hypercube / complete —
+    whose edge sets decompose into a handful of device permutations, so
+    the sharded path lowers to jax.lax.ppermute schedules (see
+    core/gossip.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Graph:
+    """An undirected weighted communication graph."""
+
+    adjacency: np.ndarray  # (V, V), symmetric, zero diagonal
+    name: str = "graph"
+
+    def __post_init__(self):
+        a = self.adjacency
+        if a.ndim != 2 or a.shape[0] != a.shape[1]:
+            raise ValueError("adjacency must be square")
+        if not np.allclose(a, a.T):
+            raise ValueError("graph must be undirected (A symmetric)")
+        if np.any(np.diag(a) != 0):
+            raise ValueError("a_ii must be 0")
+        if np.any(a < 0):
+            raise ValueError("edge weights must be nonnegative")
+
+    @property
+    def num_nodes(self) -> int:
+        return self.adjacency.shape[0]
+
+    @property
+    def degrees(self) -> np.ndarray:
+        return self.adjacency.sum(axis=1)
+
+    @property
+    def d_max(self) -> float:
+        return float(self.degrees.max())
+
+    @property
+    def laplacian(self) -> np.ndarray:
+        return np.diag(self.degrees) - self.adjacency
+
+    @property
+    def algebraic_connectivity(self) -> float:
+        """lambda_2 of the Laplacian; > 0 iff connected."""
+        eig = np.linalg.eigvalsh(self.laplacian)
+        return float(eig[1])
+
+    @property
+    def is_connected(self) -> bool:
+        return self.algebraic_connectivity > 1e-9
+
+    def neighbors(self, i: int) -> np.ndarray:
+        return np.nonzero(self.adjacency[i])[0]
+
+    def gamma_upper_bound(self) -> float:
+        """Paper Thm. 2: 0 < gamma < 1/d_max."""
+        return 1.0 / self.d_max
+
+    def default_gamma(self, safety: float = 0.9) -> float:
+        return safety * self.gamma_upper_bound()
+
+    def metropolis_weights(self) -> np.ndarray:
+        """Doubly-stochastic Metropolis–Hastings mixing weights.
+
+        Not used by the paper's algorithm (which mixes with the raw
+        Laplacian), but used by the beyond-paper D-PSGD trainer where a
+        doubly-stochastic W gives the standard decentralized-SGD
+        guarantees.
+        """
+        a = (self.adjacency > 0).astype(np.float64)
+        deg = a.sum(1)
+        W = np.zeros_like(a)
+        V = self.num_nodes
+        for i in range(V):
+            for j in range(V):
+                if i != j and a[i, j] > 0:
+                    W[i, j] = 1.0 / (1.0 + max(deg[i], deg[j]))
+        for i in range(V):
+            W[i, i] = 1.0 - W[i].sum()
+        return W
+
+
+# ---------------------------------------------------------------------------
+# Graph constructors
+# ---------------------------------------------------------------------------
+
+
+def line(V: int) -> Graph:
+    a = np.zeros((V, V))
+    for i in range(V - 1):
+        a[i, i + 1] = a[i + 1, i] = 1.0
+    return Graph(a, name=f"line{V}")
+
+
+def ring(V: int) -> Graph:
+    if V < 3:
+        return line(V)
+    a = np.zeros((V, V))
+    for i in range(V):
+        j = (i + 1) % V
+        a[i, j] = a[j, i] = 1.0
+    return Graph(a, name=f"ring{V}")
+
+
+def complete(V: int) -> Graph:
+    a = np.ones((V, V)) - np.eye(V)
+    return Graph(a, name=f"complete{V}")
+
+
+def star(V: int) -> Graph:
+    """Fusion-center-like topology (for contrast experiments)."""
+    a = np.zeros((V, V))
+    a[0, 1:] = a[1:, 0] = 1.0
+    return Graph(a, name=f"star{V}")
+
+
+def torus2d(rows: int, cols: int) -> Graph:
+    """2-D torus — matches TPU ICI physical topology."""
+    V = rows * cols
+    a = np.zeros((V, V))
+
+    def idx(r, c):
+        return (r % rows) * cols + (c % cols)
+
+    for r in range(rows):
+        for c in range(cols):
+            i = idx(r, c)
+            for j in (idx(r + 1, c), idx(r, c + 1)):
+                if i != j:
+                    a[i, j] = a[j, i] = 1.0
+    return Graph(a, name=f"torus{rows}x{cols}")
+
+
+def hypercube(dim: int) -> Graph:
+    """2^dim-node hypercube: log-diameter, great algebraic connectivity."""
+    V = 1 << dim
+    a = np.zeros((V, V))
+    for i in range(V):
+        for b in range(dim):
+            j = i ^ (1 << b)
+            a[i, j] = a[j, i] = 1.0
+    return Graph(a, name=f"hypercube{dim}")
+
+
+def paper_fig2() -> Graph:
+    """The paper's Fig. 2 network: V=4, d_max=2 (a 4-cycle)."""
+    return Graph(ring(4).adjacency, name="paper_fig2")
+
+
+def alternating_halves(V: int) -> list[Graph]:
+    """A jointly-connected time-varying sequence whose snapshots are each
+    DISCONNECTED: round 0 links even pairs (0-1)(2-3)..., round 1 links
+    odd pairs (1-2)(3-4)... plus the wrap edge. The union is the V-ring.
+    Exercises the paper's Sec. V time-varying-topology future work."""
+    a0 = np.zeros((V, V))
+    a1 = np.zeros((V, V))
+    for i in range(0, V - 1, 2):
+        a0[i, i + 1] = a0[i + 1, i] = 1.0
+    for i in range(1, V - 1, 2):
+        a1[i, i + 1] = a1[i + 1, i] = 1.0
+    if V % 2 == 0 and V > 2:
+        a1[0, V - 1] = a1[V - 1, 0] = 1.0
+    return [Graph(a0, name=f"even_pairs{V}"), Graph(a1, name=f"odd_pairs{V}")]
+
+
+def random_geometric(
+    V: int, radius: float, seed: int = 0, max_tries: int = 200
+) -> Graph:
+    """Random geometric graph on the unit square (paper Fig. 6 style).
+
+    Nodes connect iff closer than `radius`. Resamples until connected.
+    """
+    rng = np.random.default_rng(seed)
+    for _ in range(max_tries):
+        pts = rng.uniform(size=(V, 2))
+        d = np.linalg.norm(pts[:, None, :] - pts[None, :, :], axis=-1)
+        a = ((d < radius) & ~np.eye(V, dtype=bool)).astype(np.float64)
+        g = Graph(a, name=f"rgg{V}")
+        if g.is_connected:
+            return g
+    raise RuntimeError(f"no connected RGG after {max_tries} tries; grow radius")
+
+
+_BUILDERS = {
+    "line": line,
+    "ring": ring,
+    "complete": complete,
+    "star": star,
+    "hypercube": hypercube,
+}
+
+
+def build(kind: str, V: int) -> Graph:
+    """Build a named topology with V nodes (used by config files)."""
+    if kind == "hypercube":
+        dim = int(np.log2(V))
+        if 1 << dim != V:
+            raise ValueError(f"hypercube needs power-of-two V, got {V}")
+        return hypercube(dim)
+    if kind == "torus":
+        r = int(np.sqrt(V))
+        while V % r:
+            r -= 1
+        return torus2d(r, V // r)
+    if kind in _BUILDERS:
+        return _BUILDERS[kind](V)
+    raise ValueError(f"unknown graph kind {kind!r}")
+
+
+# ---------------------------------------------------------------------------
+# Convergence-rate analysis (paper Appendix C)
+# ---------------------------------------------------------------------------
+
+
+def dc_elm_iteration_matrix(
+    graph: Graph, omegas: np.ndarray, gamma: float, VC: float
+) -> np.ndarray:
+    """W = I_{LV} - (gamma/VC) * Omega * (Lap kron I_L)  (paper eq. 48).
+
+    omegas: (V, L, L) per-node Omega_i matrices.
+    Only for analysis/tests (dense LV x LV).
+    """
+    V = graph.num_nodes
+    L = omegas.shape[-1]
+    lap = graph.laplacian
+    big = np.kron(lap, np.eye(L))
+    omega_blk = np.zeros((V * L, V * L))
+    for i in range(V):
+        omega_blk[i * L : (i + 1) * L, i * L : (i + 1) * L] = omegas[i]
+    return np.eye(V * L) - (gamma / VC) * omega_blk @ big
+
+
+def essential_spectral_radius(W: np.ndarray, L: int) -> float:
+    """Second-largest eigenvalue modulus — the exponential consensus rate.
+
+    For the DC-ELM iteration matrix the eigenvalue 1 has multiplicity L
+    (one per output-weight coordinate); the rate is the largest of the
+    remaining moduli.
+    """
+    ev = np.sort(np.abs(np.linalg.eigvals(W)))[::-1]
+    return float(ev[L])

@@ -1,0 +1,383 @@
+"""DC-ELM — the paper's Algorithm 1, batch form.
+
+Per-node state and iteration (paper eqs. 20-21):
+
+    P_i = H_i^T H_i,  Q_i = H_i^T T_i
+    Omega_i = (I_L / (V C) + P_i)^{-1}
+    beta_i(0) = Omega_i Q_i                                   (local ridge)
+    beta_i(k+1) = beta_i(k)
+        + (gamma / (V C)) * Omega_i * sum_{j in N_i} a_ij (beta_j - beta_i)
+
+with 0 < gamma < 1/d_max. Theorem 2: on a connected graph, beta_i(k) ->
+beta* (the centralized solution) for every node.
+
+Two execution paths, both jitted:
+
+* ``simulate_*`` — all V nodes live on one device as a leading axis;
+  mixing uses the dense adjacency. Ground-truth path used by the
+  fidelity experiments (SinC / MNIST reproductions) and by tests —
+  supports arbitrary graphs (incl. the paper's random geometric ones).
+
+* ``sharded_*`` — node i is the shard at mesh position i along the
+  consensus axes; mixing is neighbor-only ``lax.ppermute`` gossip
+  (core/gossip.py) under ``shard_map``. This is the production path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.core import gossip
+from repro.core.consensus import Graph
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class DCELMState:
+    """Stacked per-node DC-ELM state.
+
+    betas:  (V, L, M)  node estimates beta_i(k)
+    omegas: (V, L, L)  frozen preconditioners Omega_i
+    k:      iteration counter
+    """
+
+    betas: jax.Array
+    omegas: jax.Array
+    k: jax.Array
+
+    @property
+    def num_nodes(self) -> int:
+        return self.betas.shape[0]
+
+
+# ---------------------------------------------------------------------------
+# Local statistics (identical for both paths)
+# ---------------------------------------------------------------------------
+
+
+def local_stats(H: jax.Array, T: jax.Array, *, gram_fn=None):
+    """P = H^T H and Q = H^T T for one node's local data.
+
+    gram_fn: optional kernel override for the Gram product (the Pallas
+    kernel in kernels/gram is dropped in here by the launch layer).
+    """
+    P_ = gram_fn(H) if gram_fn is not None else H.T @ H
+    Q_ = H.T @ T
+    return P_, Q_
+
+
+def init_node(P_: jax.Array, Q_: jax.Array, C: float, V: int):
+    """Omega_i and beta_i(0) from local stats (paper eq. 21)."""
+    L = P_.shape[0]
+    omega = jnp.linalg.inv(jnp.eye(L, dtype=P_.dtype) / (V * C) + P_)
+    beta0 = omega @ Q_
+    return omega, beta0
+
+
+def node_objective(beta: jax.Array, P_: jax.Array, Q_: jax.Array,
+                   T_sq: jax.Array, C: float, V: int) -> jax.Array:
+    """u_i(beta) = 1/2 ||beta||^2 + VC/2 ||H_i beta - T_i||^2 (paper eq. 18).
+
+    Uses the expanded quadratic so only the O(L^2) stats are needed:
+    ||H beta - T||^2 = tr(beta^T P beta) - 2 tr(beta^T Q) + ||T||^2.
+    """
+    quad = jnp.sum(beta * (P_ @ beta)) - 2.0 * jnp.sum(beta * Q_) + T_sq
+    return 0.5 * jnp.sum(beta * beta) + 0.5 * V * C * quad
+
+
+def gradient_sum(state: DCELMState, P_: jax.Array, Q_: jax.Array, C: float):
+    """sum_i grad u_i(beta_i) — zero along the invariant manifold (eq. 12).
+
+    grad u_i(beta) = beta + VC (P_i beta - Q_i).
+    """
+    V = state.num_nodes
+    g = state.betas + V * C * (
+        jnp.einsum("vlk,vkm->vlm", P_, state.betas) - Q_
+    )
+    return jnp.sum(g, axis=0)
+
+
+# ---------------------------------------------------------------------------
+# Simulated (single-device, arbitrary graph) path
+# ---------------------------------------------------------------------------
+
+
+def simulate_init(
+    H_nodes: jax.Array, T_nodes: jax.Array, C: float, *, gram_fn=None
+) -> tuple[DCELMState, jax.Array, jax.Array]:
+    """Initialize from stacked per-node data H:(V,Ni,L), T:(V,Ni,M).
+
+    Returns (state, P:(V,L,L), Q:(V,L,M)).
+    """
+    V = H_nodes.shape[0]
+    P_, Q_ = jax.vmap(lambda h, t: local_stats(h, t, gram_fn=gram_fn))(
+        H_nodes, T_nodes
+    )
+    omegas, betas = jax.vmap(lambda p, q: init_node(p, q, C, V))(P_, Q_)
+    return DCELMState(betas=betas, omegas=omegas, k=jnp.zeros((), jnp.int32)), P_, Q_
+
+
+def simulate_init_from_stats(P_: jax.Array, Q_: jax.Array, C: float) -> DCELMState:
+    V = P_.shape[0]
+    omegas, betas = jax.vmap(lambda p, q: init_node(p, q, C, V))(P_, Q_)
+    return DCELMState(betas=betas, omegas=omegas, k=jnp.zeros((), jnp.int32))
+
+
+@functools.partial(jax.jit, static_argnames=("C",))
+def simulate_step(
+    state: DCELMState, adjacency: jax.Array, gamma: jax.Array, C: float
+) -> DCELMState:
+    """One synchronous DC-ELM round on a dense adjacency (paper eq. 20)."""
+    V = state.num_nodes
+    betas = state.betas  # (V, L, M)
+    # sum_j a_ij (beta_j - beta_i)  ==  A @ betas - deg * betas
+    mixed = jnp.einsum("ij,jlm->ilm", adjacency, betas)
+    deg = jnp.sum(adjacency, axis=1)
+    lap_term = mixed - deg[:, None, None] * betas
+    update = jnp.einsum("vlk,vkm->vlm", state.omegas, lap_term)
+    new_betas = betas + (gamma / (V * C)) * update
+    return dataclasses.replace(state, betas=new_betas, k=state.k + 1)
+
+
+def simulate_run(
+    state: DCELMState,
+    graph: Graph,
+    gamma: float,
+    C: float,
+    num_iters: int,
+    *,
+    trace_fn: Callable[[jax.Array], jax.Array] | None = None,
+):
+    """Run num_iters rounds with lax.scan.
+
+    trace_fn: optional per-iteration metric over stacked betas (e.g. the
+    paper's average empirical risk R_d(k), eq. 32). Returns
+    (final_state, traces or None).
+    """
+    adj = jnp.asarray(graph.adjacency, dtype=state.betas.dtype)
+    gamma = jnp.asarray(gamma, dtype=state.betas.dtype)
+
+    def body(s, _):
+        s = simulate_step(s, adj, gamma, C)
+        out = trace_fn(s.betas) if trace_fn is not None else jnp.zeros(())
+        return s, out
+
+    final, traces = lax.scan(body, state, None, length=num_iters)
+    return final, (traces if trace_fn is not None else None)
+
+
+def simulate_train(
+    key: jax.Array,
+    X_nodes: jax.Array,
+    T_nodes: jax.Array,
+    *,
+    num_features: int,
+    C: float,
+    graph: Graph,
+    gamma: float | None = None,
+    num_iters: int = 100,
+    activation: str = "sigmoid",
+    trace_fn: Callable | None = None,
+):
+    """End-to-end DC-ELM (Algorithm 1) on stacked node data X:(V,Ni,D)."""
+    from repro.core.features import make_random_features
+
+    if T_nodes.ndim == 2:
+        T_nodes = T_nodes[..., None]
+    fmap = make_random_features(key, X_nodes.shape[-1], num_features, activation)
+    H_nodes = jax.vmap(fmap)(X_nodes)
+    state, _, _ = simulate_init(H_nodes, T_nodes, C)
+    if gamma is None:
+        gamma = graph.default_gamma()
+    final, traces = simulate_run(
+        state, graph, gamma, C, num_iters, trace_fn=trace_fn
+    )
+    return fmap, final, traces
+
+
+def simulate_run_time_varying(
+    state: DCELMState,
+    graphs: list[Graph],
+    gamma: float,
+    C: float,
+    num_iters: int,
+    *,
+    trace_fn: Callable[[jax.Array], jax.Array] | None = None,
+):
+    """DC-ELM over a time-varying topology (paper Sec. V future work).
+
+    Round k uses graphs[k % len(graphs)]. The zero-gradient-sum
+    invariant holds for every symmetric graph in the sequence, and
+    consensus requires only *joint* connectivity (the union graph is
+    connected) — each individual snapshot may be disconnected. gamma
+    must satisfy the bound for the max degree across snapshots.
+    """
+    adjs = jnp.stack(
+        [jnp.asarray(g.adjacency, dtype=state.betas.dtype) for g in graphs]
+    )
+    gamma = jnp.asarray(gamma, dtype=state.betas.dtype)
+    n = len(graphs)
+
+    def body(s, k):
+        adj = adjs[k % n]
+        s = simulate_step(s, adj, gamma, C)
+        out = trace_fn(s.betas) if trace_fn is not None else jnp.zeros(())
+        return s, out
+
+    final, traces = lax.scan(body, state, jnp.arange(num_iters))
+    return final, (traces if trace_fn is not None else None)
+
+
+def joint_gamma_bound(graphs: list[Graph]) -> float:
+    """1 / max_k d_max(G_k) — the safe step size across all snapshots."""
+    return 1.0 / max(g.d_max for g in graphs)
+
+
+# ---------------------------------------------------------------------------
+# Sharded (multi-device, ppermute gossip) path
+# ---------------------------------------------------------------------------
+
+
+def _node_spec(spec: gossip.GossipSpec) -> P:
+    """PartitionSpec placing the leading node axis on the consensus axes."""
+    return P(spec.axes if len(spec.axes) > 1 else spec.axes[0])
+
+
+def sharded_step_fn(
+    mesh: jax.sharding.Mesh,
+    spec: gossip.GossipSpec,
+    C: float,
+):
+    """Build the jitted sharded DC-ELM round.
+
+    State arrays carry a leading node axis of size V = prod(consensus
+    axes) sharded across those axes; inside shard_map each shard sees its
+    own (1, L, M) slice and exchanges only with mesh neighbors.
+    """
+    sizes = gossip.mesh_axis_sizes(mesh)
+    gossip.validate_spec(spec, mesh)
+    V = spec.num_nodes(sizes)
+    nspec = _node_spec(spec)
+
+    def body(betas, omegas, gamma):
+        # betas: (1, L, M) local shard
+        lap = gossip.neighbor_laplacian(betas, spec, sizes)
+        upd = jnp.einsum("vlk,vkm->vlm", omegas, lap)
+        return betas + (gamma / (V * C)) * upd
+
+    shard = jax.shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(nspec, nspec, P()),
+        out_specs=nspec,
+    )
+    return jax.jit(shard)
+
+
+def sharded_run(
+    mesh: jax.sharding.Mesh,
+    spec: gossip.GossipSpec,
+    betas: jax.Array,
+    omegas: jax.Array,
+    gamma: float,
+    C: float,
+    num_iters: int,
+):
+    """num_iters gossip rounds under jit+scan on the mesh."""
+    sizes = gossip.mesh_axis_sizes(mesh)
+    V = spec.num_nodes(sizes)
+    nspec = _node_spec(spec)
+
+    def body(carry, _):
+        b = carry
+
+        def inner(b_, o_):
+            lap = gossip.neighbor_laplacian(b_, spec, sizes)
+            upd = jnp.einsum("vlk,vkm->vlm", o_, lap)
+            return b_ + (gamma / (V * C)) * upd
+
+        b = jax.shard_map(
+            inner, mesh=mesh, in_specs=(nspec, nspec), out_specs=nspec
+        )(b, omegas)
+        return b, None
+
+    @functools.partial(
+        jax.jit,
+        in_shardings=(
+            jax.sharding.NamedSharding(mesh, nspec),
+            jax.sharding.NamedSharding(mesh, nspec),
+        ),
+        out_shardings=jax.sharding.NamedSharding(mesh, nspec),
+    )
+    def run(b, o):
+        final, _ = lax.scan(lambda c, x: body(c, x), b, None, length=num_iters)
+        return final
+
+    return run(betas, omegas)
+
+
+# ---------------------------------------------------------------------------
+# References used by tests
+# ---------------------------------------------------------------------------
+
+
+def centralized_from_node_stats(P_: jax.Array, Q_: jax.Array, C: float):
+    """The fusion-center answer the distributed iterations must reach:
+
+    beta* = (I/C + sum_i P_i)^{-1} (sum_i Q_i).
+    """
+    L = P_.shape[-1]
+    A = jnp.eye(L, dtype=P_.dtype) / C + jnp.sum(P_, axis=0)
+    return jnp.linalg.solve(A, jnp.sum(Q_, axis=0))
+
+
+def consensus_error(betas: jax.Array) -> jax.Array:
+    """Max over nodes of ||beta_i - mean beta|| / (1 + ||mean beta||)."""
+    mean = jnp.mean(betas, axis=0, keepdims=True)
+    num = jnp.max(jnp.sqrt(jnp.sum((betas - mean) ** 2, axis=(1, 2))))
+    den = 1.0 + jnp.sqrt(jnp.sum(mean**2))
+    return num / den
+
+
+def distance_to(betas: jax.Array, target: jax.Array) -> jax.Array:
+    """Max over nodes of relative Frobenius distance to target."""
+    num = jnp.sqrt(jnp.sum((betas - target[None]) ** 2, axis=(1, 2)))
+    den = 1.0 + jnp.sqrt(jnp.sum(target**2))
+    return jnp.max(num) / den
+
+
+def average_empirical_risk_fn(fmap, X_test: jax.Array, T_test: jax.Array):
+    """Paper eq. (32): R_d(k), averaged empirical risk across nodes.
+
+    Returns a trace_fn(betas) suitable for simulate_run.
+    """
+    H_test = fmap(X_test)
+    if T_test.ndim == 1:
+        T_test = T_test[:, None]
+
+    def trace(betas):
+        preds = jnp.einsum("nl,vlm->vnm", H_test, betas)
+        return jnp.mean(0.5 * jnp.abs(preds - T_test[None]))
+
+    return trace
+
+
+def test_error_fn(fmap, X_test: jax.Array, T_test: jax.Array):
+    """Classification test-error trace (paper Fig. 7)."""
+    H_test = fmap(X_test)
+    labels = jnp.sign(T_test.reshape(-1))
+
+    def trace(betas):
+        preds = jnp.einsum("nl,vlm->vnm", H_test, betas)
+        err = jnp.mean(jnp.sign(preds[..., 0]) != labels[None], axis=-1)
+        return jnp.mean(err)
+
+    return trace

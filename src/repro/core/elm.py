@@ -1,0 +1,109 @@
+"""Centralized ELM (paper Sec. II-A) — the fusion-center baseline.
+
+Solves   min_beta  1/2 ||beta||^2 + C/2 ||H beta - T||^2       (paper eq. 5)
+closed form (paper eq. 3):
+  beta* = (I_L/C + H^T H)^{-1} H^T T      when L <= N   ("primal")
+  beta* = H^T (I_N/C + H H^T)^{-1} T      when N <= L   ("dual")
+
+Both branches are implemented and tested to agree; the primal branch is
+the one the distributed algorithm decomposes (P_i = H_i^T H_i are
+additive across nodes).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.features import make_random_features
+
+
+def ridge_primal(H: jax.Array, T: jax.Array, C: float) -> jax.Array:
+    """beta = (I_L/C + H^T H)^{-1} H^T T. Cost O(N L^2 + L^3)."""
+    L = H.shape[-1]
+    P = H.T @ H
+    Q = H.T @ T
+    A = jnp.eye(L, dtype=H.dtype) / C + P
+    return jnp.linalg.solve(A, Q)
+
+
+def ridge_dual(H: jax.Array, T: jax.Array, C: float) -> jax.Array:
+    """beta = H^T (I_N/C + H H^T)^{-1} T. Cost O(N^2 L + N^3)."""
+    N = H.shape[0]
+    G = H @ H.T
+    A = jnp.eye(N, dtype=H.dtype) / C + G
+    return H.T @ jnp.linalg.solve(A, T)
+
+
+def ridge_solve(
+    H: jax.Array,
+    T: jax.Array,
+    C: float,
+    mode: Literal["auto", "primal", "dual"] = "auto",
+) -> jax.Array:
+    """Paper eq. (3): pick the branch by which Gram matrix is smaller."""
+    if mode == "auto":
+        mode = "primal" if H.shape[-1] <= H.shape[0] else "dual"
+    if mode == "primal":
+        return ridge_primal(H, T, C)
+    return ridge_dual(H, T, C)
+
+
+def solve_from_stats(P: jax.Array, Q: jax.Array, C: float) -> jax.Array:
+    """beta from sufficient statistics P = H^T H, Q = H^T T (primal)."""
+    L = P.shape[0]
+    return jnp.linalg.solve(jnp.eye(L, dtype=P.dtype) / C + P, Q)
+
+
+@dataclasses.dataclass(frozen=True)
+class ELM:
+    """A trained ELM: frozen random feature map + learned output weights."""
+
+    feature_map: object  # RandomFeatureMap | RBFFeatureMap | backbone adapter
+    beta: jax.Array  # (L, M)
+
+    def __call__(self, x: jax.Array) -> jax.Array:
+        return self.feature_map(x) @ self.beta
+
+    predict = __call__
+
+
+def train_centralized(
+    key: jax.Array,
+    X: jax.Array,
+    T: jax.Array,
+    *,
+    num_features: int,
+    C: float,
+    activation: str = "sigmoid",
+    mode: Literal["auto", "primal", "dual"] = "auto",
+) -> ELM:
+    """End-to-end centralized ELM training (paper Sec. II-A)."""
+    if T.ndim == 1:
+        T = T[:, None]
+    fmap = make_random_features(key, X.shape[-1], num_features, activation)
+    H = fmap(X)
+    beta = ridge_solve(H, T, C, mode)
+    return ELM(feature_map=fmap, beta=beta)
+
+
+def mse(elm: ELM, X: jax.Array, T: jax.Array) -> jax.Array:
+    if T.ndim == 1:
+        T = T[:, None]
+    pred = elm(X)
+    return jnp.mean(jnp.square(pred - T))
+
+
+def empirical_risk(pred: jax.Array, T: jax.Array) -> jax.Array:
+    """Paper eq. (31): R = (1/N_t) sum 1/2 |y - yhat| (mean absolute /2)."""
+    return jnp.mean(0.5 * jnp.abs(pred - T))
+
+
+def accuracy(pred: jax.Array, T: jax.Array) -> jax.Array:
+    """Binary/multiclass accuracy with +-1 or one-hot targets."""
+    if T.ndim == 1 or T.shape[-1] == 1:
+        return jnp.mean(jnp.sign(pred.reshape(-1)) == jnp.sign(T.reshape(-1)))
+    return jnp.mean(jnp.argmax(pred, -1) == jnp.argmax(T, -1))

@@ -1,0 +1,112 @@
+"""ELM random feature maps (the paper's hidden layer h(x)).
+
+The ELM hidden layer is a *frozen random* map
+    h(x) = [g(w_1, b_1, x), ..., g(w_L, b_L, x)],  h: R^D -> R^L
+with g a nonlinear piecewise-continuous activation (paper Sec. II-A).
+All nodes share the same (W, b) (paper Algorithm 1, step 1).
+
+``FeatureMap`` is also the integration point for the "beyond paper"
+deep-backbone features (paper Sec. V future work: unknown feature
+mappings): models/ provides a FeatureMap whose ``__call__`` runs a
+frozen transformer trunk.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+Activation = Callable[[jax.Array], jax.Array]
+
+_ACTIVATIONS: dict[str, Activation] = {
+    "sigmoid": jax.nn.sigmoid,
+    "tanh": jnp.tanh,
+    "relu": jax.nn.relu,
+    "sin": jnp.sin,
+    "identity": lambda x: x,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class RandomFeatureMap:
+    """Affine-then-nonlinearity random feature map.
+
+    Attributes:
+      weights: (D, L) input-to-hidden weights w_l (columns).
+      bias: (L,) hidden biases b_l.
+      activation: name of g.
+    """
+
+    weights: jax.Array
+    bias: jax.Array
+    activation: str = "sigmoid"
+
+    @property
+    def in_dim(self) -> int:
+        return self.weights.shape[0]
+
+    @property
+    def num_features(self) -> int:
+        return self.weights.shape[1]
+
+    def __call__(self, x: jax.Array) -> jax.Array:
+        """x: (..., D) -> H: (..., L)."""
+        g = _ACTIVATIONS[self.activation]
+        return g(x @ self.weights + self.bias)
+
+
+@dataclasses.dataclass(frozen=True)
+class RBFFeatureMap:
+    """Gaussian / RBF hidden nodes g(w, b, x) = exp(-b ||x - w||^2)."""
+
+    centers: jax.Array  # (L, D)
+    gamma: jax.Array  # (L,), positive
+
+    @property
+    def in_dim(self) -> int:
+        return self.centers.shape[1]
+
+    @property
+    def num_features(self) -> int:
+        return self.centers.shape[0]
+
+    def __call__(self, x: jax.Array) -> jax.Array:
+        d2 = jnp.sum(jnp.square(x[..., None, :] - self.centers), axis=-1)
+        return jnp.exp(-self.gamma * d2)
+
+
+def make_random_features(
+    key: jax.Array,
+    in_dim: int,
+    num_features: int,
+    activation: str = "sigmoid",
+    *,
+    scale: float = 1.0,
+    dtype=jnp.float32,
+):
+    """Sample the paper's uniform random hidden layer.
+
+    The paper samples (w, b) uniformly; we use U(-scale, scale) for weights
+    and U(0, scale) for biases (matching common ELM practice, e.g. Huang
+    et al. 2006).
+    """
+    if activation == "rbf":
+        kc, kg = jax.random.split(key)
+        centers = jax.random.uniform(
+            kc, (num_features, in_dim), minval=-scale, maxval=scale, dtype=dtype
+        )
+        gamma = jax.random.uniform(
+            kg, (num_features,), minval=0.05, maxval=1.0, dtype=dtype
+        )
+        return RBFFeatureMap(centers=centers, gamma=gamma)
+    if activation not in _ACTIVATIONS:
+        raise ValueError(f"unknown activation {activation!r}")
+    kw, kb = jax.random.split(key)
+    w = jax.random.uniform(
+        kw, (in_dim, num_features), minval=-scale, maxval=scale, dtype=dtype
+    )
+    b = jax.random.uniform(kb, (num_features,), minval=0.0, maxval=scale, dtype=dtype)
+    return RandomFeatureMap(weights=w, bias=b, activation=activation)

@@ -1,0 +1,57 @@
+"""Fusion-center parallel ELM baseline (paper refs [17][18], MapReduce).
+
+The master-slave scheme the paper contrasts with: every worker computes
+P_i = H_i^T H_i and Q_i = H_i^T T_i (the "map"), a fusion center reduces
+them and solves beta = (I/C + sum P_i)^{-1} sum Q_i.
+
+On a TPU mesh the "fusion center" is an all-reduce: exact, one global
+collective, but architecturally centralized (a single reduction root in
+spirit; any chip failure stalls the barrier, and the reduce moves
+sufficient statistics — not raw data — so privacy matches DC-ELM but
+robustness does not; see DESIGN.md).
+
+Used as: (a) the exactness reference in tests, (b) the throughput
+baseline in benchmarks, (c) the 'fusion' mode of launch/elm_head.py.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+
+def solve(P_sum: jax.Array, Q_sum: jax.Array, C: float) -> jax.Array:
+    L = P_sum.shape[0]
+    return jnp.linalg.solve(jnp.eye(L, dtype=P_sum.dtype) / C + P_sum, Q_sum)
+
+
+def simulate(H_nodes: jax.Array, T_nodes: jax.Array, C: float) -> jax.Array:
+    """Single-device reference: stack nodes, reduce, solve."""
+    P_ = jnp.einsum("vnl,vnk->lk", H_nodes, H_nodes)
+    Q_ = jnp.einsum("vnl,vnm->lm", H_nodes, T_nodes)
+    return solve(P_, Q_, C)
+
+
+def sharded_fn(mesh: jax.sharding.Mesh, reduce_axes, C: float):
+    """Build the jitted fusion-center ELM over data sharded on reduce_axes.
+
+    H: (N, L) sharded on rows across reduce_axes; T: (N, M) likewise.
+    Lowers to one all-reduce (psum) of (L,L)+(L,M) stats.
+    """
+
+    def body(H, T):
+        P_ = H.T @ H
+        Q_ = H.T @ T
+        P_ = lax.psum(P_, reduce_axes)
+        Q_ = lax.psum(Q_, reduce_axes)
+        return solve(P_, Q_, C)
+
+    shard = jax.shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(P(reduce_axes), P(reduce_axes)),
+        out_specs=P(),
+    )
+    return jax.jit(shard)

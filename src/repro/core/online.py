@@ -1,0 +1,110 @@
+"""Online DC-ELM — the paper's Algorithm 2.
+
+When a node's local data changes by a chunk (add DeltaS+ / remove
+DeltaS-), the frozen preconditioner Omega_i = (I/(VC) + P_i)^{-1} and the
+moment Q_i are updated in O(L^2 * DeltaN) via Sherman-Morrison-Woodbury
+(paper eqs. 23-28) instead of re-inverting in O(L^3):
+
+  remove (eq. 26):  Omega <- Omega + Omega dH^T (I_dN - dH Omega dH^T)^{-1} dH Omega
+  add    (eq. 27):  Omega <- Omega - Omega dH^T (I_dN + dH Omega dH^T)^{-1} dH Omega
+  and Q <- Q -/+ dH^T dT.
+
+After the stat update, beta_i is re-seeded at the new local optimum
+beta_i = Omega_i Q_i (Algorithm 2 step 13) — which restores the
+zero-gradient-sum invariant — and consensus rounds resume.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class OnlineNodeState:
+    """One node's online-ELM sufficient statistics.
+
+    omega: (L, L) current (I/(VC) + P)^{-1}
+    Q:     (L, M) current H^T T
+    """
+
+    omega: jax.Array
+    Q: jax.Array
+
+    @property
+    def beta(self) -> jax.Array:
+        return self.omega @ self.Q
+
+
+def init_state(H: jax.Array, T: jax.Array, C: float, V: int) -> OnlineNodeState:
+    L = H.shape[-1]
+    P_ = H.T @ H
+    omega = jnp.linalg.inv(jnp.eye(L, dtype=H.dtype) / (V * C) + P_)
+    return OnlineNodeState(omega=omega, Q=H.T @ T)
+
+
+def woodbury_add(omega: jax.Array, dH: jax.Array) -> jax.Array:
+    """Rank-dN downdate of the inverse after ADDING rows dH (eq. 27)."""
+    dN = dH.shape[0]
+    S = jnp.eye(dN, dtype=omega.dtype) + dH @ omega @ dH.T
+    K = omega @ dH.T
+    return omega - K @ jnp.linalg.solve(S, K.T)
+
+
+def woodbury_remove(omega: jax.Array, dH: jax.Array) -> jax.Array:
+    """Rank-dN update of the inverse after REMOVING rows dH (eq. 26)."""
+    dN = dH.shape[0]
+    S = jnp.eye(dN, dtype=omega.dtype) - dH @ omega @ dH.T
+    K = omega @ dH.T
+    return omega + K @ jnp.linalg.solve(S, K.T)
+
+
+@jax.jit
+def remove_chunk(state: OnlineNodeState, dH: jax.Array, dT: jax.Array):
+    """Algorithm 2, steps 5-8."""
+    return OnlineNodeState(
+        omega=woodbury_remove(state.omega, dH),
+        Q=state.Q - dH.T @ dT,
+    )
+
+
+@jax.jit
+def add_chunk(state: OnlineNodeState, dH: jax.Array, dT: jax.Array):
+    """Algorithm 2, steps 9-12."""
+    return OnlineNodeState(
+        omega=woodbury_add(state.omega, dH),
+        Q=state.Q + dH.T @ dT,
+    )
+
+
+def update_chunk(
+    state: OnlineNodeState,
+    added: tuple[jax.Array, jax.Array] | None = None,
+    removed: tuple[jax.Array, jax.Array] | None = None,
+) -> OnlineNodeState:
+    """Apply remove-then-add, the paper's Algorithm 2 ordering."""
+    if removed is not None:
+        state = remove_chunk(state, *removed)
+    if added is not None:
+        state = add_chunk(state, *added)
+    return state
+
+
+# Batched (all V nodes at once) variants, used by the online DC-ELM driver.
+batched_add_chunk = jax.jit(jax.vmap(add_chunk))
+batched_remove_chunk = jax.jit(jax.vmap(remove_chunk))
+
+
+def reseed_betas(states: OnlineNodeState) -> jax.Array:
+    """Stacked beta_i = Omega_i Q_i after an online update (step 13)."""
+    return jnp.einsum("vlk,vkm->vlm", states.omega, states.Q)
+
+
+@functools.partial(jax.jit, static_argnames=("C", "V"))
+def direct_state(H: jax.Array, T: jax.Array, C: float, V: int) -> OnlineNodeState:
+    """O(L^3) recompute-from-scratch reference for the Woodbury paths."""
+    return init_state(H, T, C, V)

@@ -1,0 +1,14 @@
+from repro.data.partition import partition_equal, partition_sizes
+from repro.data.sinc import make_sinc_dataset, sinc
+from repro.data.synthetic_mnist import make_mnist36_dataset
+from repro.data.lm import TokenStream, make_lm_batches
+
+__all__ = [
+    "partition_equal",
+    "partition_sizes",
+    "make_sinc_dataset",
+    "sinc",
+    "make_mnist36_dataset",
+    "TokenStream",
+    "make_lm_batches",
+]

@@ -1,0 +1,66 @@
+"""Synthetic language-model token pipeline for the assigned architectures.
+
+Deterministic, seedable token streams with enough structure to make
+training loss fall (order-2 Markov chains over the vocabulary), plus
+stub embedding providers for the VLM / audio frontends (the one
+permitted carve-out: frame/patch embeddings arrive precomputed).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class TokenStream:
+    """Order-2 Markov token source (structured => learnable)."""
+
+    vocab_size: int
+    seed: int = 0
+    branching: int = 8
+
+    def __post_init__(self):
+        rng = np.random.default_rng(self.seed)
+        # successor table: each (prev2 hash) allows `branching` next tokens
+        self._table = rng.integers(
+            0, self.vocab_size, size=(4096, self.branching), dtype=np.int64
+        )
+
+    def sample(self, rng: np.random.Generator, batch: int, seq: int) -> np.ndarray:
+        toks = np.empty((batch, seq + 1), np.int64)
+        toks[:, 0] = rng.integers(0, self.vocab_size, batch)
+        toks[:, 1] = rng.integers(0, self.vocab_size, batch)
+        choice = rng.integers(0, self.branching, size=(batch, seq + 1))
+        for t in range(2, seq + 1):
+            h = (toks[:, t - 1] * 31 + toks[:, t - 2]) % 4096
+            toks[:, t] = self._table[h, choice[:, t]]
+        return toks
+
+
+def make_lm_batches(
+    vocab_size: int,
+    batch: int,
+    seq: int,
+    num_batches: int,
+    seed: int = 0,
+):
+    """Yield dicts {tokens (B,S) int32, labels (B,S) int32} (next-token)."""
+    stream = TokenStream(vocab_size, seed)
+    rng = np.random.default_rng(seed + 1)
+    for _ in range(num_batches):
+        toks = stream.sample(rng, batch, seq)
+        yield {
+            "tokens": jnp.asarray(toks[:, :-1], jnp.int32),
+            "labels": jnp.asarray(toks[:, 1:], jnp.int32),
+        }
+
+
+def make_embedding_batch(
+    key: jax.Array, batch: int, seq: int, dim: int, dtype=jnp.bfloat16
+):
+    """Stub modality frontend output: precomputed patch/frame embeddings."""
+    return jax.random.normal(key, (batch, seq, dim), dtype)

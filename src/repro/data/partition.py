@@ -1,0 +1,43 @@
+"""Partitioning a global dataset across network nodes (paper Sec. III-B).
+
+The paper divides the training set into V equal subsets; we also support
+unequal (Dirichlet-skewed) splits to probe robustness claims.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def partition_sizes(N: int, V: int, skew: float = 0.0, seed: int = 0):
+    """Per-node sample counts. skew=0 -> equal; skew>0 -> Dirichlet(1/skew)."""
+    if skew <= 0:
+        base = N // V
+        sizes = [base] * V
+        for i in range(N - base * V):
+            sizes[i] += 1
+        return sizes
+    rng = np.random.default_rng(seed)
+    w = rng.dirichlet([1.0 / skew] * V)
+    sizes = np.maximum(1, np.floor(w * N).astype(int))
+    # fix rounding drift
+    while sizes.sum() > N:
+        sizes[np.argmax(sizes)] -= 1
+    while sizes.sum() < N:
+        sizes[np.argmin(sizes)] += 1
+    return sizes.tolist()
+
+
+def partition_equal(X: np.ndarray, T: np.ndarray, V: int, seed: int = 0):
+    """Shuffle + equal split -> stacked (V, N_i, ...) arrays.
+
+    Drops the remainder (N % V) samples, matching the paper's equal-size
+    protocol (N_i = 400 for V=25, N_i = 100 for V=100 on 10k samples).
+    """
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(X.shape[0])
+    X, T = X[perm], T[perm]
+    Ni = X.shape[0] // V
+    X = X[: V * Ni].reshape(V, Ni, *X.shape[1:])
+    T = T[: V * Ni].reshape(V, Ni, *T.shape[1:])
+    return X, T

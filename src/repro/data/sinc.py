@@ -1,0 +1,35 @@
+"""SinC regression dataset (paper Test Case 1, eq. 29).
+
+y(x) = sin(x)/x (1 at x=0); train inputs uniform on (-10, 10) with
+uniform noise in [-0.2, 0.2] added to *training* targets only; test
+targets noise-free. Defaults match the paper: V=4 nodes x N_i=1250 =
+5000 train, 5000 test.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sinc(x: jax.Array) -> jax.Array:
+    return jnp.where(x == 0, 1.0, jnp.sin(x) / jnp.where(x == 0, 1.0, x))
+
+
+def make_sinc_dataset(
+    key: jax.Array,
+    num_nodes: int = 4,
+    per_node: int = 1250,
+    num_test: int = 5000,
+    noise: float = 0.2,
+):
+    """Returns (X_nodes (V,Ni,1), Y_nodes (V,Ni,1), X_test (Nt,1), Y_test (Nt,1))."""
+    kx, kn, kt = jax.random.split(key, 3)
+    x = jax.random.uniform(
+        kx, (num_nodes, per_node, 1), minval=-10.0, maxval=10.0
+    )
+    y = sinc(x)
+    y = y + jax.random.uniform(kn, y.shape, minval=-noise, maxval=noise)
+    xt = jax.random.uniform(kt, (num_test, 1), minval=-10.0, maxval=10.0)
+    yt = sinc(xt)
+    return x, y, xt, yt

@@ -1,0 +1,94 @@
+"""Procedural MNIST-like '3 vs 6' dataset (paper Test Case 2 surrogate).
+
+The container is offline, so the real MNIST files are unavailable. This
+module renders stroke-based 28x28 images of the digits 3 and 6 with
+random affine jitter, stroke width, and pixel noise — same
+dimensionality (784), same binary task, same scale (10k train / 1.8k
+test) and the same V=25 / V=100 partition protocol as the paper.
+Accuracy numbers are qualitative anchors against the paper's
+0.8989/0.9200 (see DESIGN.md §7).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+SIZE = 28
+
+
+def _arc(center, radius, a0, a1, n=80):
+    """Points of a circular arc; angles in degrees, image coords (row, col)."""
+    th = np.linspace(np.deg2rad(a0), np.deg2rad(a1), n)
+    rows = center[0] - radius * np.sin(th)
+    cols = center[1] + radius * np.cos(th)
+    return np.stack([rows, cols], axis=1)
+
+
+def _digit3() -> np.ndarray:
+    upper = _arc((9.5, 13.0), 4.5, 160.0, -80.0)
+    lower = _arc((18.0, 13.0), 4.8, 80.0, -160.0)
+    return np.concatenate([upper, lower], axis=0)
+
+
+def _digit6() -> np.ndarray:
+    loop = _arc((18.0, 13.5), 4.6, 0.0, 360.0)
+    stem = _arc((14.0, 20.0), 9.5, 95.0, 175.0)
+    return np.concatenate([loop, stem], axis=0)
+
+
+def _render(points: np.ndarray, rng: np.random.Generator) -> np.ndarray:
+    """Jitter + splat stroke points with a Gaussian pen."""
+    # random affine jitter around image center
+    ang = rng.uniform(-0.25, 0.25)
+    scale = rng.uniform(0.85, 1.1)
+    shift = rng.uniform(-1.5, 1.5, size=2)
+    c, s = np.cos(ang), np.sin(ang)
+    rot = np.array([[c, -s], [s, c]])
+    ctr = np.array([SIZE / 2, SIZE / 2])
+    pts = (points - ctr) @ rot.T * scale + ctr + shift
+    # per-point wobble
+    pts = pts + rng.normal(0, 0.25, pts.shape)
+
+    sigma = rng.uniform(0.7, 1.1)
+    yy, xx = np.mgrid[0:SIZE, 0:SIZE]
+    img = np.zeros((SIZE, SIZE))
+    # vectorized splat
+    d2 = (yy[None] - pts[:, 0, None, None]) ** 2 + (
+        xx[None] - pts[:, 1, None, None]
+    ) ** 2
+    img = np.max(np.exp(-d2 / (2 * sigma**2)), axis=0)
+    img = np.clip(img * rng.uniform(0.85, 1.0) * 255, 0, 255)
+    img += rng.normal(0, 8.0, img.shape)  # sensor noise
+    return np.clip(img, 0, 255)
+
+
+def make_mnist36_dataset(
+    seed: int = 0,
+    num_train: int = 10_000,
+    num_test: int = 1_800,
+    normalize: bool = True,
+):
+    """Paper protocol: 5k train/digit, 900 test/digit, labels +1 (3) / -1 (6).
+
+    Returns (X_train (N,784), T_train (N,1), X_test, T_test) float32.
+    """
+    rng = np.random.default_rng(seed)
+    strokes = {1.0: _digit3(), -1.0: _digit6()}
+
+    def batch(n):
+        xs = np.empty((n, SIZE * SIZE), np.float32)
+        ts = np.empty((n, 1), np.float32)
+        labels = np.array([1.0, -1.0])
+        for i in range(n):
+            lab = labels[i % 2]
+            xs[i] = _render(strokes[lab], rng).reshape(-1)
+            ts[i] = lab
+        perm = rng.permutation(n)
+        return xs[perm], ts[perm]
+
+    X_train, T_train = batch(num_train)
+    X_test, T_test = batch(num_test)
+    if normalize:
+        X_train /= 255.0
+        X_test /= 255.0
+    return X_train, T_train, X_test, T_test

@@ -1,0 +1,17 @@
+from repro.distributed.sharding import (
+    MeshAxes,
+    resolve_axes,
+    param_pspecs,
+    batch_pspecs,
+    cache_pspecs,
+    consensus_gossip_spec,
+)
+
+__all__ = [
+    "MeshAxes",
+    "resolve_axes",
+    "param_pspecs",
+    "batch_pspecs",
+    "cache_pspecs",
+    "consensus_gossip_spec",
+]

@@ -1,0 +1,285 @@
+"""PartitionSpec assignment for every parameter / batch / cache leaf.
+
+Axis roles (DESIGN.md §5):
+  node axes  — carry the consensus graph (the paper's network nodes);
+               the leading V dim of training state lives here.
+               cfg.consensus_axis == "data": ("data",), or ("pod","data")
+               on the multi-pod mesh (a 2x16 torus of 32 nodes).
+               cfg.consensus_axis == "pod": ("pod",) — the two-site
+               privacy scenario — with "data" freed up for FSDP.
+  fsdp axis  — shards weight d_model/d_ff rows (ZeRO-3 style) when the
+               node axes don't occupy "data" (giant archs) or in serve
+               mode (no node dim at all).
+  model axis — tensor parallelism: attention heads, MLP hidden, MoE
+               experts (when E divides), SSM heads, vocab.
+
+Every rule checks divisibility against the actual mesh axis size and
+falls back to replication — e.g. starcoder2's 24 heads don't divide a
+16-way model axis, so its attention weights replicate (recorded in the
+roofline analysis; the MLP still shards).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshAxes:
+    node: tuple[str, ...]  # consensus axes (may be empty)
+    fsdp: tuple[str, ...]  # axes usable for weight sharding
+    model: str
+    sizes: dict[str, int]
+
+    @property
+    def node_count(self) -> int:
+        n = 1
+        for a in self.node:
+            n *= self.sizes[a]
+        return n
+
+    def model_size(self) -> int:
+        return self.sizes[self.model]
+
+    def fsdp_size(self) -> int:
+        n = 1
+        for a in self.fsdp:
+            n *= self.sizes[a]
+        return n
+
+
+def resolve_axes(cfg: ArchConfig, mesh: jax.sharding.Mesh, *, serve: bool = False) -> MeshAxes:
+    sizes = dict(zip(mesh.axis_names, np.shape(mesh.devices)))
+    names = mesh.axis_names
+    multi_pod = "pod" in names
+    if serve:
+        # no consensus dim; everything non-model is FSDP/batch territory
+        fsdp = tuple(a for a in names if a != "model")
+        return MeshAxes(node=(), fsdp=fsdp, model="model", sizes=sizes)
+    if cfg.consensus_axis == "pod":
+        node = ("pod",) if multi_pod else ()
+        fsdp = ("data",)
+    else:
+        node = ("pod", "data") if multi_pod else ("data",)
+        fsdp = ()
+    return MeshAxes(node=node, fsdp=fsdp, model="model", sizes=sizes)
+
+
+def consensus_gossip_spec(cfg: ArchConfig, axes: MeshAxes):
+    """GossipSpec over the node axes (None if V <= 1: no graph, no mixing)."""
+    from repro.core.gossip import GossipSpec
+
+    if not axes.node or axes.node_count <= 1:
+        return None
+    spec = GossipSpec(
+        axes=axes.node, kinds=tuple(cfg.gossip_kind for _ in axes.node)
+    )
+    if spec.degree(axes.sizes) == 0:
+        return None
+    return spec
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs
+# ---------------------------------------------------------------------------
+
+
+def _div(n: int, size: int) -> bool:
+    return size > 0 and n % size == 0
+
+
+def _fsdp_axis(axes: MeshAxes, dim: int):
+    """Pick the fsdp axes tuple if the dim divides their product."""
+    if not axes.fsdp:
+        return None
+    if _div(dim, axes.fsdp_size()):
+        return axes.fsdp if len(axes.fsdp) > 1 else axes.fsdp[0]
+    return None
+
+
+def _model_axis(axes: MeshAxes, dim: int):
+    return axes.model if _div(dim, axes.model_size()) else None
+
+
+def _leaf_spec(path: str, shape: tuple[int, ...], axes: MeshAxes, cfg: ArchConfig):
+    """Spec for the *trailing* semantic dims; leading dims padded None."""
+    m = axes.model_size()
+
+    def pad(spec_tail: list):
+        return [None] * (len(shape) - len(spec_tail)) + spec_tail
+
+    tail = None
+    if re.search(r"(embed|unembed)$", path):
+        vocab, d = shape[-2:]
+        tail = [_model_axis(axes, vocab), _fsdp_axis(axes, d)]
+    elif re.search(r"attn/w[qkv]$", path) or re.search(r"attn/wq$", path):
+        d, h, hd = shape[-3:]
+        tail = [_fsdp_axis(axes, d), _model_axis(axes, h), None]
+    elif re.search(r"attn/wo$", path):
+        h, hd, d = shape[-3:]
+        tail = [_model_axis(axes, h), None, _fsdp_axis(axes, d)]
+    elif re.search(r"attn/b[qkv]$", path):
+        h, hd = shape[-2:]
+        tail = [_model_axis(axes, h), None]
+    elif re.search(r"mlp/w_(gate|up)$", path):
+        d, f = shape[-2:]
+        tail = [_fsdp_axis(axes, d), _model_axis(axes, f)]
+    elif re.search(r"mlp/w_down$", path):
+        f, d = shape[-2:]
+        tail = [_model_axis(axes, f), _fsdp_axis(axes, d)]
+    elif re.search(r"moe/router$", path):
+        tail = [None, None]
+    elif re.search(r"moe/w_(gate|up)$", path):
+        e, d, f = shape[-3:]
+        if _div(e, m):
+            tail = [axes.model, _fsdp_axis(axes, d), None]
+        else:
+            tail = [None, _fsdp_axis(axes, d), _model_axis(axes, f)]
+    elif re.search(r"moe/w_down$", path):
+        e, f, d = shape[-3:]
+        if _div(e, m):
+            tail = [axes.model, None, _fsdp_axis(axes, d)]
+        else:
+            tail = [None, _model_axis(axes, f), _fsdp_axis(axes, d)]
+    elif re.search(r"w_[zx]$", path):  # mamba: head-major inner projections
+        d, di = shape[-2:]
+        ok = _div(cfg.ssm_heads, m) and _div(di, m)
+        tail = [_fsdp_axis(axes, d), axes.model if ok else None]
+    elif re.search(r"w_dt$", path):
+        d, nh = shape[-2:]
+        tail = [_fsdp_axis(axes, d), _model_axis(axes, nh)]
+    elif re.search(r"w_[BC]$", path):
+        d, ds = shape[-2:]
+        tail = [_fsdp_axis(axes, d), None]
+    elif re.search(r"conv_x$", path):
+        w, di = shape[-2:]
+        ok = _div(cfg.ssm_heads, m) and _div(di, m)
+        tail = [None, axes.model if ok else None]
+    elif re.search(r"conv_bx$", path) or re.search(r"gate_norm$", path):
+        (di,) = shape[-1:]
+        ok = _div(cfg.ssm_heads, m) and _div(di, m)
+        tail = [axes.model if ok else None]
+    elif re.search(r"(dt_bias|A_log|^D$|/D$)", path):
+        (nh,) = shape[-1:]
+        tail = [_model_axis(axes, nh)]
+    elif re.search(r"out_proj$", path):
+        di, d = shape[-2:]
+        ok = _div(cfg.ssm_heads, m) and _div(di, m)
+        tail = [axes.model if ok else None, _fsdp_axis(axes, d)]
+    if tail is None:
+        # norms, conv B/C, misc small: replicate
+        tail = [None] * len(shape)
+    return pad(tail)
+
+
+def _path_str(key_path) -> str:
+    segs = []
+    for k in key_path:
+        if isinstance(k, jax.tree_util.DictKey):
+            segs.append(str(k.key))
+        elif isinstance(k, jax.tree_util.SequenceKey):
+            segs.append(str(k.idx))
+        else:
+            segs.append(str(k))
+    return "/".join(segs)
+
+
+def param_pspecs(cfg: ArchConfig, axes: MeshAxes, params_shape, *, node_dim: bool):
+    """PartitionSpec pytree for a params template (from jax.eval_shape).
+
+    node_dim: True for training state with the leading (V, ...) node dim.
+
+    (§Perf note: sharding the stacked-layer L dim over fsdp axes in
+    serve mode was tried and REFUTED — GSPMD gathers the entire stack
+    for the scan's dynamic-slice, 4.2 TB of all-gather on grok. The
+    d-dim fsdp layout below remains the best measured serve policy.)
+    """
+    node_spec = (
+        axes.node if len(axes.node) > 1 else (axes.node[0] if axes.node else None)
+    )
+
+    def leaf(key_path, leaf_shape):
+        path = _path_str(key_path)
+        shape = leaf_shape.shape
+        if node_dim:
+            inner = _leaf_spec(path, shape[1:], axes, cfg)
+            return P(node_spec, *inner)
+        return P(*_leaf_spec(path, shape, axes, cfg))
+
+    return jax.tree_util.tree_map_with_path(leaf, params_shape)
+
+
+# ---------------------------------------------------------------------------
+# Batch / cache specs
+# ---------------------------------------------------------------------------
+
+
+def batch_pspecs(cfg: ArchConfig, axes: MeshAxes, batch_shape, *, node_dim: bool):
+    """Token batches: (V, b, S) node+optional-fsdp sharded, or (B, S)."""
+    node_spec = (
+        axes.node if len(axes.node) > 1 else (axes.node[0] if axes.node else None)
+    )
+
+    def leaf(key_path, leaf_shape):
+        shape = leaf_shape.shape
+        if node_dim:
+            b = shape[1]
+            bshard = _fsdp_axis(axes, b)
+            return P(node_spec, bshard, *([None] * (len(shape) - 2)))
+        b = shape[0]
+        bshard = _fsdp_axis(axes, b)
+        return P(bshard, *([None] * (len(shape) - 1)))
+
+    return jax.tree_util.tree_map_with_path(leaf, batch_shape)
+
+
+def cache_pspecs(cfg: ArchConfig, axes: MeshAxes, cache_shape):
+    """Decode caches (serve mode, no node dim).
+
+    Prefer sharding batch over the fsdp axes; if the batch doesn't
+    divide (long_500k, B=1), shard the sequence dim of attention caches
+    instead (flash-decode style distributed KV).
+    """
+
+    def leaf(key_path, leaf_shape):
+        path = _path_str(key_path)
+        shape = leaf_shape.shape
+        if path.endswith("pos"):
+            return P()
+        if re.search(r"(k|v)(_local|_global|_shared)?$", path):
+            L, B, S, K, hd = shape
+            bshard = _fsdp_axis(axes, B)
+            sshard = None if bshard else _fsdp_axis(axes, S)
+            return P(None, bshard, sshard, _model_axis(axes, K), None)
+        if path.endswith("state"):
+            L, B, nh, hd, ds = shape
+            return P(None, _fsdp_axis(axes, B), _model_axis(axes, nh), None, None)
+        if re.search(r"conv/x$", path):
+            L, B, W, di = shape
+            ok = _div(cfg.ssm_heads, axes.model_size()) and _div(
+                di, axes.model_size()
+            )
+            return P(
+                None, _fsdp_axis(axes, B), None, axes.model if ok else None
+            )
+        if re.search(r"conv/[BC]$", path):
+            L, B, W, ds = shape
+            return P(None, _fsdp_axis(axes, B), None, None)
+        return P(*([None] * len(shape)))
+
+    return jax.tree_util.tree_map_with_path(leaf, cache_shape)
+
+
+def shardings(mesh, pspecs):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        pspecs,
+        is_leaf=lambda x: isinstance(x, P),
+    )

@@ -1,0 +1,285 @@
+"""Jitted step factories: consensus training, prefill, decode, ELM head.
+
+These bind (config x mesh x optimizer) into the concrete computations
+that launch/{train,serve,elm_head,dryrun}.py lower. Training state
+carries a leading node dim V (the consensus graph); each node's replica
+is vmapped through the model and mixed with its mesh neighbors using the
+paper's rule after every optimizer step (core/dsgd.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.core import dsgd, gossip
+from repro.distributed import sharding as shd
+from repro.models import Model
+from repro.optim.optimizers import Optimizer, apply_updates
+
+
+class TrainState(NamedTuple):
+    params: dict  # leaves (V, ...)
+    opt_state: object
+    step: jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Consensus training (train_4k)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainBundle:
+    """Everything launch code needs: jitted fns + shardings."""
+
+    init_fn: object  # (key) -> TrainState (jitted, sharded out)
+    step_fn: object  # (TrainState, batch) -> (TrainState, metrics)
+    state_shardings: object
+    batch_shardings: object
+    node_count: int
+    gamma: float
+
+
+def _state_pspecs(cfg, axes, state_shape):
+    pp = shd.param_pspecs(cfg, axes, state_shape.params, node_dim=True)
+
+    def opt_leaf(path, leaf):
+        # mu/nu mirror params; per-node scalars get P(node)
+        del path
+        shape = leaf.shape
+        if len(shape) <= 1:  # (V,) step counters
+            node_spec = (
+                axes.node
+                if len(axes.node) > 1
+                else (axes.node[0] if axes.node else None)
+            )
+            return P(*([node_spec] + [None] * (len(shape) - 1)))
+        return None  # filled below by structural match
+
+    # opt_state: same structure as params for moment trees; use params
+    # specs where shapes match, replicate-node-scalars otherwise.
+    flat_p, _ = jax.tree_util.tree_flatten(pp)
+
+    def match(leaf):
+        shape = leaf.shape
+        node_spec = (
+            axes.node
+            if len(axes.node) > 1
+            else (axes.node[0] if axes.node else None)
+        )
+        if len(shape) <= 1:
+            return P(*([node_spec][: len(shape)]))
+        return None
+
+    # moments have identical treedef to params within mu/nu subtrees;
+    # simplest robust approach: spec by shape lookup from params template.
+    shape_to_spec = {}
+    for spec, leaf in zip(
+        jax.tree_util.tree_leaves(pp),
+        jax.tree_util.tree_leaves(state_shape.params),
+    ):
+        shape_to_spec.setdefault((leaf.shape, str(leaf.dtype)), spec)
+
+    def opt_spec(leaf):
+        key = (leaf.shape, str(leaf.dtype))
+        if key in shape_to_spec:
+            return shape_to_spec[key]
+        return match(leaf)
+
+    po = jax.tree.map(opt_spec, state_shape.opt_state)
+    return TrainState(params=pp, opt_state=po, step=P())
+
+
+def make_train_bundle(
+    cfg: ArchConfig,
+    mesh: jax.sharding.Mesh,
+    optimizer: Optimizer,
+    *,
+    gamma: float | None = None,
+    gossip_compress: str | None = None,
+    microbatches: int = 1,
+    seed: int = 0,
+) -> TrainBundle:
+    model = Model(cfg)
+    axes = shd.resolve_axes(cfg, mesh)
+    V = max(axes.node_count, 1)
+    spec = shd.consensus_gossip_spec(cfg, axes)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    if gamma is None:
+        gamma = (
+            0.9 * spec.gamma_upper_bound(sizes) if spec is not None else 0.0
+        )
+
+    def init_state(key):
+        params = model.init(key)
+        stacked = jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (V,) + x.shape), params
+        )
+        opt_state = jax.vmap(optimizer.init)(stacked)
+        return TrainState(stacked, opt_state, jnp.zeros((), jnp.int32))
+
+    state_shape = jax.eval_shape(init_state, jax.random.key(seed))
+    state_specs = _state_pspecs(cfg, axes, state_shape)
+    state_sh = shd.shardings(mesh, state_specs)
+
+    def node_loss(p, b):
+        loss, metrics = model.loss(p, b)
+        return loss, metrics
+
+    grad_fn = jax.vmap(jax.value_and_grad(node_loss, has_aux=True))
+
+    def _accumulate_grads(params, batch):
+        """Gradient accumulation over `microbatches` splits of the
+        per-node batch (activation memory / microbatches)."""
+        if microbatches == 1:
+            return grad_fn(params, batch)
+
+        def split(x):  # (V, b, ...) -> (m, V, b/m, ...)
+            V, b = x.shape[0], x.shape[1]
+            if b % microbatches:
+                raise ValueError(
+                    f"per-node batch {b} % microbatches {microbatches}"
+                )
+            return x.reshape(
+                V, microbatches, b // microbatches, *x.shape[2:]
+            ).swapaxes(0, 1)
+
+        mb = jax.tree.map(split, batch)
+
+        def body(carry, mb_slice):
+            (losses, metrics), grads = grad_fn(params, mb_slice)
+            acc_l, acc_m, acc_g = carry
+            acc_l = acc_l + losses
+            acc_m = jax.tree.map(jnp.add, acc_m, metrics)
+            acc_g = jax.tree.map(jnp.add, acc_g, grads)
+            return (acc_l, acc_m, acc_g), None
+
+        zeros = lambda t: jax.tree.map(  # noqa: E731
+            lambda s: jnp.zeros(s.shape, s.dtype), t
+        )
+        shapes = jax.eval_shape(
+            grad_fn, params,
+            jax.tree.map(
+                lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype), mb
+            ),
+        )
+        (l_s, m_s), g_s = shapes
+        carry0 = (zeros(l_s), zeros(m_s), zeros(g_s))
+        (losses, metrics, grads), _ = jax.lax.scan(body, carry0, mb)
+        inv = 1.0 / microbatches
+        return (
+            (losses * inv, jax.tree.map(lambda x: x * inv, metrics)),
+            jax.tree.map(lambda g: g * inv, grads),
+        )
+
+    def step(state: TrainState, batch):
+        (losses, metrics), grads = _accumulate_grads(state.params, batch)
+        updates, opt_state = jax.vmap(optimizer.update)(
+            grads, state.opt_state, state.params
+        )
+        params = apply_updates(state.params, updates)
+        if spec is not None:
+            pspecs = state_specs.params
+
+            def mix(p):
+                return dsgd.mix_sharded(
+                    p, gamma, spec, sizes, compress=gossip_compress
+                )
+
+            params = jax.shard_map(
+                mix, mesh=mesh, in_specs=(pspecs,), out_specs=pspecs,
+            )(params)
+        metrics = dict(metrics, loss=losses)
+        return TrainState(params, opt_state, state.step + 1), metrics
+
+    # batch template: (V, b, S) int32 tokens/labels (+ vlm embeds)
+    def batch_specs(batch_shape):
+        return shd.batch_pspecs(cfg, axes, batch_shape, node_dim=True)
+
+    init_jit = jax.jit(init_state, out_shardings=state_sh)
+
+    return TrainBundle(
+        init_fn=init_jit,
+        step_fn=step,
+        state_shardings=state_sh,
+        batch_shardings=batch_specs,
+        node_count=V,
+        gamma=gamma,
+    )
+
+
+def jit_train_step(bundle: TrainBundle, mesh, batch_shape):
+    """jit the step with explicit in/out shardings for a batch template."""
+    bspecs = bundle.batch_shardings(batch_shape)
+    bsh = shd.shardings(mesh, bspecs)
+    return jax.jit(
+        bundle.step_fn,
+        in_shardings=(bundle.state_shardings, bsh),
+        out_shardings=(bundle.state_shardings, None),
+        donate_argnums=(0,),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Serving (prefill_32k / decode_32k / long_500k)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeBundle:
+    prefill_fn: object
+    decode_fn: object
+    param_shardings: object
+    cache_shardings: object
+    batch_pspec_fn: object
+
+
+def make_serve_bundle(
+    cfg: ArchConfig,
+    mesh: jax.sharding.Mesh,
+    *,
+    batch: int,
+    max_seq: int,
+    seed: int = 0,
+) -> ServeBundle:
+    model = Model(cfg)
+    axes = shd.resolve_axes(cfg, mesh, serve=True)
+
+    params_shape = jax.eval_shape(model.init, jax.random.key(seed))
+    pspecs = shd.param_pspecs(cfg, axes, params_shape, node_dim=False)
+    psh = shd.shardings(mesh, pspecs)
+
+    cache_shape = jax.eval_shape(
+        functools.partial(model.init_cache, batch, max_seq)
+    )
+    cspecs = shd.cache_pspecs(cfg, axes, cache_shape)
+    csh = shd.shardings(mesh, cspecs)
+
+    tok_shard = shd.shardings(
+        mesh, P(None if batch % axes.fsdp_size() else None)
+    )
+    del tok_shard
+
+    def batch_pspec(shape_tree):
+        return shd.batch_pspecs(cfg, axes, shape_tree, node_dim=False)
+
+    def prefill(params, batch_):
+        return model.prefill(params, batch_, max_seq=max_seq)
+
+    def decode(params, cache, tokens):
+        return model.decode_step(params, cache, tokens)
+
+    return ServeBundle(
+        prefill_fn=prefill,
+        decode_fn=decode,
+        param_shardings=psh,
+        cache_shardings=csh,
+        batch_pspec_fn=batch_pspec,
+    )

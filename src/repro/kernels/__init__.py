@@ -1,0 +1,17 @@
+"""Pallas TPU kernels for the compute hot-spots.
+
+  gram.py / gram_ops.py / gram_ref.py   P = H^T H, Q = H^T T — the
+                                        paper's per-node statistic (the
+                                        heaviest DC-ELM computation);
+                                        symmetric block-triangle variant
+  ssd_scan.py / ssd_ops.py / ssd_ref.py Mamba2 chunked SSD scan
+  attn.py / attn_ops.py / attn_ref.py   causal/SWA GQA flash attention
+  decode_attn.py                        flash-decode (one token vs a
+                                        long KV cache, serving hot path)
+
+Each kernel is a pl.pallas_call with explicit BlockSpec VMEM tiling,
+validated against its pure-jnp oracle in interpret mode (tests/).
+ops.py wrappers dispatch kernel-on-TPU / oracle-elsewhere.
+"""
+
+from repro.kernels import gram_ops, ssd_ops, attn_ops  # noqa: F401

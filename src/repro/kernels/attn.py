@@ -1,0 +1,134 @@
+"""Pallas TPU kernel: blocked causal GQA flash attention.
+
+Grid = (B*K, G, nq, nk), nk innermost. Online-softmax accumulators
+(acc (bq,hd) f32, m/l (bq,1) f32) live in VMEM scratch across the KV
+stream. Fully-masked blocks (k block start beyond the q block end) are
+skipped with ``pl.when`` — the grid-level analogue of flash-attention's
+causal block skipping, which the pure-jnp fallback in
+models/attention.py cannot express (its known 2x block waste is one of
+the §Perf items; this kernel is the TPU fix).
+
+Layouts (wrapper ``flash_attention_pallas`` maps model shapes here):
+  q (BK, G, S, hd)   BK = batch * kv_heads, G = query groups
+  k (BK, S, hd)
+  v (BK, S, hd)
+  o (BK, G, S, hd)
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(
+    q_ref, k_ref, v_ref, o_ref, acc, m, l,
+    *, bq: int, bk: int, nk: int, scale: float, softcap: float,
+    window: int | None = None,
+):
+    i = pl.program_id(2)
+    j = pl.program_id(3)
+
+    @pl.when(j == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+        m[...] = jnp.full_like(m, NEG_INF)
+        l[...] = jnp.zeros_like(l)
+
+    # skip blocks fully masked by causality, and (for sliding-window
+    # layers) blocks entirely left of every query's window
+    in_band = j * bk <= i * bq + bq - 1
+    if window is not None:
+        in_band = in_band & (j * bk + bk - 1 > i * bq - window)
+
+    @pl.when(in_band)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)  # (bq, hd)
+        k = k_ref[0].astype(jnp.float32)  # (bk, hd)
+        v = v_ref[0].astype(jnp.float32)  # (bk, hd)
+        logits = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * scale  # (bq, bk)
+        if softcap:
+            logits = softcap * jnp.tanh(logits / softcap)
+        qpos = i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = qpos >= kpos
+        if window is not None:
+            mask = mask & (qpos - kpos < window)
+        logits = jnp.where(mask, logits, NEG_INF)
+        bm = jnp.max(logits, axis=1, keepdims=True)  # (bq,1)
+        new_m = jnp.maximum(m[...], bm)
+        p = jnp.exp(logits - new_m)
+        r = jnp.exp(m[...] - new_m)
+        acc[...] = acc[...] * r + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        l[...] = l[...] * r + jnp.sum(p, axis=1, keepdims=True)
+        m[...] = new_m
+
+    @pl.when(j == nk - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc[...] / jnp.maximum(l[...], 1e-30)).astype(
+            o_ref.dtype
+        )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_q", "block_k", "softcap", "window", "interpret"),
+)
+def flash_attention_pallas(
+    q: jax.Array,  # (B, S, K, G, hd)
+    k: jax.Array,  # (B, S, K, hd)
+    v: jax.Array,  # (B, S, K, hd)
+    *,
+    block_q: int = 256,
+    block_k: int = 256,
+    softcap: float = 0.0,
+    window: int | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Causal GQA attention. Returns (B, S, K, G, hd)."""
+    B, S, K, G, hd = q.shape
+    bq = min(block_q, S)
+    bk = min(block_k, S)
+    if S % bq or S % bk:
+        raise ValueError(f"S={S} must divide block sizes ({bq},{bk})")
+    nq, nk = S // bq, S // bk
+    scale = hd ** -0.5
+
+    qt = q.transpose(0, 2, 3, 1, 4).reshape(B * K, G, S, hd)
+    kt = k.transpose(0, 2, 1, 3).reshape(B * K, S, hd)
+    vt = v.transpose(0, 2, 1, 3).reshape(B * K, S, hd)
+
+    kern = functools.partial(
+        _attn_kernel, bq=bq, bk=bk, nk=nk, scale=scale, softcap=softcap,
+        window=window,
+    )
+    out = pl.pallas_call(
+        kern,
+        grid=(B * K, G, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, hd), lambda b, g, i, j: (b, g, i, 0)),
+            pl.BlockSpec((1, bk, hd), lambda b, g, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, hd), lambda b, g, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, hd), lambda b, g, i, j: (b, g, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * K, G, S, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, hd), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    return out.reshape(B, K, G, S, hd).transpose(0, 3, 1, 2, 4)

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for causal GQA attention (naive full softmax)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_reference(
+    q: jax.Array,  # (B, S, K, G, hd)
+    k: jax.Array,  # (B, S, K, hd)
+    v: jax.Array,  # (B, S, K, hd)
+    *,
+    softcap: float = 0.0,
+) -> jax.Array:
+    B, S, K, G, hd = q.shape
+    scale = hd ** -0.5
+    logits = jnp.einsum(
+        "bqkgh,bskh->bkgqs", q, k, preferred_element_type=jnp.float32
+    ) * scale
+    if softcap:
+        logits = softcap * jnp.tanh(logits / softcap)
+    pos = jnp.arange(S)
+    mask = pos[:, None] >= pos[None, :]
+    logits = jnp.where(mask[None, None, None], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bkgqs,bskh->bqkgh", w.astype(v.dtype), v)

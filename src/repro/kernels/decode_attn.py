@@ -1,0 +1,128 @@
+"""Pallas TPU kernel: single-token GQA attention over a long KV cache
+("flash-decode") — the serving hot path for decode_32k / long_500k.
+
+Grid = (B*K, nk) with the KV stream innermost; online-softmax
+accumulators live in VMEM scratch, so HBM traffic is one pass over the
+(possibly multi-hundred-thousand-token) cache and one (G, hd) output
+write. Blocks entirely beyond the current position (or outside the
+sliding window) are skipped with ``pl.when`` — for a ring-buffer SWA
+cache the wrapper simply passes the window-sized cache.
+
+Layouts (wrapper maps model shapes):
+  q     (BK, G, hd)      one query token per sequence
+  k, v  (BK, S, hd)      cache (RoPE pre-applied to k)
+  pos   (1,) int32       absolute position of the query token
+  out   (BK, G, hd)
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(
+    pos_ref, q_ref, k_ref, v_ref, o_ref, acc, m, l,
+    *, bk: int, nk: int, scale: float, window: int | None, softcap: float,
+):
+    j = pl.program_id(1)
+    pos = pos_ref[0]
+
+    @pl.when(j == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+        m[...] = jnp.full_like(m, NEG_INF)
+        l[...] = jnp.zeros_like(l)
+
+    @pl.when(j * bk <= pos)  # skip blocks entirely in the future
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)  # (G, hd)
+        k = k_ref[0].astype(jnp.float32)  # (bk, hd)
+        v = v_ref[0].astype(jnp.float32)
+        logits = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * scale  # (G, bk)
+        if softcap:
+            logits = softcap * jnp.tanh(logits / softcap)
+        kpos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (1, bk), 1)
+        valid = kpos <= pos
+        if window is not None:
+            valid = valid & (pos - kpos < window)
+        logits = jnp.where(valid, logits, NEG_INF)
+        bm = jnp.max(logits, axis=1, keepdims=True)  # (G, 1)
+        new_m = jnp.maximum(m[...], bm)
+        p = jnp.exp(logits - new_m)
+        r = jnp.exp(m[...] - new_m)
+        acc[...] = acc[...] * r + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        l[...] = l[...] * r + jnp.sum(p, axis=1, keepdims=True)
+        m[...] = new_m
+
+    @pl.when(j == nk - 1)
+    def _finalize():
+        o_ref[0] = (acc[...] / jnp.maximum(l[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_k", "window", "softcap", "interpret")
+)
+def flash_decode_pallas(
+    q: jax.Array,  # (B, 1, K, G, hd)
+    cache_k: jax.Array,  # (B, S, K, hd)
+    cache_v: jax.Array,  # (B, S, K, hd)
+    pos: jax.Array,  # () int32
+    *,
+    block_k: int = 512,
+    window: int | None = None,
+    softcap: float = 0.0,
+    interpret: bool = False,
+) -> jax.Array:
+    """Returns (B, 1, K, G, hd)."""
+    B, _, K, G, hd = q.shape
+    S = cache_k.shape[1]
+    bk = min(block_k, S)
+    pad = (-S) % bk
+    if pad:
+        cache_k = jnp.pad(cache_k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        cache_v = jnp.pad(cache_v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    S2 = S + pad
+    nk = S2 // bk
+    scale = hd ** -0.5
+
+    qt = q.reshape(B, K, G, hd).reshape(B * K, G, hd)
+    kt = cache_k.transpose(0, 2, 1, 3).reshape(B * K, S2, hd)
+    vt = cache_v.transpose(0, 2, 1, 3).reshape(B * K, S2, hd)
+    pos_arr = jnp.asarray(pos, jnp.int32).reshape(1)
+
+    kern = functools.partial(
+        _decode_kernel, bk=bk, nk=nk, scale=scale, window=window,
+        softcap=softcap,
+    )
+    out = pl.pallas_call(
+        kern,
+        grid=(B * K, nk),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, G, hd), lambda b, j: (b, 0, 0)),
+            pl.BlockSpec((1, bk, hd), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, hd), lambda b, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, G, hd), lambda b, j: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * K, G, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, hd), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(pos_arr, qt, kt, vt)
+    return out.reshape(B, K, G, hd)[:, None].reshape(B, 1, K, G, hd)

@@ -1,0 +1,34 @@
+"""Dispatching wrappers for the Gram kernels (TPU kernel vs jnp oracle)."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.gram_ref import cross_reference, gram_reference
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def gram(H, *, use_kernel: bool | None = None, **kw):
+    use = _on_tpu() if use_kernel is None else use_kernel
+    if use:
+        from repro.kernels.gram import gram_pallas
+
+        return gram_pallas(H, interpret=not _on_tpu(), **kw)
+    return gram_reference(H)
+
+
+def cross(H, T, *, use_kernel: bool | None = None, **kw):
+    use = _on_tpu() if use_kernel is None else use_kernel
+    if use:
+        from repro.kernels.gram import cross_pallas
+
+        return cross_pallas(H, T, interpret=not _on_tpu(), **kw)
+    return cross_reference(H, T)
+
+
+def local_elm_stats(H, T, *, use_kernel: bool | None = None):
+    """(P, Q) = (H^T H, H^T T) — one DC-ELM node's sufficient statistics."""
+    return gram(H, use_kernel=use_kernel), cross(H, T, use_kernel=use_kernel)

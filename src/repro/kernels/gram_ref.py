@@ -1,0 +1,24 @@
+"""Pure-jnp oracles for the Gram kernels."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gram_reference(H: jax.Array) -> jax.Array:
+    """P = H^T H with f32 accumulation."""
+    return jax.lax.dot_general(
+        H, H,
+        dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def cross_reference(H: jax.Array, T: jax.Array) -> jax.Array:
+    """Q = H^T T with f32 accumulation."""
+    return jax.lax.dot_general(
+        H, T,
+        dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )

@@ -1,0 +1,148 @@
+"""Pure-jnp oracle for the Mamba2 SSD (state-space duality) scan.
+
+Chunked algorithm from Dao & Gu, arXiv:2405.21060 (sec. 6): within a
+chunk of Q steps the recurrence is computed as a masked attention-like
+quadratic form; across chunks a linear scan carries the (nh, hd, ds)
+state. Single SSM group (g = 1): B and C are shared across heads.
+
+Shapes:
+  x   (b, s, nh, hd)   inputs (already conv'd/activated)
+  dt  (b, s, nh)       positive step sizes (softplus applied)
+  A   (nh,)            negative decay rates
+  B   (b, s, ds)       input projections
+  C   (b, s, ds)       output projections
+returns
+  y           (b, s, nh, hd)
+  final_state (b, nh, hd, ds)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def ssd_reference(
+    x: jax.Array,
+    dt: jax.Array,
+    A: jax.Array,
+    B: jax.Array,
+    C: jax.Array,
+    *,
+    chunk: int = 256,
+    initial_state: jax.Array | None = None,
+):
+    b, s, nh, hd = x.shape
+    ds = B.shape[-1]
+    chunk = min(chunk, s)
+    pad = (-s) % chunk
+    if pad:
+        # dt = 0 on padded steps => decay 1, zero input: exact identity
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    s_padded = s + pad
+    nc = s_padded // chunk
+
+    f32 = jnp.float32
+    xr = x.reshape(b, nc, chunk, nh, hd)
+    dtr = dt.reshape(b, nc, chunk, nh).astype(f32)
+    Br = B.reshape(b, nc, chunk, ds).astype(f32)
+    Cr = C.reshape(b, nc, chunk, ds).astype(f32)
+    # log-decay increments and within-chunk cumulative sums
+    adt = dtr * A.astype(f32)  # (b, nc, Q, nh), negative
+    cum = jnp.cumsum(adt, axis=2)  # (b, nc, Q, nh)
+
+    h0 = (
+        jnp.zeros((b, nh, hd, ds), f32)
+        if initial_state is None
+        else initial_state.astype(f32)
+    )
+
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    def per_chunk(h, inp):
+        xc, dtc, bc, cc, cumc = inp
+        # xc (b,Q,nh,hd) dtc/cumc (b,Q,nh) bc/cc (b,Q,ds)
+        # --- intra-chunk quadratic (the "duality" attention form) ---
+        cb = jnp.einsum("bin,bjn->bij", cc, bc)  # (b,Q,Q)
+        # valid (i >= j) entries have cum_i - cum_j <= 0; clamp the
+        # masked upper triangle so exp can't overflow (inf * 0 -> NaN
+        # in the backward pass otherwise).
+        diff = jnp.minimum(
+            cumc[:, :, None, :] - cumc[:, None, :, :], 0.0
+        )  # (b,i,j,h)
+        decay = jnp.exp(diff)
+        att = cb[..., None] * decay * dtc[:, None, :, :]  # (b,i,j,h)
+        att = jnp.where(tri[None, :, :, None], att, 0.0)
+        y_intra = jnp.einsum("bijh,bjhp->bihp", att, xc.astype(f32))
+        # --- inter-chunk: contribution of the carried state ---
+        state_decay = jnp.exp(cumc)  # (b,Q,nh) decay from chunk start to i
+        y_inter = jnp.einsum(
+            "bin,bhpn,bih->bihp", cc, h, state_decay
+        )
+        y = (y_intra + y_inter).astype(x.dtype)
+        # --- new carried state ---
+        total = cumc[:, -1, :]  # (b,nh) full-chunk log decay
+        w = jnp.exp(total[:, None, :] - cumc) * dtc  # (b,Q,nh)
+        new_h = h * jnp.exp(total)[:, :, None, None] + jnp.einsum(
+            "bqn,bqhp,bqh->bhpn", bc, xc.astype(f32), w
+        )
+        return new_h, y
+
+    inputs = (
+        xr.transpose(1, 0, 2, 3, 4),
+        dtr.transpose(1, 0, 2, 3),
+        Br.transpose(1, 0, 2, 3),
+        Cr.transpose(1, 0, 2, 3),
+        cum.transpose(1, 0, 2, 3),
+    )
+    h_final, ys = lax.scan(per_chunk, h0, inputs)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, s_padded, nh, hd)[:, :s]
+    return y, h_final.astype(jnp.float32)
+
+
+def ssd_decode_step(
+    state: jax.Array,  # (b, nh, hd, ds) f32
+    x_t: jax.Array,  # (b, nh, hd)
+    dt_t: jax.Array,  # (b, nh)
+    A: jax.Array,  # (nh,)
+    B_t: jax.Array,  # (b, ds)
+    C_t: jax.Array,  # (b, ds)
+):
+    """One recurrent step: h <- e^{dt A} h + dt x B^T ; y = h C."""
+    f32 = jnp.float32
+    a = jnp.exp(dt_t.astype(f32) * A.astype(f32))  # (b, nh)
+    upd = (dt_t[..., None].astype(f32) * x_t.astype(f32))[..., None] * B_t[
+        :, None, None, :
+    ].astype(f32)
+    new_state = a[..., None, None] * state + upd
+    y = jnp.einsum("bhpn,bn->bhp", new_state, C_t.astype(f32))
+    return new_state, y.astype(x_t.dtype)
+
+
+def ssd_naive_reference(x, dt, A, B, C, *, initial_state=None):
+    """O(s) step-by-step recurrence — the ground truth for the chunked form."""
+    b, s, nh, hd = x.shape
+    ds = B.shape[-1]
+    h = (
+        jnp.zeros((b, nh, hd, ds), jnp.float32)
+        if initial_state is None
+        else initial_state.astype(jnp.float32)
+    )
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp
+        h, y = ssd_decode_step(h, xt, dtt, A, bt, ct)
+        return h, y
+
+    inputs = (
+        x.transpose(1, 0, 2, 3),
+        dt.transpose(1, 0, 2),
+        B.transpose(1, 0, 2),
+        C.transpose(1, 0, 2),
+    )
+    h, ys = lax.scan(step, h, inputs)
+    return ys.transpose(1, 0, 2, 3), h

@@ -1,0 +1,149 @@
+"""Pallas TPU kernel: chunked Mamba2 SSD scan.
+
+Grid = (batch, heads, chunks) with chunks innermost: the per-(b, h)
+running state (hd, ds) lives in a VMEM scratch buffer across the
+sequential chunk iterations — the HBM traffic is exactly one pass over
+x/dt/B/C and one write of y (plus the final state), i.e. the kernel is
+bandwidth-optimal for the SSD recurrence. Within a chunk the quadratic
+"duality" form runs on the MXU: (Q,ds)x(ds,Q) and (Q,Q)x(Q,hd) matmuls.
+
+VMEM working set per step (Q=256, hd=64, ds=128, f32):
+  x (Q,hd) 64K + B/C (Q,ds) 2*128K + att (Q,Q) 256K + state (hd,ds) 32K
+  ~= 0.6 MiB  << ~16 MiB/core.
+
+Shapes (kernel layout, produced by the ssd_pallas wrapper):
+  x   (B, NH, nc, Q, hd)
+  dt  (B, NH, nc, Q)      positive step sizes
+  adt (B, NH, nc, Q)      dt * A  (negative log-decays)
+  Bm  (B, nc, Q, ds)      shared across heads (single SSM group)
+  Cm  (B, nc, Q, ds)
+  h0  (B, NH, hd, ds)     initial state
+outputs
+  y   (B, NH, nc, Q, hd)
+  hT  (B, NH, hd, ds)
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(
+    x_ref, dt_ref, adt_ref, b_ref, c_ref, h0_ref,
+    y_ref, hT_ref,
+    state,  # VMEM scratch (hd, ds) f32
+    *, num_chunks: int,
+):
+    c_idx = pl.program_id(2)
+
+    @pl.when(c_idx == 0)
+    def _load_init():
+        state[...] = h0_ref[0, 0].astype(jnp.float32)
+
+    x = x_ref[0, 0, 0].astype(jnp.float32)  # (Q, hd)
+    dt = dt_ref[0, 0, 0].astype(jnp.float32)  # (Q,)
+    adt = adt_ref[0, 0, 0].astype(jnp.float32)  # (Q,)
+    Bm = b_ref[0, 0].astype(jnp.float32)  # (Q, ds)
+    Cm = c_ref[0, 0].astype(jnp.float32)  # (Q, ds)
+    Q = x.shape[0]
+
+    cum = jnp.cumsum(adt)  # (Q,)
+    # --- intra-chunk quadratic form ---
+    cb = jax.lax.dot_general(
+        Cm, Bm, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # (Q, Q) = C B^T
+    decay = jnp.exp(jnp.minimum(cum[:, None] - cum[None, :], 0.0))
+    att = cb * decay * dt[None, :]
+    row = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    att = jnp.where(row >= col, att, 0.0)
+    y = jax.lax.dot_general(
+        att, x, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # (Q, hd)
+    # --- inter-chunk: carried state contribution ---
+    h = state[...]
+    y += jnp.exp(cum)[:, None] * jax.lax.dot_general(
+        Cm, h, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # (Q, ds) x (hd, ds)^T -> (Q, hd)
+    y_ref[0, 0, 0] = y.astype(y_ref.dtype)
+    # --- state update ---
+    total = cum[-1]
+    w = jnp.exp(total - cum) * dt  # (Q,)
+    state[...] = jnp.exp(total) * h + jax.lax.dot_general(
+        x * w[:, None], Bm, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # (hd, ds)
+
+    @pl.when(c_idx == num_chunks - 1)
+    def _write_final():
+        hT_ref[0, 0] = state[...]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_pallas(
+    x: jax.Array,  # (b, s, nh, hd)
+    dt: jax.Array,  # (b, s, nh)
+    A: jax.Array,  # (nh,)
+    B: jax.Array,  # (b, s, ds)
+    C: jax.Array,  # (b, s, ds)
+    *,
+    chunk: int = 256,
+    initial_state: jax.Array | None = None,
+    interpret: bool = False,
+):
+    b, s, nh, hd = x.shape
+    ds = B.shape[-1]
+    chunk = min(chunk, s)
+    pad = (-s) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    sp = s + pad
+    nc = sp // chunk
+
+    xt = x.transpose(0, 2, 1, 3).reshape(b, nh, nc, chunk, hd)
+    dtt = dt.transpose(0, 2, 1).reshape(b, nh, nc, chunk)
+    adt = dtt * A[None, :, None, None].astype(dtt.dtype)
+    Bm = B.reshape(b, nc, chunk, ds)
+    Cm = C.reshape(b, nc, chunk, ds)
+    h0 = (
+        jnp.zeros((b, nh, hd, ds), jnp.float32)
+        if initial_state is None
+        else initial_state.astype(jnp.float32)
+    )
+
+    kern = functools.partial(_ssd_kernel, num_chunks=nc)
+    y, hT = pl.pallas_call(
+        kern,
+        grid=(b, nh, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, chunk, hd), lambda i, j, c: (i, j, c, 0, 0)),
+            pl.BlockSpec((1, 1, 1, chunk), lambda i, j, c: (i, j, c, 0)),
+            pl.BlockSpec((1, 1, 1, chunk), lambda i, j, c: (i, j, c, 0)),
+            pl.BlockSpec((1, 1, chunk, ds), lambda i, j, c: (i, c, 0, 0)),
+            pl.BlockSpec((1, 1, chunk, ds), lambda i, j, c: (i, c, 0, 0)),
+            pl.BlockSpec((1, 1, hd, ds), lambda i, j, c: (i, j, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, chunk, hd), lambda i, j, c: (i, j, c, 0, 0)),
+            pl.BlockSpec((1, 1, hd, ds), lambda i, j, c: (i, j, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, nh, nc, chunk, hd), x.dtype),
+            jax.ShapeDtypeStruct((b, nh, hd, ds), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((hd, ds), jnp.float32)],
+        interpret=interpret,
+    )(xt, dtt, adt, Bm, Cm, h0)
+    y = y.reshape(b, nh, sp, hd).transpose(0, 2, 1, 3)[:, :s]
+    return y, hT

@@ -1,0 +1,10 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any jax-touching import: jax locks
+# the device count at first backend initialization, and the production
+# meshes below need 512 placeholder host devices.
+
+from repro.launch.dryrun_lib import main  # noqa: E402
+
+if __name__ == "__main__":
+    main()

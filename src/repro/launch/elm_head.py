@@ -1,0 +1,101 @@
+"""DC-ELM head training launcher — the paper's algorithm as a first-class
+feature on the production stack.
+
+Freezes a backbone, streams each node's local token shard through it,
+accumulates per-node ELM statistics (gram kernel), solves the local
+ridge systems, and runs the paper's gossip iterations until the vocab
+readouts agree across nodes. Compares against the fusion-center solution
+(exact) to report consensus quality.
+
+Example (CPU smoke):
+  PYTHONPATH=src python -m repro.launch.elm_head --arch gemma2-2b \
+      --reduced --nodes 4 --batches 4 --iters 200
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get as get_config
+from repro.core import consensus, dc_elm, fusion_elm
+from repro.data.lm import TokenStream
+from repro.kernels import gram_ops
+from repro.models import Model
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description="DC-ELM head trainer")
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--nodes", type=int, default=4)
+    ap.add_argument("--batches", type=int, default=4, help="chunks per node")
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--iters", type=int, default=200)
+    ap.add_argument("--C", type=float, default=16.0)
+    ap.add_argument("--graph", default="ring")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    V = args.nodes
+    model = Model(cfg)
+    params = model.init(jax.random.key(args.seed))  # frozen backbone
+    d, vocab = cfg.d_model, cfg.vocab_size
+
+    feats = jax.jit(model.features)
+    stream = TokenStream(cfg.vocab_size, args.seed)
+    rng = np.random.default_rng(args.seed)
+
+    P_ = np.zeros((V, d, d), np.float32)
+    Q_ = np.zeros((V, d, vocab), np.float32)
+    for i in range(V):
+        for _ in range(args.batches):
+            toks = stream.sample(rng, args.batch, args.seq)
+            batch = {
+                "tokens": jnp.asarray(toks[:, :-1], jnp.int32),
+                "labels": jnp.asarray(toks[:, 1:], jnp.int32),
+            }
+            if cfg.family == "vlm":
+                batch["image_embeds"] = jnp.zeros(
+                    (args.batch, cfg.frontend_tokens, cfg.d_model),
+                    jnp.dtype(cfg.dtype),
+                )
+            h = feats(params, batch).astype(jnp.float32).reshape(-1, d)
+            labels = batch["labels"].reshape(-1)
+            P_[i] += np.asarray(gram_ops.gram(h))
+            Q_[i] += np.asarray(
+                jax.ops.segment_sum(h, labels, num_segments=vocab).T
+            )
+
+    P_, Q_ = jnp.asarray(P_), jnp.asarray(Q_)
+    graph = consensus.build(args.graph, V)
+    state = dc_elm.simulate_init_from_stats(P_, Q_, args.C)
+    beta_star = dc_elm.centralized_from_node_stats(P_, Q_, args.C)
+    d0 = float(dc_elm.distance_to(state.betas, beta_star))
+    final, _ = dc_elm.simulate_run(
+        state, graph, graph.default_gamma(), args.C, args.iters
+    )
+    d1 = float(dc_elm.distance_to(final.betas, beta_star))
+    cons = float(dc_elm.consensus_error(final.betas))
+    fusion = fusion_elm.solve(jnp.sum(P_, 0), jnp.sum(Q_, 0), args.C)
+    fusion_err = float(
+        jnp.max(jnp.abs(fusion - beta_star)) / (1 + jnp.max(jnp.abs(beta_star)))
+    )
+    print(
+        f"V={V} graph={graph.name} lambda2={graph.algebraic_connectivity:.3f}"
+    )
+    print(f"distance to centralized: {d0:.4f} -> {d1:.4f} ({args.iters} iters)")
+    print(f"consensus disagreement:  {cons:.5f}")
+    print(f"fusion-center check:     {fusion_err:.2e} (exact by construction)")
+    return d1
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,99 @@
+"""ShapeDtypeStruct input templates for every (arch x shape) combination.
+
+``input_specs`` returns weak-type-correct, shardable stand-ins — no
+device allocation — for the dry-run's .lower() calls, mirroring exactly
+what launch/train.py and launch/serve.py feed at runtime.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import INPUT_SHAPES, ArchConfig, InputShape
+from repro.distributed import sharding as shd
+from repro.distributed.steps import TrainState
+from repro.models import Model
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def train_batch_specs(
+    cfg: ArchConfig, shape: InputShape, node_count: int
+) -> dict:
+    """(V, b, S) token batches; VLM gets patch embeddings prepended."""
+    V = max(node_count, 1)
+    if shape.global_batch % V:
+        raise ValueError(
+            f"global_batch {shape.global_batch} not divisible by V={V}"
+        )
+    b = shape.global_batch // V
+    S = shape.seq_len
+    if cfg.family == "vlm":
+        text = S - cfg.frontend_tokens
+        return {
+            "tokens": sds((V, b, text), jnp.int32),
+            "labels": sds((V, b, text), jnp.int32),
+            "image_embeds": sds(
+                (V, b, cfg.frontend_tokens, cfg.d_model), jnp.dtype(cfg.dtype)
+            ),
+        }
+    return {
+        "tokens": sds((V, b, S), jnp.int32),
+        "labels": sds((V, b, S), jnp.int32),
+    }
+
+
+def prefill_batch_specs(cfg: ArchConfig, shape: InputShape) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.family == "vlm":
+        text = S - cfg.frontend_tokens
+        return {
+            "tokens": sds((B, text), jnp.int32),
+            "image_embeds": sds(
+                (B, cfg.frontend_tokens, cfg.d_model), jnp.dtype(cfg.dtype)
+            ),
+        }
+    return {"tokens": sds((B, S), jnp.int32)}
+
+
+def decode_specs(cfg: ArchConfig, shape: InputShape):
+    """(cache template, one-token batch) for serve_step."""
+    model = Model(cfg)
+    B, S = shape.global_batch, shape.seq_len
+    cache = jax.eval_shape(
+        functools.partial(model.init_cache, B, S, pos=0)
+    )
+    tokens = sds((B, 1), jnp.int32)
+    return cache, tokens
+
+
+def params_specs(cfg: ArchConfig, *, node_count: int | None = None):
+    """Param template; node_count=None -> serve layout (no V dim)."""
+    model = Model(cfg)
+    shapes = jax.eval_shape(model.init, jax.random.key(0))
+    if node_count is None:
+        return shapes
+    V = max(node_count, 1)
+    return jax.tree.map(
+        lambda s: sds((V,) + s.shape, s.dtype), shapes
+    )
+
+
+def applicable(cfg: ArchConfig, shape: InputShape) -> tuple[bool, str]:
+    """The DESIGN.md §6 applicability rule."""
+    if shape.name == "long_500k" and not cfg.uses_subquadratic_decode:
+        return False, "pure full-attention arch: no sub-quadratic decode path"
+    return True, ""
+
+
+def all_combinations():
+    from repro.configs import registry
+
+    for arch, cfg in registry().items():
+        for shape in INPUT_SHAPES.values():
+            yield cfg, shape

@@ -1,0 +1,121 @@
+"""Consensus (DC) training launcher.
+
+Runs decentralized consensus training (the paper's mixing rule on deep
+nets, DESIGN.md §3) for any assigned architecture on whatever devices
+exist — the production entry point is identical, just with a real TPU
+mesh instead of the host mesh.
+
+Example (CPU smoke, reduced config):
+  PYTHONPATH=src python -m repro.launch.train --arch gemma2-2b --reduced \
+      --steps 20 --batch 4 --seq 64 --devices 1x1
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get as get_config
+from repro.data.lm import TokenStream
+from repro.distributed.steps import jit_train_step, make_train_bundle
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.optim import adamw, linear_warmup_cosine
+from repro import ckpt as ckpt_lib
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description="DC consensus trainer")
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8, help="per-node batch")
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--gamma", type=float, default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument(
+        "--devices", default="1x1",
+        help="data x model for the host mesh, or 'production'/'multipod'",
+    )
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    if args.devices == "production":
+        mesh = make_production_mesh()
+    elif args.devices == "multipod":
+        mesh = make_production_mesh(multi_pod=True)
+    else:
+        d, m = (int(x) for x in args.devices.split("x"))
+        mesh = make_host_mesh(d, m)
+
+    opt = adamw(linear_warmup_cosine(args.lr, 10, args.steps))
+    bundle = make_train_bundle(cfg, mesh, opt, gamma=args.gamma, seed=args.seed)
+    V = bundle.node_count
+    print(
+        f"arch={cfg.name} V={V} nodes gamma={bundle.gamma:.4f} "
+        f"params/node={cfg.param_count():,}"
+    )
+    state = bundle.init_fn(jax.random.key(args.seed))
+    start_step = 0
+    if args.ckpt_dir:
+        latest = ckpt_lib.latest_step(args.ckpt_dir)
+        if latest is not None:
+            import os
+
+            path = os.path.join(args.ckpt_dir, f"step_{latest:08d}.npz")
+            params = ckpt_lib.load_pytree(path, state.params)
+            state = state._replace(params=jax.device_put(
+                params, bundle.state_shardings.params
+            ))
+            start_step = latest
+            print(f"resumed from {path} at step {latest}")
+
+    stream = TokenStream(cfg.vocab_size, args.seed)
+    rng = np.random.default_rng(args.seed)
+
+    def next_batch():
+        toks = stream.sample(rng, V * args.batch, args.seq)
+        toks = toks.reshape(V, args.batch, args.seq + 1)
+        batch = {
+            "tokens": jnp.asarray(toks[..., :-1], jnp.int32),
+            "labels": jnp.asarray(toks[..., 1:], jnp.int32),
+        }
+        if cfg.family == "vlm":
+            batch["image_embeds"] = jnp.zeros(
+                (V, args.batch, cfg.frontend_tokens, cfg.d_model),
+                jnp.dtype(cfg.dtype),
+            )
+        return batch
+
+    batch = next_batch()
+    batch_shape = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), batch
+    )
+    step_fn = jit_train_step(bundle, mesh, batch_shape)
+
+    t0 = time.time()
+    for i in range(start_step, args.steps):
+        state, metrics = step_fn(state, batch)
+        batch = next_batch()
+        if args.log_every and (i % args.log_every == 0 or i == args.steps - 1):
+            loss = float(jnp.mean(metrics["loss"]))
+            print(f"step {i:5d} loss {loss:.4f} ({time.time()-t0:.1f}s)")
+        if args.ckpt_every and args.ckpt_dir and (i + 1) % args.ckpt_every == 0:
+            path = ckpt_lib.save_pytree(args.ckpt_dir, i + 1, state.params)
+            print(f"  saved {path}")
+    final_loss = float(jnp.mean(metrics["loss"]))
+    print(f"done: final loss {final_loss:.4f}")
+    return final_loss
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,327 @@
+"""Attention: GQA, sliding-window, local/global, softcap, KV-cache decode.
+
+Training/prefill uses a chunked online-softmax ("flash-style") attention
+written in pure JAX so that it lowers everywhere (the Pallas TPU kernel
+in kernels/attn.py has identical semantics and is swapped in by ops.py on
+TPU backends). Memory stays O(S * chunk) instead of O(S^2).
+
+Layouts:
+  x          (B, S, D)
+  q          (B, S, K, G, hd)   K = kv heads, G = H // K query groups
+  k, v       (B, S, K, hd)
+  out        (B, S, D)
+
+Sliding-window layers use an exact banded gather (no wasted blocks);
+full causal layers scan all KV chunks with per-block masks (the known
+2x block waste of maskless scanning is recorded in EXPERIMENTS §Perf and
+eliminated in the Pallas kernel by grid skipping).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.layers import softcap as _softcap
+from repro.models.rope import apply_rope
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+
+def init_attention(key, d: int, H: int, K: int, hd: int, bias: bool, dtype):
+    ks = jax.random.split(key, 4)
+    s = d ** -0.5
+    p = {
+        "wq": (jax.random.normal(ks[0], (d, H, hd)) * s).astype(dtype),
+        "wk": (jax.random.normal(ks[1], (d, K, hd)) * s).astype(dtype),
+        "wv": (jax.random.normal(ks[2], (d, K, hd)) * s).astype(dtype),
+        "wo": (jax.random.normal(ks[3], (H, hd, d)) * ((H * hd) ** -0.5)).astype(
+            dtype
+        ),
+    }
+    if bias:
+        p["bq"] = jnp.zeros((H, hd), dtype)
+        p["bk"] = jnp.zeros((K, hd), dtype)
+        p["bv"] = jnp.zeros((K, hd), dtype)
+    return p
+
+
+def qkv_project(p, x, H: int, K: int, theta: float, positions):
+    """x (B,S,D) -> q (B,S,K,G,hd), k,v (B,S,K,hd), RoPE applied."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if "bq" in p:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    q = apply_rope(q, positions, theta)
+    k = apply_rope(k, positions, theta)
+    B, S, _, hd = k.shape
+    q = q.reshape(B, S, K, H // K, hd)
+    return q, k, v
+
+
+def out_project(p, attn_out):
+    """(B, S, K, G, hd) -> (B, S, D)."""
+    B, S, K, G, hd = attn_out.shape
+    return jnp.einsum(
+        "bshk,hkd->bsd", attn_out.reshape(B, S, K * G, hd), p["wo"]
+    )
+
+
+# ---------------------------------------------------------------------------
+# Chunked (flash-style) attention for train / prefill
+# ---------------------------------------------------------------------------
+
+
+def _block_attend(q, k, v, mask, cap: float, scale: float):
+    """One (Cq x Ck) block. Returns (raw weighted values, block max, block sum).
+
+    q (B,Cq,K,G,hd), k/v (B,Ck,K,hd), mask (Cq,Ck) or None.
+    """
+    logits = jnp.einsum(
+        "bqkgh,bskh->bkgqs", q, k, preferred_element_type=jnp.float32
+    )
+    logits = logits * scale
+    if cap:
+        logits = _softcap(logits, cap)
+    if mask is not None:
+        logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+    m = jnp.max(logits, axis=-1)  # (B,K,G,Cq)
+    p = jnp.exp(logits - m[..., None])
+    l = jnp.sum(p, axis=-1)
+    o = jnp.einsum("bkgqs,bskh->bqkgh", p.astype(v.dtype), v)
+    return o, m, l
+
+
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    q_positions: jax.Array,  # (Sq,) absolute
+    k_positions: jax.Array,  # (Sk,) absolute
+    causal: bool = True,
+    window: int | None = None,
+    attn_softcap: float = 0.0,
+    q_chunk: int = 512,
+    k_chunk: int = 512,
+) -> jax.Array:
+    """Chunked online-softmax attention. Returns (B, Sq, K, G, hd)."""
+    B, Sq, K, G, hd = q.shape
+    Sk = k.shape[1]
+    scale = hd ** -0.5
+    q_chunk = min(q_chunk, Sq)
+    k_chunk = min(k_chunk, Sk)
+    if Sq % q_chunk or Sk % k_chunk:
+        raise ValueError(f"chunk sizes must divide seq: {Sq}%{q_chunk}, {Sk}%{k_chunk}")
+    nq, nk = Sq // q_chunk, Sk // k_chunk
+
+    if window is not None:
+        return _banded_attention(
+            q, k, v, q_positions, k_positions, window, attn_softcap,
+            q_chunk, scale,
+        )
+
+    qr = q.reshape(B, nq, q_chunk, K, G, hd)
+    qp = q_positions.reshape(nq, q_chunk)
+    kr = k.reshape(B, nk, k_chunk, K, hd).transpose(1, 0, 2, 3, 4)
+    vr = v.reshape(B, nk, k_chunk, K, hd).transpose(1, 0, 2, 3, 4)
+    kp = k_positions.reshape(nk, k_chunk)
+
+    def per_q_chunk(args):
+        qc, qpos = args  # (B,Cq,K,G,hd), (Cq,)
+
+        def per_k_chunk(carry, kv):
+            acc, m, l = carry
+            kc, vc, kpos = kv
+            mask = qpos[:, None] >= kpos[None, :] if causal else None
+            o, bm, bl = _block_attend(qc, kc, vc, mask, attn_softcap, scale)
+            new_m = jnp.maximum(m, bm)
+            r_old = jnp.exp(m - new_m)
+            r_new = jnp.exp(bm - new_m)
+            acc = acc * r_old[..., None].transpose(0, 3, 1, 2, 4) + (
+                o * r_new[..., None].transpose(0, 3, 1, 2, 4)
+            )
+            l = l * r_old + bl * r_new
+            return (acc, new_m, l), None
+
+        acc0 = jnp.zeros(qc.shape, jnp.float32)
+        m0 = jnp.full((B, K, G, qc.shape[1]), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, K, G, qc.shape[1]), jnp.float32)
+        (acc, m, l), _ = lax.scan(per_k_chunk, (acc0, m0, l0), (kr, vr, kp))
+        denom = l[..., None].transpose(0, 3, 1, 2, 4)
+        return (acc / jnp.maximum(denom, 1e-30)).astype(q.dtype)
+
+    out = lax.map(per_q_chunk, (qr.transpose(1, 0, 2, 3, 4, 5), qp))
+    return out.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sq, K, G, hd)
+
+
+def _banded_attention(
+    q, k, v, q_positions, k_positions, window, cap, q_chunk, scale
+):
+    """Exact sliding-window attention: each q chunk gathers its KV band.
+
+    Band width = window + q_chunk (static), so FLOPs are O(S * window).
+    Assumes q and k cover the same contiguous positions (train/prefill).
+    """
+    B, Sq, K, G, hd = q.shape
+    nq = Sq // q_chunk
+    band = window + q_chunk
+
+    # pad KV on the left so every band gather is in range
+    pad = band
+    kpad = jnp.pad(k, ((0, 0), (pad, 0), (0, 0), (0, 0)))
+    vpad = jnp.pad(v, ((0, 0), (pad, 0), (0, 0), (0, 0)))
+    kpos_pad = jnp.pad(k_positions, (pad, 0), constant_values=-1_000_000_000)
+
+    qr = q.reshape(B, nq, q_chunk, K, G, hd)
+    qp = q_positions.reshape(nq, q_chunk)
+
+    def per_q_chunk(i, qc, qpos):
+        start = i * q_chunk + pad - window  # leftmost needed kv (padded idx)
+        kb = lax.dynamic_slice_in_dim(kpad, start, band, axis=1)
+        vb = lax.dynamic_slice_in_dim(vpad, start, band, axis=1)
+        kp = lax.dynamic_slice_in_dim(kpos_pad, start, band, axis=0)
+        mask = (qpos[:, None] >= kp[None, :]) & (
+            qpos[:, None] - kp[None, :] < window
+        )
+        o, m, l = _block_attend(qc, kb, vb, mask, cap, scale)
+        denom = l[..., None].transpose(0, 3, 1, 2, 4)
+        return (o / jnp.maximum(denom, 1e-30)).astype(q.dtype)
+
+    out = lax.map(
+        lambda args: per_q_chunk(*args),
+        (jnp.arange(nq), qr.transpose(1, 0, 2, 3, 4, 5), qp),
+    )
+    return out.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sq, K, G, hd)
+
+
+# ---------------------------------------------------------------------------
+# KV cache + decode
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class KVCache:
+    """Per-layer-stack KV cache.
+
+    k, v: (L, B, S_cache, K, hd) — S_cache = window for SWA layers (ring
+    buffer), else max sequence length. RoPE is pre-applied to stored k.
+    pos:  () int32 — absolute position of the next token.
+    """
+
+    k: jax.Array
+    v: jax.Array
+    pos: jax.Array
+
+    @property
+    def s_cache(self) -> int:
+        return self.k.shape[2]
+
+
+def init_cache(L: int, B: int, s_cache: int, K: int, hd: int, dtype) -> KVCache:
+    return KVCache(
+        k=jnp.zeros((L, B, s_cache, K, hd), dtype),
+        v=jnp.zeros((L, B, s_cache, K, hd), dtype),
+        pos=jnp.zeros((), jnp.int32),
+    )
+
+
+def cache_slot_positions(s_cache: int, pos: jax.Array) -> jax.Array:
+    """Absolute position stored in each ring-buffer slot after writing pos.
+
+    slot i holds the largest p <= pos with p % s_cache == i; slots never
+    written yet get a negative position (masked out). pos may be a
+    scalar (synchronized batch) or (B,) (ragged slots — continuous
+    batching); the result broadcasts accordingly.
+    """
+    i = jnp.arange(s_cache)
+    pos = jnp.asarray(pos)
+    if pos.ndim:  # (B,) -> (B, s_cache)
+        p = pos[:, None] - ((pos[:, None] - i[None]) % s_cache)
+    else:
+        p = pos - ((pos - i) % s_cache)
+    return jnp.where(p >= 0, p, -1_000_000_000)
+
+
+def decode_update_layer(
+    cache_k, cache_v, k_new, v_new, pos, *, windowed: bool
+):
+    """Write one token's (B,1,K,hd) KV at absolute `pos` into (B,Sc,K,hd).
+
+    pos scalar: synchronized write; pos (B,): per-row (ragged) write.
+    """
+    Sc = cache_k.shape[1]
+    pos = jnp.asarray(pos)
+    if pos.ndim:  # ragged: per-row scatter
+        slot = (pos % Sc) if windowed else jnp.minimum(pos, Sc - 1)
+        rows = jnp.arange(cache_k.shape[0])
+        ck = cache_k.at[rows, slot].set(k_new[:, 0])
+        cv = cache_v.at[rows, slot].set(v_new[:, 0])
+        return ck, cv
+    slot = (pos % Sc) if windowed else pos
+    ck = lax.dynamic_update_slice_in_dim(cache_k, k_new, slot, axis=1)
+    cv = lax.dynamic_update_slice_in_dim(cache_v, v_new, slot, axis=1)
+    return ck, cv
+
+
+def decode_attend(
+    q, cache_k, cache_v, pos, *, windowed: bool, window, cap: float
+):
+    """Single-token attention over the cache.
+
+    q (B,1,K,G,hd); cache (B,Sc,K,hd); pos = current absolute position,
+    scalar or per-row (B,).
+    """
+    B, _, K, G, hd = q.shape
+    Sc = cache_k.shape[1]
+    scale = hd ** -0.5
+    pos = jnp.asarray(pos)
+    pos_b = pos if pos.ndim else jnp.broadcast_to(pos, (B,))
+    if windowed:
+        kpos = cache_slot_positions(Sc, pos_b)  # (B, Sc)
+    else:
+        idx = jnp.arange(Sc)
+        kpos = jnp.where(idx[None] <= pos_b[:, None], idx[None],
+                         -1_000_000_000)
+    valid = kpos >= 0
+    if window is not None:
+        valid = valid & (pos_b[:, None] - kpos < window)
+    logits = jnp.einsum(
+        "bqkgh,bskh->bkgqs", q, cache_k, preferred_element_type=jnp.float32
+    )
+    logits = logits * scale
+    if cap:
+        logits = _softcap(logits, cap)
+    logits = jnp.where(valid[:, None, None, None], logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bkgqs,bskh->bqkgh", w.astype(cache_v.dtype), cache_v)
+
+
+def prefill_into_cache(k, v, s_cache: int):
+    """Pack a full-prefill (B,S,K,hd) KV into a cache of width s_cache.
+
+    Full cache (s_cache >= S): left-aligned write. Ring cache
+    (s_cache < S): keep the last s_cache tokens at their ring slots.
+    """
+    B, S, K, hd = k.shape
+    if s_cache >= S:
+        pad = ((0, 0), (0, s_cache - S), (0, 0), (0, 0))
+        return jnp.pad(k, pad), jnp.pad(v, pad)
+    # ring: slot i holds abs pos p = last p < S with p % s_cache == i
+    i = jnp.arange(s_cache)
+    last = S - 1
+    p = last - ((last - i) % s_cache)
+    return jnp.take(k, p, axis=1), jnp.take(v, p, axis=1)

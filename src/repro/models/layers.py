@@ -1,0 +1,115 @@
+"""Common neural-net layers (pure functions over param pytrees)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    # (1 + scale) parameterization (gemma-style; zero-init == identity)
+    return (x * (1.0 + scale.astype(jnp.float32))).astype(dtype)
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    """Gemma-2 logit soft-capping: cap * tanh(x / cap)."""
+    return cap * jnp.tanh(x / cap)
+
+
+def init_rms_norm(d: int, dtype=jnp.float32):
+    return jnp.zeros((d,), dtype)
+
+
+_ACT = {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}
+
+
+def glu_mlp(x: jax.Array, p: dict, activation: str = "silu") -> jax.Array:
+    """Gated MLP: act(x Wg) * (x Wu) Wd  (SwiGLU / GeGLU)."""
+    act = _ACT[activation]
+    gate = act(x @ p["w_gate"])
+    up = x @ p["w_up"]
+    return (gate * up) @ p["w_down"]
+
+
+def init_glu_mlp(key: jax.Array, d: int, f: int, dtype=jnp.bfloat16) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in = d ** -0.5
+    s_out = f ** -0.5
+    return {
+        "w_gate": (jax.random.normal(k1, (d, f)) * s_in).astype(dtype),
+        "w_up": (jax.random.normal(k2, (d, f)) * s_in).astype(dtype),
+        "w_down": (jax.random.normal(k3, (f, d)) * s_out).astype(dtype),
+    }
+
+
+def init_embedding(key: jax.Array, vocab: int, d: int, dtype=jnp.bfloat16):
+    return (jax.random.normal(key, (vocab, d)) * (d ** -0.5)).astype(dtype)
+
+
+def embed(tokens: jax.Array, table: jax.Array) -> jax.Array:
+    return jnp.take(table, tokens, axis=0)
+
+
+def unembed(h: jax.Array, table: jax.Array) -> jax.Array:
+    """Logits via tied embedding table (vocab, d)."""
+    return jnp.einsum("...d,vd->...v", h, table)
+
+
+def chunked_cross_entropy(
+    h: jax.Array,  # (B, S, d) final hidden states
+    table: jax.Array,  # (vocab, d) unembedding
+    labels: jax.Array,  # (B, S)
+    *,
+    logit_softcap: float = 0.0,
+    chunk: int = 512,
+    ignore: int = -1,
+) -> jax.Array:
+    """CE without materializing the (B, S, vocab) logits tensor.
+
+    Sequence is processed in chunks under jax.checkpoint: each chunk's
+    logits exist only transiently (forward AND backward), which is what
+    keeps the 256k-vocab architectures inside HBM at 1M-token batches.
+    """
+    B, S, d = h.shape
+    chunk = min(chunk, S)
+    pad = (-S) % chunk
+    if pad:
+        h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=ignore)
+    nc = (S + pad) // chunk
+    hr = h.reshape(B, nc, chunk, d).transpose(1, 0, 2, 3)
+    lr = labels.reshape(B, nc, chunk).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def per_chunk(args):
+        hc, lc = args  # (B, c, d), (B, c)
+        logits = jnp.einsum("bcd,vd->bcv", hc, table).astype(jnp.float32)
+        if logit_softcap:
+            logits = softcap(logits, logit_softcap)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, jnp.maximum(lc, 0)[..., None], axis=-1
+        )[..., 0]
+        mask = (lc != ignore).astype(jnp.float32)
+        return jnp.sum((logz - gold) * mask), jnp.sum(mask)
+
+    sums, counts = jax.lax.map(per_chunk, (hr, lr))
+    return jnp.sum(sums) / jnp.maximum(jnp.sum(counts), 1.0)
+
+
+def cross_entropy(
+    logits: jax.Array, labels: jax.Array, ignore: int = -1
+) -> jax.Array:
+    """Mean CE over positions with label != ignore. logits f32-cast."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(
+        logits, jnp.maximum(labels, 0)[..., None], axis=-1
+    )[..., 0]
+    nll = logz - gold
+    mask = (labels != ignore).astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

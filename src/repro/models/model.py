@@ -1,0 +1,332 @@
+"""Model facade: init / loss / prefill / decode for every arch family.
+
+``Model(cfg)`` is a thin, stateless namespace of pure functions — params
+are explicit pytrees so the distributed layers (consensus training,
+FSDP, dry-run) can shard them freely.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn
+from repro.models import ssm as ssm_lib
+from repro.models import transformer as tfm
+from repro.models.layers import (
+    chunked_cross_entropy,
+    cross_entropy,
+    embed,
+    rms_norm,
+    softcap,
+    unembed,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+
+    # ------------------------------------------------------------------ init
+    def init(self, key: jax.Array) -> dict:
+        return tfm.init_params(key, self.cfg)
+
+    # ------------------------------------------------------------- internals
+    def _logits(self, params: dict, h: jax.Array) -> jax.Array:
+        cfg = self.cfg
+        h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+        table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+        logits = unembed(h, table)
+        if cfg.final_logit_softcap:
+            logits = softcap(logits, cfg.final_logit_softcap)
+        return logits
+
+    def _trunk(self, params, h, positions, *, want_cache: bool):
+        cfg = self.cfg
+        metrics: dict[str, jax.Array] = {}
+        if cfg.family in ("dense", "moe", "vlm", "audio"):
+            h, kvs, metrics = tfm.dense_stack(
+                params, h, positions, cfg, want_kv=want_cache
+            )
+            cache_parts = kvs
+        elif cfg.family == "ssm":
+            h, cache_parts = tfm.ssm_stack(params, h, cfg, want_state=want_cache)
+        elif cfg.family == "hybrid":
+            h, cache_parts = tfm.hybrid_stack(
+                params, h, positions, cfg, want_cache=want_cache
+            )
+        else:
+            raise ValueError(cfg.family)
+        return h, cache_parts, metrics
+
+    def _embed_inputs(self, params: dict, batch: dict) -> tuple[jax.Array, int]:
+        """Returns (h (B,S_total,d), text_offset)."""
+        cfg = self.cfg
+        h = embed(batch["tokens"], params["embed"])
+        if cfg.family == "vlm":
+            img = batch["image_embeds"].astype(h.dtype)
+            h = jnp.concatenate([img, h], axis=1)
+            return h, img.shape[1]
+        return h, 0
+
+    # ------------------------------------------------------------------ loss
+    def loss(self, params: dict, batch: dict):
+        """Next-token CE (+ MoE aux). batch: tokens, labels[, image_embeds]."""
+        cfg = self.cfg
+        h, offset = self._embed_inputs(params, batch)
+        positions = jnp.arange(h.shape[1])
+        h, _, metrics = self._trunk(params, h, positions, want_cache=False)
+        if offset:
+            h = h[:, offset:]
+        h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+        table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+        ce = chunked_cross_entropy(
+            h, table, batch["labels"],
+            logit_softcap=cfg.final_logit_softcap,
+        )
+        total = ce
+        if "moe_aux_loss" in metrics:
+            total = total + cfg.router_aux_coef * metrics["moe_aux_loss"]
+        metrics = dict(metrics, ce=ce)
+        return total, metrics
+
+    # ---------------------------------------------------------------- features
+    def features(self, params: dict, batch: dict) -> jax.Array:
+        """Final-norm hidden states h(x) — the ELM feature map when the
+        backbone is frozen (paper Sec. V "unknown feature mapping")."""
+        h, offset = self._embed_inputs(params, batch)
+        positions = jnp.arange(h.shape[1])
+        h, _, _ = self._trunk(params, h, positions, want_cache=False)
+        if offset:
+            h = h[:, offset:]
+        return rms_norm(h, params["final_norm"], self.cfg.norm_eps)
+
+    # --------------------------------------------------------------- prefill
+    def prefill(self, params: dict, batch: dict, max_seq: int | None = None):
+        """Full forward packing the decode cache.
+
+        max_seq: cache capacity (>= prompt length); leaves headroom for
+        subsequent decode_step calls. Defaults to the prompt length.
+        Returns (last-token logits (B, vocab), cache dict).
+        """
+        cfg = self.cfg
+        h, _offset = self._embed_inputs(params, batch)
+        S = h.shape[1]
+        positions = jnp.arange(S)
+        h, cache_parts, _ = self._trunk(params, h, positions, want_cache=True)
+        logits = self._logits(params, h[:, -1])
+        cache = self._pack_cache(cache_parts, S, max_seq or S)
+        return logits, cache
+
+    def _cache_width(self, S: int, is_local: bool) -> int:
+        cfg = self.cfg
+        if is_local and cfg.sliding_window is not None:
+            return min(cfg.sliding_window, S)
+        return S
+
+    def _pack_cache(self, cache_parts, S: int, max_seq: int) -> dict:
+        cfg = self.cfg
+        pos = jnp.asarray(S, jnp.int32)
+        if cfg.family in ("dense", "moe", "vlm", "audio"):
+            k, v = cache_parts  # (L, B, S, K, hd)
+            flags = tfm._is_local_flags(cfg)
+            if cfg.local_global_period > 0:
+                loc = [i for i in range(cfg.num_layers) if flags[i]]
+                glob = [i for i in range(cfg.num_layers) if not flags[i]]
+                W = self._cache_width(max_seq, True)
+                kl, vl = jax.vmap(
+                    lambda kk, vv: attn.prefill_into_cache(kk, vv, W)
+                )(k[jnp.array(loc)], v[jnp.array(loc)])
+                kg, vg = jax.vmap(
+                    lambda kk, vv: attn.prefill_into_cache(kk, vv, max_seq)
+                )(k[jnp.array(glob)], v[jnp.array(glob)])
+                return {
+                    "k_local": kl, "v_local": vl,
+                    "k_global": kg, "v_global": vg,
+                    "pos": pos,
+                }
+            W = self._cache_width(
+                max_seq, cfg.sliding_window is not None
+            )
+            k, v = jax.vmap(
+                lambda kk, vv: attn.prefill_into_cache(kk, vv, W)
+            )(k, v)
+            return {"k": k, "v": v, "pos": pos}
+        if cfg.family == "ssm":
+            states, conv_tails = cache_parts
+            return {"state": states, "conv": conv_tails, "pos": pos}
+        # hybrid
+        (states, conv_tails), (sk, sv) = cache_parts
+        sk, sv = jax.vmap(
+            lambda kk, vv: attn.prefill_into_cache(kk, vv, max_seq)
+        )(sk, sv)
+        return {
+            "state": states, "conv": conv_tails,
+            "k_shared": sk, "v_shared": sv, "pos": pos,
+        }
+
+    # ------------------------------------------------------------ init_cache
+    def init_cache(
+        self, B: int, max_seq: int, *, pos: int = 0, ragged: bool = False
+    ) -> dict:
+        """Empty (or position-`pos`) decode cache with static shapes.
+
+        ragged=True keeps a per-row (B,) position vector — each batch
+        slot advances independently (continuous batching, serving/).
+        """
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        L, K, hd = cfg.num_layers, cfg.num_kv_heads, cfg.head_dim
+        p = (
+            jnp.full((B,), pos, jnp.int32)
+            if ragged
+            else jnp.asarray(pos, jnp.int32)
+        )
+        if cfg.family in ("dense", "moe", "vlm", "audio"):
+            if cfg.local_global_period > 0:
+                flags = tfm._is_local_flags(cfg)
+                n_loc = int(flags.sum())
+                n_glob = L - n_loc
+                W = self._cache_width(max_seq, True)
+                return {
+                    "k_local": jnp.zeros((n_loc, B, W, K, hd), dt),
+                    "v_local": jnp.zeros((n_loc, B, W, K, hd), dt),
+                    "k_global": jnp.zeros((n_glob, B, max_seq, K, hd), dt),
+                    "v_global": jnp.zeros((n_glob, B, max_seq, K, hd), dt),
+                    "pos": p,
+                }
+            W = self._cache_width(max_seq, cfg.sliding_window is not None)
+            return {
+                "k": jnp.zeros((L, B, W, K, hd), dt),
+                "v": jnp.zeros((L, B, W, K, hd), dt),
+                "pos": p,
+            }
+        if cfg.family == "ssm":
+            c = ssm_lib.init_ssm_cache(cfg, L, B, dt)
+            return {"state": c["state"], "conv": c["conv"], "pos": p}
+        # hybrid
+        napp = len(range(0, L, cfg.hybrid_attn_every))
+        c = ssm_lib.init_ssm_cache(cfg, L, B, dt)
+        return {
+            "state": c["state"], "conv": c["conv"],
+            "k_shared": jnp.zeros((napp, B, max_seq, K, hd), dt),
+            "v_shared": jnp.zeros((napp, B, max_seq, K, hd), dt),
+            "pos": p,
+        }
+
+    # ----------------------------------------------------------- decode step
+    def decode_step(self, params: dict, cache: dict, tokens: jax.Array):
+        """One token for the whole batch. tokens (B, 1) -> logits (B, vocab)."""
+        cfg = self.cfg
+        pos = cache["pos"]
+        h = embed(tokens, params["embed"])
+        if cfg.family in ("dense", "moe", "vlm", "audio"):
+            h, cache = self._decode_dense(params, h, pos, cache)
+        elif cfg.family == "ssm":
+            h, cache = self._decode_ssm(params, h, cache)
+        else:
+            h, cache = self._decode_hybrid(params, h, pos, cache)
+        cache = dict(cache, pos=pos + 1)
+        logits = self._logits(params, h[:, 0])
+        return logits, cache
+
+    def _decode_dense(self, params, h, pos, cache):
+        cfg = self.cfg
+        if cfg.local_global_period > 0:
+            return self._decode_mixed(params, h, pos, cache)
+        windowed = cfg.sliding_window is not None
+
+        def body(carry, xs):
+            p, ck, cv = xs
+            new_h, ck, cv = tfm.dense_block_decode(
+                p, carry, pos, ck, cv, cfg, windowed=windowed
+            )
+            return new_h, (ck, cv)
+
+        h, (ck, cv) = lax.scan(body, h, (params["layers"], cache["k"], cache["v"]))
+        return h, dict(cache, k=ck, v=cv)
+
+    def _decode_mixed(self, params, h, pos, cache):
+        """gemma2: alternating local/global layers, two cache stacks."""
+        cfg = self.cfg
+        flags = tfm._is_local_flags(cfg)
+        kl, vl = cache["k_local"], cache["v_local"]
+        kg, vg = cache["k_global"], cache["v_global"]
+        il = ig = 0
+        for i in range(cfg.num_layers):
+            p = jax.tree.map(lambda x: x[i], params["layers"])
+            if bool(flags[i]):
+                h, ck, cv = tfm.dense_block_decode(
+                    p, h, pos, kl[il], vl[il], cfg, windowed=True
+                )
+                kl, vl = kl.at[il].set(ck), vl.at[il].set(cv)
+                il += 1
+            else:
+                h, ck, cv = tfm.dense_block_decode(
+                    p, h, pos, kg[ig], vg[ig], cfg, windowed=False
+                )
+                kg, vg = kg.at[ig].set(ck), vg.at[ig].set(cv)
+                ig += 1
+        return h, dict(
+            cache, k_local=kl, v_local=vl, k_global=kg, v_global=vg
+        )
+
+    def _decode_ssm(self, params, h, cache):
+        cfg = self.cfg
+
+        def body(carry, xs):
+            p, conv, state = xs
+            hn = rms_norm(carry, p["ln"], cfg.norm_eps)
+            out, conv, state = ssm_lib.mamba_decode_step(
+                p["mamba"], hn, conv, state, cfg
+            )
+            return carry + out, (conv, state)
+
+        h, (conv, state) = lax.scan(
+            body, h, (params["layers"], cache["conv"], cache["state"])
+        )
+        return h, dict(cache, conv=conv, state=state)
+
+    def _decode_hybrid(self, params, h, pos, cache):
+        cfg = self.cfg
+        L, k = cfg.num_layers, cfg.hybrid_attn_every
+        conv, state = cache["conv"], cache["state"]
+        sk, sv = cache["k_shared"], cache["v_shared"]
+
+        def seg_body(carry, xs):
+            p, cv_, st_ = xs
+            hn = rms_norm(carry, p["ln"], cfg.norm_eps)
+            out, cv_, st_ = ssm_lib.mamba_decode_step(
+                p["mamba"], hn, cv_, st_, cfg
+            )
+            return carry + out, (cv_, st_)
+
+        new_conv, new_state = [], []
+        for si, start in enumerate(range(0, L, k)):
+            end = min(start + k, L)
+            h, ck, cvv = tfm.dense_block_decode(
+                params["shared"], h, pos, sk[si], sv[si], cfg, windowed=False
+            )
+            sk, sv = sk.at[si].set(ck), sv.at[si].set(cvv)
+            seg = lambda x: x[start:end]
+            h, (c_, s_) = lax.scan(
+                seg_body, h,
+                (
+                    jax.tree.map(seg, params["layers"]),
+                    jax.tree.map(seg, conv),
+                    seg(state),
+                ),
+            )
+            new_conv.append(c_)
+            new_state.append(s_)
+        return h, dict(
+            cache,
+            conv=jax.tree.map(lambda *xs: jnp.concatenate(xs, 0), *new_conv),
+            state=jnp.concatenate(new_state, 0),
+            k_shared=sk, v_shared=sv,
+        )

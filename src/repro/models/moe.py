@@ -1,0 +1,104 @@
+"""Mixture-of-Experts layer: top-k router + capacity-based scatter dispatch.
+
+TPU-idiomatic dense-dispatch design (MaxText-style): tokens are scattered
+into an (E, C, d) buffer (C = capacity), experts run as one grouped
+einsum on the MXU, results gather back with router weights. FLOPs scale
+with top-k (active experts), not with E — matching the paper-roofline
+MODEL_FLOPS = 6 * N_active * D accounting.
+
+Dispatch bookkeeping is strictly PER SEQUENCE (the batch dim is kept as
+a leading axis through the one-hot cumsum and the scatter), so the whole
+dispatch/combine stays local to each data shard — the global-cumsum
+formulation forced XLA to all-reduce (E, C_global, d) partial scatter
+buffers across the data axis (~43 GB f32 per grok layer; see
+EXPERIMENTS.md §Perf iteration B2, which removed it).
+
+Sharding: the expert dimension E is sharded over the "model" axis when
+E divides it (dbrx: 16 | 16 -> true expert parallelism, GSPMD inserts
+the all-to-all at the dispatch/combine reshards); otherwise d_ff is
+sharded over "model" (grok: 8 experts < 16 chips -> tensor-parallel
+experts). See distributed/sharding.py.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init_moe(key, d: int, f: int, E: int, dtype):
+    ks = jax.random.split(key, 4)
+    s_in, s_out = d ** -0.5, f ** -0.5
+    return {
+        "router": (jax.random.normal(ks[0], (d, E)) * s_in).astype(jnp.float32),
+        "w_gate": (jax.random.normal(ks[1], (E, d, f)) * s_in).astype(dtype),
+        "w_up": (jax.random.normal(ks[2], (E, d, f)) * s_in).astype(dtype),
+        "w_down": (jax.random.normal(ks[3], (E, f, d)) * s_out).astype(dtype),
+    }
+
+
+def moe_ffn(
+    p: dict,
+    x: jax.Array,  # (B, S, d)
+    *,
+    top_k: int,
+    capacity_factor: float = 1.25,
+    activation=jax.nn.silu,
+):
+    """Returns (out (B,S,d), aux_metrics dict incl. load-balance loss)."""
+    B, S, d = x.shape
+    E = p["router"].shape[-1]
+
+    # --- route (per token) ---
+    logits = (x.astype(jnp.float32) @ p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)  # (B, S, E)
+    gate_vals, expert_idx = jax.lax.top_k(probs, top_k)  # (B, S, k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # --- load-balance auxiliary loss (Switch-style) ---
+    assign = jax.nn.one_hot(expert_idx, E, dtype=jnp.float32)  # (B, S, k, E)
+    frac_tokens = jnp.mean(jnp.sum(assign, axis=2), axis=(0, 1))  # (E,)
+    frac_probs = jnp.mean(probs, axis=(0, 1))  # (E,)
+    aux_loss = E * jnp.sum(frac_tokens * frac_probs) / top_k
+
+    # --- capacity-based dispatch, PER SEQUENCE (shard-local) ---
+    C = max(int(capacity_factor * top_k * S / E), top_k)
+    flat_e = expert_idx.reshape(B, S * top_k)  # (B, N)
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)  # (B, N, E)
+    pos_in_e = jnp.cumsum(onehot, axis=1) - onehot  # (B, N, E)
+    flat_pos = jnp.take_along_axis(pos_in_e, flat_e[..., None], axis=2)[..., 0]
+    keep = flat_pos < C  # (B, N)
+    drop_frac = 1.0 - jnp.mean(keep.astype(jnp.float32))
+    safe_e = jnp.where(keep, flat_e, 0)
+    safe_p = jnp.where(keep, flat_pos, 0)
+
+    tok_idx = jnp.repeat(jnp.arange(S), top_k)  # (N,) source token per slot
+    x_slots = jnp.take(x, tok_idx, axis=1)  # (B, N, d)
+    x_slots = jnp.where(keep[..., None], x_slots, 0).astype(x.dtype)
+
+    def scatter_row(xe, e, pos):
+        buf = jnp.zeros((E, C, xe.shape[-1]), xe.dtype)
+        return buf.at[e, pos].add(xe)
+
+    buf = jax.vmap(scatter_row)(x_slots, safe_e, safe_p)  # (B, E, C, d)
+
+    # --- expert computation (grouped einsum on the MXU) ---
+    gate = activation(jnp.einsum("becd,edf->becf", buf, p["w_gate"]))
+    up = jnp.einsum("becd,edf->becf", buf, p["w_up"])
+    out_buf = jnp.einsum("becf,efd->becd", gate * up, p["w_down"])
+
+    # --- combine: gather expert outputs back to tokens ---
+    def gather_row(ob, e, pos):
+        return ob[e, pos]  # (N, d)
+
+    flat_out = jax.vmap(gather_row)(out_buf, safe_e, safe_p)  # (B, N, d)
+    w = jnp.where(keep, gate_vals.reshape(B, S * top_k), 0.0).astype(x.dtype)
+    flat_out = flat_out * w[..., None]
+    # sum the k slots of each token: (B, S, k, d) -> (B, S, d)
+    combined = jnp.sum(flat_out.reshape(B, S, top_k, d), axis=2)
+
+    metrics = {
+        "moe_aux_loss": aux_loss,
+        "moe_drop_frac": drop_frac,
+    }
+    return combined, metrics

@@ -1,0 +1,31 @@
+"""Rotary position embeddings."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    """(head_dim/2,) inverse frequencies."""
+    return 1.0 / (
+        theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+    )
+
+
+def apply_rope(
+    x: jax.Array, positions: jax.Array, theta: float = 10_000.0
+) -> jax.Array:
+    """x: (B, S, H, hd), positions: (S,) or (B, S) absolute positions."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # (hd/2,)
+    angles = positions.astype(jnp.float32)[..., None] * freqs  # (..., S, hd/2)
+    if angles.ndim == 2:  # (S, hd/2) -> broadcast over batch
+        angles = angles[None]
+    cos = jnp.cos(angles)[:, :, None, :]  # (B, S, 1, hd/2)
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = x[..., : hd // 2], x[..., hd // 2 :]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)

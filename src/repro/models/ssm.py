@@ -1,0 +1,153 @@
+"""Mamba2 (SSD) block — arXiv:2405.21060, single SSM group.
+
+Block: [z|x|B|C|dt] projections; causal depthwise conv + SiLU on x/B/C;
+SSD scan over heads; gated RMSNorm; out_proj. Decode keeps per-component
+conv ring caches and the (nh, hd, ds) SSM state — O(1) memory per token,
+which is what qualifies the SSM/hybrid archs for long_500k.
+
+The five input projections are stored as *separate* matrices (not the
+fused in_proj of the reference CUDA implementation) so that tensor
+parallelism shards cleanly along SSM heads: w_z / w_x / w_dt column-
+shard over the "model" axis (head-major layout), while the small shared
+B/C projections stay replicated. This is the TPU adaptation of Mamba2's
+"heads are embarrassingly parallel" property (DESIGN.md §2).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.kernels.ssd_ops import ssd
+from repro.kernels.ssd_ref import ssd_decode_step
+from repro.models.layers import rms_norm
+
+
+def init_mamba_block(key: jax.Array, cfg: ArchConfig, dtype) -> dict:
+    d, di, ds, nh = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    W = cfg.ssm_conv_width
+    ks = jax.random.split(key, 9)
+    s = d ** -0.5
+    u = jax.random.uniform(ks[0], (nh,), minval=1e-3, maxval=0.1)
+    dt_bias = u + jnp.log(-jnp.expm1(-u))
+    return {
+        "w_z": (jax.random.normal(ks[1], (d, di)) * s).astype(dtype),
+        "w_x": (jax.random.normal(ks[2], (d, di)) * s).astype(dtype),
+        "w_B": (jax.random.normal(ks[3], (d, ds)) * s).astype(dtype),
+        "w_C": (jax.random.normal(ks[4], (d, ds)) * s).astype(dtype),
+        "w_dt": (jax.random.normal(ks[5], (d, nh)) * s).astype(dtype),
+        "conv_x": (jax.random.normal(ks[6], (W, di)) * 0.3).astype(dtype),
+        "conv_B": (jax.random.normal(ks[7], (W, ds)) * 0.3).astype(dtype),
+        "conv_C": (jax.random.normal(ks[8], (W, ds)) * 0.3).astype(dtype),
+        "conv_bx": jnp.zeros((di,), dtype),
+        "conv_bB": jnp.zeros((ds,), dtype),
+        "conv_bC": jnp.zeros((ds,), dtype),
+        "dt_bias": dt_bias.astype(jnp.float32),
+        "A_log": jnp.log(
+            jax.random.uniform(ks[0], (nh,), minval=1.0, maxval=16.0)
+        ).astype(jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "gate_norm": jnp.zeros((di,), jnp.float32),
+        "out_proj": (jax.random.normal(key, (di, d)) * di**-0.5).astype(dtype),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv over (B, S, C) with kernel (W, C) + SiLU."""
+    W = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = None
+    for i in range(W):  # small W: unrolled adds fuse well
+        term = pad[:, i : i + x.shape[1], :] * w[i]
+        out = term if out is None else out + term
+    return jax.nn.silu(out + b)
+
+
+def mamba_forward(
+    p: dict,
+    x: jax.Array,  # (B, S, d)
+    cfg: ArchConfig,
+    *,
+    initial_state: jax.Array | None = None,
+):
+    """Train/prefill path. Returns (out (B,S,d), final state, conv tails)."""
+    di, ds, nh, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    Bsz, S, _ = x.shape
+    z = x @ p["w_z"]
+    xs_raw = x @ p["w_x"]
+    B_raw = x @ p["w_B"]
+    C_raw = x @ p["w_C"]
+    dt = x @ p["w_dt"]
+    W = cfg.ssm_conv_width
+    conv_tails = {
+        "x": xs_raw[:, -(W - 1) :, :],
+        "B": B_raw[:, -(W - 1) :, :],
+        "C": C_raw[:, -(W - 1) :, :],
+    }
+    xs = _causal_conv(xs_raw, p["conv_x"], p["conv_bx"])
+    Bm = _causal_conv(B_raw, p["conv_B"], p["conv_bB"])
+    Cm = _causal_conv(C_raw, p["conv_C"], p["conv_bC"])
+    xs = xs.reshape(Bsz, S, nh, hd)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    y, state = ssd(
+        xs, dt, A, Bm, Cm, chunk=cfg.ssm_chunk, initial_state=initial_state
+    )
+    y = y + p["D"][None, None, :, None] * xs
+    y = y.reshape(Bsz, S, di)
+    y = rms_norm(y * jax.nn.silu(z), p["gate_norm"], cfg.norm_eps)
+    out = (y.astype(x.dtype) @ p["out_proj"]).astype(x.dtype)
+    return out, state, conv_tails
+
+
+def init_ssm_cache(cfg: ArchConfig, L: int, B: int, dtype):
+    """Per-layer-stack decode cache: conv rings + SSM state."""
+    W = cfg.ssm_conv_width
+    return {
+        "conv": {
+            "x": jnp.zeros((L, B, W - 1, cfg.d_inner), dtype),
+            "B": jnp.zeros((L, B, W - 1, cfg.ssm_state), dtype),
+            "C": jnp.zeros((L, B, W - 1, cfg.ssm_state), dtype),
+        },
+        "state": jnp.zeros(
+            (L, B, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state), jnp.float32
+        ),
+    }
+
+
+def _conv_step(hist: jax.Array, new: jax.Array, w: jax.Array, b: jax.Array):
+    """hist (B,W-1,C), new (B,C) -> (conv output (B,C), new hist)."""
+    full = jnp.concatenate([hist, new[:, None, :]], axis=1)  # (B,W,C)
+    out = jnp.einsum("bwc,wc->bc", full, w) + b
+    return jax.nn.silu(out), full[:, 1:, :]
+
+
+def mamba_decode_step(
+    p: dict,
+    x_t: jax.Array,  # (B, 1, d)
+    conv_cache: dict,  # {"x": (B,W-1,di), "B": ..., "C": ...}
+    state: jax.Array,  # (B, nh, hd, ds) f32
+    cfg: ArchConfig,
+):
+    """One-token recurrent step. Returns (out (B,1,d), conv_cache, state)."""
+    di, ds, nh, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    xt = x_t[:, 0]
+    z = xt @ p["w_z"]
+    xs_raw = xt @ p["w_x"]
+    B_raw = xt @ p["w_B"]
+    C_raw = xt @ p["w_C"]
+    dt = jax.nn.softplus(
+        (xt @ p["w_dt"]).astype(jnp.float32) + p["dt_bias"]
+    )
+    xs, cx = _conv_step(conv_cache["x"], xs_raw, p["conv_x"], p["conv_bx"])
+    B_t, cB = _conv_step(conv_cache["B"], B_raw, p["conv_B"], p["conv_bB"])
+    C_t, cC = _conv_step(conv_cache["C"], C_raw, p["conv_C"], p["conv_bC"])
+    xs = xs.reshape(-1, nh, hd)
+    A = -jnp.exp(p["A_log"])
+    new_state, y = ssd_decode_step(state, xs, dt, A, B_t, C_t)
+    y = y + p["D"][None, :, None] * xs
+    y = y.reshape(-1, di)
+    y = rms_norm(y * jax.nn.silu(z), p["gate_norm"], cfg.norm_eps)
+    out = (y.astype(x_t.dtype) @ p["out_proj"]).astype(x_t.dtype)
+    return out[:, None, :], {"x": cx, "B": cB, "C": cC}, new_state

@@ -1,0 +1,119 @@
+"""Minimal gradient-transform optimizers (optax is not installed here).
+
+API mirrors optax: ``opt.init(params) -> state``;
+``opt.update(grads, state, params) -> (updates, new_state)`` where
+updates are *added* to params.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Schedule = Callable[[jax.Array], jax.Array]
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable
+
+
+class SGDState(NamedTuple):
+    step: jax.Array
+    momentum: object
+
+
+def _lr_at(lr, step):
+    return lr(step) if callable(lr) else jnp.asarray(lr)
+
+
+def sgd(lr, momentum: float = 0.0, nesterov: bool = False) -> Optimizer:
+    def init(params):
+        mom = (
+            jax.tree.map(jnp.zeros_like, params) if momentum else None
+        )
+        return SGDState(step=jnp.zeros((), jnp.int32), momentum=mom)
+
+    def update(grads, state, params=None):
+        del params
+        step = state.step + 1
+        lr_t = _lr_at(lr, state.step)
+        if momentum:
+            new_mom = jax.tree.map(
+                lambda m, g: momentum * m + g, state.momentum, grads
+            )
+            if nesterov:
+                upd = jax.tree.map(
+                    lambda m, g: -lr_t * (momentum * m + g), new_mom, grads
+                )
+            else:
+                upd = jax.tree.map(lambda m: -lr_t * m, new_mom)
+            return upd, SGDState(step=step, momentum=new_mom)
+        upd = jax.tree.map(lambda g: -lr_t * g, grads)
+        return upd, SGDState(step=step, momentum=None)
+
+    return Optimizer(init=init, update=update)
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: object
+    nu: object
+
+
+def adamw(
+    lr,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+    grad_clip: float | None = 1.0,
+) -> Optimizer:
+    """AdamW with optional global-norm gradient clipping (LM default)."""
+
+    def init(params):
+        return AdamWState(
+            step=jnp.zeros((), jnp.int32),
+            mu=jax.tree.map(jnp.zeros_like, params),
+            nu=jax.tree.map(jnp.zeros_like, params),
+        )
+
+    def update(grads, state, params):
+        if grad_clip is not None:
+            gnorm = jnp.sqrt(
+                sum(
+                    jnp.sum(jnp.square(g.astype(jnp.float32)))
+                    for g in jax.tree.leaves(grads)
+                )
+            )
+            scale = jnp.minimum(1.0, grad_clip / (gnorm + 1e-12))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+        step = state.step + 1
+        lr_t = _lr_at(lr, state.step)
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state.mu, grads)
+        nu = jax.tree.map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g), state.nu, grads
+        )
+        c1 = 1.0 - b1 ** step.astype(jnp.float32)
+        c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(m, v, p):
+            mhat = m / c1
+            vhat = v / c2
+            step_ = mhat / (jnp.sqrt(vhat) + eps)
+            if weight_decay:
+                step_ = step_ + weight_decay * p
+            return -lr_t * step_
+
+        updates = jax.tree.map(upd, mu, nu, params)
+        return updates, AdamWState(step=step, mu=mu, nu=nu)
+
+    return Optimizer(init=init, update=update)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(jnp.add, params, updates)

@@ -1,0 +1,36 @@
+"""Learning-rate schedules."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(value: float):
+    def sched(step):
+        del step
+        return jnp.asarray(value, jnp.float32)
+
+    return sched
+
+
+def cosine_decay(peak: float, total_steps: int, floor: float = 0.0):
+    def sched(step):
+        t = jnp.clip(step.astype(jnp.float32) / total_steps, 0.0, 1.0)
+        return floor + 0.5 * (peak - floor) * (1.0 + jnp.cos(jnp.pi * t))
+
+    return sched
+
+
+def linear_warmup_cosine(
+    peak: float, warmup_steps: int, total_steps: int, floor: float = 0.0
+):
+    def sched(step):
+        step = step.astype(jnp.float32)
+        warm = peak * step / max(warmup_steps, 1)
+        t = jnp.clip(
+            (step - warmup_steps) / max(total_steps - warmup_steps, 1), 0.0, 1.0
+        )
+        cos = floor + 0.5 * (peak - floor) * (1.0 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup_steps, warm, cos)
+
+    return sched

@@ -1,0 +1,3 @@
+from repro.serving.engine import ContinuousBatchingEngine, Request
+
+__all__ = ["ContinuousBatchingEngine", "Request"]

@@ -1,0 +1,136 @@
+"""Continuous-batching serving engine (slot-based, ragged positions).
+
+Requests of different lengths share one decode batch: each of the B
+slots advances at its own position (the ragged (B,) cache built by
+``Model.init_cache(ragged=True)``). When a request finishes, its slot
+is immediately refilled from the queue — a single-sequence prefill is
+spliced into the batch cache at that slot, so the other slots never
+stall. This is the vLLM-style scheduling loop adapted to static JAX
+shapes (fixed slot count and cache width; no paging).
+
+Supports the attention-cache families (dense / moe / vlm / audio and
+gemma2's mixed local/global stacks). SSM/hybrid caches also splice (the
+recurrent state is position-free), handled generically by scattering
+every cache leaf with a batch dimension.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import Model
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray  # (len,) int32
+    max_new: int
+
+
+@dataclasses.dataclass
+class _Slot:
+    req: Request
+    generated: list
+
+
+class ContinuousBatchingEngine:
+    def __init__(
+        self,
+        model: Model,
+        params,
+        *,
+        slots: int,
+        max_seq: int,
+        sample_fn: Callable | None = None,
+    ):
+        self.model = model
+        self.params = params
+        self.B = slots
+        self.max_seq = max_seq
+        self.cache = model.init_cache(slots, max_seq, ragged=True)
+        self.tokens = jnp.zeros((slots, 1), jnp.int32)
+        self.slots: list[_Slot | None] = [None] * slots
+        self.queue: deque[Request] = deque()
+        self.completed: list[tuple[int, list]] = []
+        self.sample_fn = sample_fn or (lambda logits: jnp.argmax(logits, -1))
+        self._decode = jax.jit(model.decode_step)
+        self._prefill = jax.jit(
+            lambda p, b: model.prefill(p, b, max_seq=max_seq)
+        )
+
+    # ------------------------------------------------------------------ api
+    def submit(self, req: Request):
+        if len(req.prompt) >= self.max_seq:
+            raise ValueError("prompt exceeds cache width")
+        self.queue.append(req)
+
+    def run(self, max_ticks: int = 10_000):
+        """Drain the queue; returns {uid: generated tokens}."""
+        ticks = 0
+        while (any(self.slots) or self.queue) and ticks < max_ticks:
+            self._fill_slots()
+            self._tick()
+            ticks += 1
+        return dict(self.completed)
+
+    # ------------------------------------------------------------- internals
+    def _fill_slots(self):
+        for i in range(self.B):
+            if self.slots[i] is None and self.queue:
+                self._insert(i, self.queue.popleft())
+
+    def _insert(self, slot: int, req: Request):
+        prompt = jnp.asarray(req.prompt, jnp.int32)[None]
+        batch = {"tokens": prompt}
+        if self.model.cfg.family == "vlm":
+            batch["image_embeds"] = jnp.zeros(
+                (1, self.model.cfg.frontend_tokens, self.model.cfg.d_model),
+                jnp.dtype(self.model.cfg.dtype),
+            )
+        logits, c1 = self._prefill(self.params, batch)
+        # splice the single-sequence cache into this slot
+        new_cache = {}
+        for key, val in self.cache.items():
+            if key == "pos":
+                new_cache[key] = val.at[slot].set(int(c1["pos"]))
+                continue
+            new_cache[key] = jax.tree.map(
+                lambda big, small: big.at[:, slot : slot + 1].set(small),
+                val, c1[key],
+            )
+        self.cache = new_cache
+        first = self.sample_fn(logits)[0].astype(jnp.int32)  # (1,vocab)->()
+        self.tokens = self.tokens.at[slot, 0].set(first)
+        self.slots[slot] = _Slot(req=req, generated=[int(first)])
+        self._maybe_finish(slot)
+
+    def _tick(self):
+        logits, self.cache = self._decode(self.params, self.cache, self.tokens)
+        nxt = self.sample_fn(logits).astype(jnp.int32)
+        for i, s in enumerate(self.slots):
+            if s is None:
+                continue
+            s.generated.append(int(nxt[i]))
+            self.tokens = self.tokens.at[i, 0].set(nxt[i])
+            self._maybe_finish(i)
+
+    def _maybe_finish(self, i: int):
+        s = self.slots[i]
+        if s is None:
+            return
+        done = len(s.generated) >= s.req.max_new
+        pos = int(self.cache["pos"][i]) if hasattr(
+            self.cache["pos"], "__getitem__"
+        ) else 0
+        if pos >= self.max_seq - 1:
+            done = True
+        if done:
+            self.completed.append((s.req.uid, s.generated[: s.req.max_new]))
+            self.slots[i] = None

@@ -1,0 +1,20 @@
+from repro.utils.tree import (
+    tree_add,
+    tree_axpy,
+    tree_scale,
+    tree_sub,
+    tree_zeros_like,
+    tree_global_norm,
+)
+from repro.utils.prng import key_iter, shared_key
+
+__all__ = [
+    "tree_add",
+    "tree_axpy",
+    "tree_scale",
+    "tree_sub",
+    "tree_zeros_like",
+    "tree_global_norm",
+    "key_iter",
+    "shared_key",
+]

@@ -1,0 +1,23 @@
+"""PRNG helpers.
+
+The paper (Algorithm 1, step 1) requires every network node to share the
+*same* random hidden-layer weights ``{w_l, b_l}``; ``shared_key`` makes
+that contract explicit at call sites.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def shared_key(seed: int) -> jax.Array:
+    """A PRNG key that is broadcast to (identical on) every node."""
+    return jax.random.key(seed)
+
+
+def key_iter(seed: int):
+    """Infinite stream of fresh keys."""
+    key = jax.random.key(seed)
+    while True:
+        key, sub = jax.random.split(key)
+        yield sub

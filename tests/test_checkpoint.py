@@ -1,0 +1,41 @@
+"""Checkpoint save/restore."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import ckpt
+
+
+def test_roundtrip(tmp_path):
+    tree = {
+        "a": jnp.arange(6.0).reshape(2, 3),
+        "nested": {"b": jnp.ones((4,), jnp.bfloat16), "c": jnp.asarray(3)},
+        "lst": [jnp.zeros((2,)), jnp.full((1,), 7.0)],
+    }
+    path = ckpt.save_pytree(str(tmp_path), 5, tree)
+    like = jax.tree.map(jnp.zeros_like, tree)
+    restored = ckpt.load_pytree(path, like)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert a.dtype == b.dtype
+
+
+def test_latest_step(tmp_path):
+    assert ckpt.latest_step(str(tmp_path)) is None
+    ckpt.save_pytree(str(tmp_path), 3, {"x": jnp.zeros(1)})
+    ckpt.save_pytree(str(tmp_path), 11, {"x": jnp.zeros(1)})
+    assert ckpt.latest_step(str(tmp_path)) == 11
+
+
+def test_shape_mismatch_raises(tmp_path):
+    path = ckpt.save_pytree(str(tmp_path), 0, {"x": jnp.zeros((2, 2))})
+    with pytest.raises(ValueError):
+        ckpt.load_pytree(path, {"x": jnp.zeros((3,))})
+
+
+def test_missing_key_raises(tmp_path):
+    path = ckpt.save_pytree(str(tmp_path), 0, {"x": jnp.zeros(1)})
+    with pytest.raises(KeyError):
+        ckpt.load_pytree(path, {"y": jnp.zeros(1)})

@@ -1,0 +1,89 @@
+"""Graphs and consensus machinery (paper Sec. III-A, Appendix C)."""
+
+import numpy as np
+import pytest
+
+from repro.core import consensus
+
+
+@pytest.mark.parametrize("builder,V", [
+    (consensus.ring, 8), (consensus.line, 5), (consensus.complete, 6),
+    (consensus.star, 7),
+])
+def test_connected_graphs(builder, V):
+    g = builder(V)
+    assert g.num_nodes == V
+    assert g.is_connected
+    assert g.algebraic_connectivity > 0
+
+
+def test_hypercube_properties():
+    g = consensus.hypercube(4)
+    assert g.num_nodes == 16
+    assert np.all(g.degrees == 4)
+    assert g.d_max == 4
+
+
+def test_torus_degrees():
+    g = consensus.torus2d(4, 4)
+    assert np.all(g.degrees == 4)
+
+
+def test_paper_fig2_network():
+    """Paper Fig. 2: V=4 nodes, d_max=2."""
+    g = consensus.paper_fig2()
+    assert g.num_nodes == 4
+    assert g.d_max == 2
+    assert g.gamma_upper_bound() == pytest.approx(0.5)
+    # the paper's gamma=1/2.1 is admissible, gamma=1/1.9 is not
+    assert 1 / 2.1 < g.gamma_upper_bound() < 1 / 1.9
+
+
+def test_random_geometric_connected():
+    g = consensus.random_geometric(25, radius=0.35, seed=1)
+    assert g.num_nodes == 25
+    assert g.is_connected
+
+
+def test_disconnected_detection():
+    a = np.zeros((4, 4))
+    a[0, 1] = a[1, 0] = 1.0
+    a[2, 3] = a[3, 2] = 1.0
+    g = consensus.Graph(a)
+    assert not g.is_connected
+
+
+def test_metropolis_doubly_stochastic():
+    g = consensus.random_geometric(12, radius=0.5, seed=3)
+    W = g.metropolis_weights()
+    np.testing.assert_allclose(W.sum(0), 1.0, atol=1e-12)
+    np.testing.assert_allclose(W.sum(1), 1.0, atol=1e-12)
+    assert np.all(W >= -1e-12)
+
+
+def test_dc_elm_iteration_matrix_spectrum():
+    """W has eigenvalue 1 with multiplicity L; rest < 1 (=> convergence)."""
+    rng = np.random.default_rng(0)
+    V, L = 4, 3
+    g = consensus.ring(V)
+    omegas = []
+    for _ in range(V):
+        H = rng.normal(size=(20, L))
+        omegas.append(np.linalg.inv(np.eye(L) / (V * 4.0) + H.T @ H))
+    W = consensus.dc_elm_iteration_matrix(
+        g, np.stack(omegas), gamma=0.9 / g.d_max, VC=V * 4.0
+    )
+    ev = np.sort(np.abs(np.linalg.eigvals(W)))[::-1]
+    np.testing.assert_allclose(ev[:L], 1.0, atol=1e-9)
+    rho = consensus.essential_spectral_radius(W, L)
+    assert rho < 1.0
+
+
+def test_build_dispatcher():
+    assert consensus.build("ring", 6).name == "ring6"
+    assert consensus.build("hypercube", 8).num_nodes == 8
+    assert consensus.build("torus", 12).num_nodes == 12
+    with pytest.raises(ValueError):
+        consensus.build("hypercube", 6)
+    with pytest.raises(ValueError):
+        consensus.build("nope", 4)

@@ -1,0 +1,88 @@
+"""Data pipeline: sinc, synthetic MNIST 3v6, LM streams, partitioning."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import elm
+from repro.data.lm import TokenStream, make_lm_batches
+from repro.data.partition import partition_equal, partition_sizes
+from repro.data.sinc import make_sinc_dataset, sinc
+from repro.data.synthetic_mnist import make_mnist36_dataset
+
+
+def test_sinc_function():
+    assert float(sinc(jnp.asarray(0.0))) == 1.0
+    x = jnp.asarray([1.0, -2.0])
+    np.testing.assert_allclose(sinc(x), np.sin(x) / x, rtol=1e-6)
+
+
+def test_sinc_dataset_shapes_and_noise():
+    X, Y, Xt, Yt = make_sinc_dataset(jax.random.key(0))
+    assert X.shape == (4, 1250, 1) and Y.shape == (4, 1250, 1)
+    assert Xt.shape == (5000, 1)
+    # train targets noisy, test noise-free
+    train_resid = np.abs(np.asarray(Y - sinc(X)))
+    assert train_resid.max() <= 0.2 + 1e-6
+    assert train_resid.mean() > 0.05
+    np.testing.assert_allclose(Yt, sinc(Xt), atol=1e-6)
+
+
+def test_mnist36_separable_by_elm():
+    """The surrogate 3-vs-6 task is learnable (sanity for Fig. 7 repro)."""
+    X, T, Xt, Tt = make_mnist36_dataset(seed=0, num_train=1200, num_test=400)
+    assert X.shape == (1200, 784)
+    model = elm.train_centralized(
+        jax.random.key(0), jnp.asarray(X), jnp.asarray(T),
+        num_features=50, C=0.25,
+    )
+    acc = float(elm.accuracy(model(jnp.asarray(Xt)), jnp.asarray(Tt)))
+    assert acc > 0.85, f"3v6 accuracy {acc}"
+
+
+def test_mnist36_determinism():
+    a = make_mnist36_dataset(seed=3, num_train=10, num_test=4)
+    b = make_mnist36_dataset(seed=3, num_train=10, num_test=4)
+    np.testing.assert_array_equal(a[0], b[0])
+
+
+def test_partition_equal():
+    X = np.arange(103 * 2, dtype=np.float32).reshape(103, 2)
+    T = np.arange(103, dtype=np.float32)[:, None]
+    Xn, Tn = partition_equal(X, T, V=4, seed=0)
+    assert Xn.shape == (4, 25, 2)
+    # partition preserves (x, t) pairing
+    assert np.allclose(Xn[..., 0], Tn[..., 0] * 2)
+
+
+def test_partition_sizes():
+    assert partition_sizes(100, 4) == [25, 25, 25, 25]
+    assert sum(partition_sizes(103, 4)) == 103
+    skewed = partition_sizes(1000, 5, skew=2.0, seed=1)
+    assert sum(skewed) == 1000
+    assert min(skewed) >= 1
+
+
+def test_token_stream_learnable_structure():
+    """Order-2 Markov stream: same history hash => limited branching."""
+    ts = TokenStream(vocab_size=100, seed=0, branching=4)
+    rng = np.random.default_rng(0)
+    toks = ts.sample(rng, 64, 50)
+    assert toks.shape == (64, 51)
+    assert toks.max() < 100
+    # successors of a given (prev2, prev1) pair come from <= 4 values
+    succ = {}
+    for row in toks:
+        for t in range(2, 51):
+            h = (row[t - 1] * 31 + row[t - 2]) % 4096
+            succ.setdefault(h, set()).add(row[t])
+    assert max(len(v) for v in succ.values()) <= 4
+
+
+def test_make_lm_batches():
+    batches = list(make_lm_batches(64, 2, 16, 3))
+    assert len(batches) == 3
+    b = batches[0]
+    assert b["tokens"].shape == (2, 16)
+    # labels are next-token shifted
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])

@@ -1,0 +1,150 @@
+"""DC-ELM Algorithm 1 (paper Sec. III-D, Theorems 1-2)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import consensus, dc_elm, elm, fusion_elm, incremental
+
+
+def _problem(V=4, Ni=64, L=16, M=2, C=0.25, seed=0):
+    # modest C: the consensus rate scales ~ gamma*lambda2 / (1 + VC*lam_max(P)),
+    # so small C isolates the graph dynamics from ridge stiffness (the
+    # stiff-C regime is exercised in f64 by the fig4 benchmark).
+    kx, kt = jax.random.split(jax.random.key(seed))
+    H = jax.random.normal(kx, (V, Ni, L))
+    T = jax.random.normal(kt, (V, Ni, M))
+    return H, T, C
+
+
+def test_converges_to_centralized():
+    """Theorem 2: every node reaches the fusion-center solution."""
+    H, T, C = _problem()
+    g = consensus.paper_fig2()
+    state, P_, Q_ = dc_elm.simulate_init(H, T, C)
+    beta_star = dc_elm.centralized_from_node_stats(P_, Q_, C)
+    d0 = float(dc_elm.distance_to(state.betas, beta_star))
+    final, _ = dc_elm.simulate_run(state, g, g.default_gamma(), C, 5000)
+    d1 = float(dc_elm.distance_to(final.betas, beta_star))
+    assert d1 < 0.02
+    assert d1 < d0 / 10
+
+
+def test_centralized_equivalence_lemma1():
+    """centralized_from_node_stats == solving the pooled problem (Lemma 1)."""
+    H, T, C = _problem()
+    _, P_, Q_ = dc_elm.simulate_init(H, T, C)
+    via_stats = dc_elm.centralized_from_node_stats(P_, Q_, C)
+    pooled = elm.ridge_solve(
+        H.reshape(-1, H.shape[-1]), T.reshape(-1, T.shape[-1]), C
+    )
+    np.testing.assert_allclose(via_stats, pooled, rtol=1e-3, atol=1e-4)
+
+
+def test_zero_gradient_sum_invariant():
+    """Eq. (12): sum_i grad u_i(beta_i(k)) stays ~0 along the trajectory."""
+    H, T, C = _problem()
+    g = consensus.ring(4)
+    state, P_, Q_ = dc_elm.simulate_init(H, T, C)
+    for k in [0, 5, 50]:
+        s = state
+        if k:
+            s, _ = dc_elm.simulate_run(state, g, 0.4, C, k)
+        gs = dc_elm.gradient_sum(s, P_, Q_, C)
+        scale = float(jnp.max(jnp.abs(s.betas))) * (4 * C) + 1
+        assert float(jnp.max(jnp.abs(gs))) / scale < 5e-4, f"violated at k={k}"
+
+
+def test_divergence_above_gamma_bound():
+    """Paper Fig. 4(a): gamma = 1/1.9 > 1/d_max = 0.5 diverges on the
+    Fig. 2 network in the paper's own setting (collinear sigmoid features
+    of 1-D SinC inputs => ill-conditioned local Grams)."""
+    from repro.core.features import make_random_features
+    from repro.data.sinc import make_sinc_dataset
+
+    X, Y, _, _ = make_sinc_dataset(jax.random.key(0), num_nodes=4,
+                                   per_node=300, num_test=10)
+    fmap = make_random_features(jax.random.key(1), 1, 60)
+    H = jax.vmap(fmap)(X)
+    C = 2.0**2
+    g = consensus.paper_fig2()
+    state, P_, Q_ = dc_elm.simulate_init(H, Y, C)
+    bad, _ = dc_elm.simulate_run(state, g, 1 / 1.9, C, 1500)
+    good, _ = dc_elm.simulate_run(state, g, 1 / 2.1, C, 1500)
+    bad_norm = float(jnp.max(jnp.abs(bad.betas)))
+    good_norm = float(jnp.max(jnp.abs(good.betas)))
+    assert jnp.isfinite(good_norm) and good_norm < 1e3
+    assert (not jnp.isfinite(bad_norm)) or bad_norm > 1e3 * good_norm
+
+
+def test_unequal_node_data():
+    """Convergence holds with heterogeneous N_i (robustness claim)."""
+    key = jax.random.key(1)
+    L, M, C = 12, 1, 0.25
+    sizes = [10, 50, 100, 200]
+    Hs = [jax.random.normal(jax.random.key(10 + i), (n, L)) for i, n in enumerate(sizes)]
+    Ts = [jax.random.normal(jax.random.key(20 + i), (n, M)) for i, n in enumerate(sizes)]
+    del key
+    V = len(sizes)
+    P_ = jnp.stack([h.T @ h for h in Hs])
+    Q_ = jnp.stack([h.T @ t for h, t in zip(Hs, Ts)])
+    state = dc_elm.simulate_init_from_stats(P_, Q_, C)
+    beta_star = dc_elm.centralized_from_node_stats(P_, Q_, C)
+    g = consensus.complete(V)
+    final, _ = dc_elm.simulate_run(state, g, g.default_gamma(), C, 5000)
+    assert float(dc_elm.distance_to(final.betas, beta_star)) < 0.03
+
+
+def test_topology_affects_rate():
+    """Better-connected graphs converge faster (rho_ess ordering)."""
+    H, T, C = _problem(V=8, seed=2)
+    state, P_, Q_ = dc_elm.simulate_init(H, T, C)
+    beta_star = dc_elm.centralized_from_node_stats(P_, Q_, C)
+    dists = {}
+    for g in [consensus.ring(8), consensus.complete(8)]:
+        final, _ = dc_elm.simulate_run(state, g, g.default_gamma(), C, 800)
+        dists[g.name] = float(dc_elm.distance_to(final.betas, beta_star))
+    assert dists["complete8"] < dists["ring8"]
+
+
+def test_fusion_center_baseline_exact():
+    H, T, C = _problem()
+    beta = fusion_elm.simulate(H, T, C)
+    pooled = elm.ridge_solve(
+        H.reshape(-1, H.shape[-1]), T.reshape(-1, T.shape[-1]), C
+    )
+    np.testing.assert_allclose(beta, pooled, rtol=1e-3, atol=1e-4)
+
+
+def test_incremental_baseline_approaches_solution():
+    """Sec. II-B1 Hamiltonian-cycle baseline reaches the neighborhood."""
+    H, T, C = _problem(V=4, Ni=32, L=8, M=1)
+    _, P_, Q_ = dc_elm.simulate_init(H, T, C)
+    beta_star = dc_elm.centralized_from_node_stats(P_, Q_, C)
+    zf, _ = incremental.run(P_, Q_, alpha=5e-3, C=C, num_cycles=3000)
+    rel = float(
+        jnp.linalg.norm(zf - beta_star) / (1 + jnp.linalg.norm(beta_star))
+    )
+    assert rel < 0.05
+
+
+def test_average_empirical_risk_trace_decreases():
+    """Paper Fig. 4(b)(c): R_d(k) falls as consensus progresses."""
+    from repro.core.features import make_random_features
+    from repro.data.sinc import make_sinc_dataset
+
+    # scarce local data (40 samples, 40 features) => local ELMs overfit
+    # and consensus measurably improves the average risk
+    X, Y, Xt, Yt = make_sinc_dataset(jax.random.key(0), num_nodes=4,
+                                     per_node=40, num_test=400)
+    fmap = make_random_features(jax.random.key(1), 1, 40)
+    H = jax.vmap(fmap)(X)
+    C = 2.0
+    state, _, _ = dc_elm.simulate_init(H, Y, C)
+    g = consensus.paper_fig2()
+    trace_fn = dc_elm.average_empirical_risk_fn(fmap, Xt, Yt)
+    _, risks = dc_elm.simulate_run(
+        state, g, 1 / 2.1, C, 2000, trace_fn=trace_fn
+    )
+    assert float(risks[-1]) < float(risks[0])

@@ -1,0 +1,77 @@
+"""Centralized ELM (paper Sec. II-A)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import elm
+from repro.core.features import make_random_features
+from repro.data.sinc import make_sinc_dataset, sinc
+
+
+def test_primal_dual_agree():
+    key = jax.random.key(0)
+    H = jax.random.normal(key, (60, 40))
+    T = jax.random.normal(jax.random.key(1), (60, 3))
+    b1 = elm.ridge_primal(H, T, C=8.0)
+    b2 = elm.ridge_dual(H, T, C=8.0)
+    np.testing.assert_allclose(b1, b2, rtol=2e-3, atol=2e-4)
+
+
+def test_ridge_solve_auto_picks_branch():
+    key = jax.random.key(0)
+    tall = jax.random.normal(key, (100, 20))
+    wide = jax.random.normal(key, (20, 100))
+    T_tall = jnp.ones((100, 1))
+    T_wide = jnp.ones((20, 1))
+    assert elm.ridge_solve(tall, T_tall, 4.0).shape == (20, 1)
+    assert elm.ridge_solve(wide, T_wide, 4.0).shape == (100, 1)
+
+
+def test_solve_from_stats_matches_direct():
+    key = jax.random.key(2)
+    H = jax.random.normal(key, (128, 32))
+    T = jax.random.normal(jax.random.key(3), (128, 2))
+    direct = elm.ridge_primal(H, T, 16.0)
+    via_stats = elm.solve_from_stats(H.T @ H, H.T @ T, 16.0)
+    np.testing.assert_allclose(direct, via_stats, rtol=1e-4, atol=1e-5)
+
+
+def test_sinc_regression_quality():
+    """Paper Fig. 3/4: sigmoid ELM approximates noisy SinC well."""
+    key = jax.random.key(0)
+    X, Y, Xt, Yt = make_sinc_dataset(key, num_nodes=1, per_node=2000,
+                                     num_test=1000)
+    model = elm.train_centralized(
+        jax.random.key(7), X[0], Y[0], num_features=100, C=2**8
+    )
+    test_mse = float(elm.mse(model, Xt, Yt))
+    assert test_mse < 5e-3, f"SinC test MSE too high: {test_mse}"
+
+
+def test_regularization_effect():
+    """Small C = strong regularization => smaller output-weight norm."""
+    key = jax.random.key(1)
+    X, Y, _, _ = make_sinc_dataset(key, num_nodes=1, per_node=500)
+    fmap = make_random_features(jax.random.key(2), 1, 50)
+    H = fmap(X[0])
+    beta_hi = elm.ridge_solve(H, Y[0], C=2**10)
+    beta_lo = elm.ridge_solve(H, Y[0], C=2**-6)
+    assert jnp.linalg.norm(beta_lo) < jnp.linalg.norm(beta_hi)
+
+
+def test_empirical_risk_matches_paper_def():
+    pred = jnp.array([1.0, 2.0])
+    t = jnp.array([0.0, 4.0])
+    # (1/N) sum 1/2 |y - yhat| = (0.5*1 + 0.5*2)/2
+    assert float(elm.empirical_risk(pred, t)) == pytest.approx(0.75)
+
+
+@pytest.mark.parametrize("activation", ["sigmoid", "tanh", "relu", "rbf", "sin"])
+def test_feature_maps(activation):
+    fmap = make_random_features(jax.random.key(0), 3, 17, activation)
+    x = jax.random.normal(jax.random.key(1), (5, 3))
+    h = fmap(x)
+    assert h.shape == (5, 17)
+    assert bool(jnp.all(jnp.isfinite(h)))

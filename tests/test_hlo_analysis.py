@@ -1,0 +1,86 @@
+"""Trip-count-weighted HLO analyzer (analysis/hlo.py)."""
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.analysis.hlo import analyze_module, parse_module
+
+
+def _compile_text(fn, *args):
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+def test_scan_flops_weighted_by_trip_count():
+    def f(x, w):
+        def body(c, _):
+            return jnp.tanh(c @ w), None
+        c, _ = lax.scan(body, x, None, length=10)
+        return c
+
+    x = jnp.zeros((64, 64))
+    s = analyze_module(_compile_text(f, x, x))
+    assert abs(s.flops - 10 * 2 * 64**3) / (10 * 2 * 64**3) < 0.05
+
+
+def test_nested_scan_multiplies():
+    def f(x, w):
+        def outer(c, _):
+            def inner(ci, _):
+                return ci @ w, None
+            ci, _ = lax.scan(inner, c, None, length=4)
+            return ci, None
+        c, _ = lax.scan(outer, x, None, length=3)
+        return c
+
+    x = jnp.zeros((32, 32))
+    s = analyze_module(_compile_text(f, x, x))
+    expect = 12 * 2 * 32**3
+    assert abs(s.flops - expect) / expect < 0.05
+
+
+def test_grad_with_remat_counts_recompute():
+    def g(x, w):
+        def body(c, _):
+            return jnp.tanh(c @ w), None
+        c, _ = lax.scan(jax.checkpoint(body), x, None, length=10)
+        return jnp.sum(c)
+
+    x = jnp.zeros((64, 64))
+    s = analyze_module(_compile_text(jax.grad(g, argnums=(0, 1)), x, x))
+    expect = 40 * 2 * 64**3  # fwd + recompute + 2 bwd matmuls per layer
+    assert abs(s.flops - expect) / expect < 0.05
+
+
+def test_parse_handles_index_comments():
+    txt = """
+HloModule m
+
+ENTRY %main (p: f32[4]) -> f32[4] {
+  %p = f32[4]{0} parameter(0)
+  %t = (f32[4]{0}, /*index=5*/f32[4]{0}) tuple(%p, %p)
+  ROOT %g = f32[4]{0} get-tuple-element(%t), index=0
+}
+"""
+    mod = parse_module(txt)
+    assert mod["entry"] == "main"
+    kinds = [op.kind for op in mod["computations"]["main"].ops]
+    assert "tuple" in kinds
+
+
+def test_dot_flops_formula():
+    def f(a, b):
+        return jnp.einsum("ij,jk->ik", a, b)
+
+    a = jnp.zeros((16, 32))
+    b = jnp.zeros((32, 8))
+    s = analyze_module(_compile_text(f, a, b))
+    assert s.flops == 2 * 16 * 32 * 8
+
+
+def test_no_collectives_single_device():
+    def f(a):
+        return a * 2
+
+    s = analyze_module(_compile_text(f, jnp.zeros((4,))))
+    assert s.collective_bytes_total == 0

@@ -1,0 +1,124 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode), shape/dtype sweeps."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.attn import flash_attention_pallas
+from repro.kernels.attn_ref import attention_reference
+from repro.kernels.gram import cross_pallas, gram_pallas
+from repro.kernels.gram_ref import cross_reference, gram_reference
+from repro.kernels.ssd_ref import ssd_naive_reference, ssd_reference
+from repro.kernels.ssd_scan import ssd_pallas
+
+
+@pytest.mark.parametrize("N,L", [(64, 32), (300, 100), (512, 256), (33, 7)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gram_kernel(N, L, dtype):
+    H = jax.random.normal(jax.random.key(N + L), (N, L), dtype)
+    out = gram_pallas(H, interpret=True, block_l=64, block_n=128)
+    ref = gram_reference(H)
+    assert out.dtype == jnp.float32
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-3
+    np.testing.assert_allclose(out, ref, rtol=tol, atol=tol * N**0.5)
+
+
+@pytest.mark.parametrize("N,L,M", [(128, 64, 8), (100, 30, 1), (256, 128, 16)])
+def test_cross_kernel(N, L, M):
+    H = jax.random.normal(jax.random.key(0), (N, L))
+    T = jax.random.normal(jax.random.key(1), (N, M))
+    out = cross_pallas(H, T, interpret=True, block_l=32, block_m=8, block_n=64)
+    np.testing.assert_allclose(out, cross_reference(H, T), rtol=1e-3, atol=1e-3)
+
+
+def test_gram_symmetry_psd():
+    H = jax.random.normal(jax.random.key(3), (200, 48))
+    P = gram_pallas(H, interpret=True, block_l=16, block_n=64)
+    np.testing.assert_allclose(P, P.T, atol=1e-3)
+    ev = np.linalg.eigvalsh(np.asarray(P, np.float64))
+    assert ev.min() > -1e-3
+
+
+@pytest.mark.parametrize("b,s,nh,hd,ds,Q", [
+    (2, 64, 4, 8, 16, 16),
+    (1, 100, 2, 32, 64, 32),  # padding path (100 % 32 != 0)
+    (2, 128, 3, 16, 8, 64),
+])
+def test_ssd_kernel_vs_naive(b, s, nh, hd, ds, Q):
+    ks = jax.random.split(jax.random.key(s + nh), 6)
+    x = jax.random.normal(ks[0], (b, s, nh, hd))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, nh)))
+    A = -jnp.exp(jax.random.normal(ks[2], (nh,)))
+    B = jax.random.normal(ks[3], (b, s, ds))
+    C = jax.random.normal(ks[4], (b, s, ds))
+    h0 = jax.random.normal(ks[5], (b, nh, hd, ds))
+    y1, hT1 = ssd_pallas(x, dt, A, B, C, chunk=Q, initial_state=h0,
+                         interpret=True)
+    y2, hT2 = ssd_naive_reference(x, dt, A, B, C, initial_state=h0)
+    np.testing.assert_allclose(y1, y2, rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(hT1, hT2, rtol=2e-3, atol=2e-3)
+
+
+def test_ssd_chunked_ref_vs_naive_bf16():
+    b, s, nh, hd, ds = 1, 96, 2, 8, 8
+    ks = jax.random.split(jax.random.key(9), 5)
+    x = jax.random.normal(ks[0], (b, s, nh, hd), jnp.bfloat16)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, nh)))
+    A = -jnp.exp(jax.random.normal(ks[2], (nh,)))
+    B = jax.random.normal(ks[3], (b, s, ds))
+    C = jax.random.normal(ks[4], (b, s, ds))
+    y1, h1 = ssd_reference(x, dt, A, B, C, chunk=32)
+    y2, h2 = ssd_naive_reference(x, dt, A, B, C)
+    np.testing.assert_allclose(
+        y1.astype(jnp.float32), y2.astype(jnp.float32), rtol=5e-2, atol=5e-2
+    )
+    np.testing.assert_allclose(h1, h2, rtol=2e-2, atol=2e-2)
+
+
+@pytest.mark.parametrize("B,S,K,G,hd,bq,cap", [
+    (2, 128, 2, 2, 16, 32, 0.0),
+    (1, 64, 1, 4, 32, 16, 50.0),
+    (2, 96, 3, 1, 8, 32, 0.0),
+    (1, 256, 2, 4, 64, 64, 0.0),
+])
+def test_attention_kernel(B, S, K, G, hd, bq, cap):
+    ks = jax.random.split(jax.random.key(S + K), 3)
+    q = jax.random.normal(ks[0], (B, S, K, G, hd))
+    k = jax.random.normal(ks[1], (B, S, K, hd))
+    v = jax.random.normal(ks[2], (B, S, K, hd))
+    out = flash_attention_pallas(
+        q, k, v, block_q=bq, block_k=bq, softcap=cap, interpret=True
+    )
+    ref = attention_reference(q, k, v, softcap=cap)
+    np.testing.assert_allclose(out, ref, rtol=2e-3, atol=2e-3)
+
+
+def test_attention_kernel_bf16():
+    B, S, K, G, hd = 1, 128, 2, 2, 32
+    ks = jax.random.split(jax.random.key(0), 3)
+    q = jax.random.normal(ks[0], (B, S, K, G, hd), jnp.bfloat16)
+    k = jax.random.normal(ks[1], (B, S, K, hd), jnp.bfloat16)
+    v = jax.random.normal(ks[2], (B, S, K, hd), jnp.bfloat16)
+    out = flash_attention_pallas(q, k, v, block_q=32, block_k=32,
+                                 interpret=True)
+    ref = attention_reference(q, k, v)
+    np.testing.assert_allclose(
+        out.astype(jnp.float32), ref.astype(jnp.float32), rtol=5e-2, atol=5e-2
+    )
+
+
+def test_model_chunked_attention_vs_kernel():
+    """models/attention.py jnp path == Pallas kernel semantics."""
+    from repro.models.attention import flash_attention as jnp_flash
+
+    B, S, K, G, hd = 2, 128, 2, 2, 16
+    ks = jax.random.split(jax.random.key(5), 3)
+    q = jax.random.normal(ks[0], (B, S, K, G, hd))
+    k = jax.random.normal(ks[1], (B, S, K, hd))
+    v = jax.random.normal(ks[2], (B, S, K, hd))
+    pos = jnp.arange(S)
+    a = jnp_flash(q, k, v, q_positions=pos, k_positions=pos, causal=True,
+                  q_chunk=32, k_chunk=32)
+    b = flash_attention_pallas(q, k, v, block_q=32, block_k=32, interpret=True)
+    np.testing.assert_allclose(a, b, rtol=1e-3, atol=1e-3)

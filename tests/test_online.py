@@ -1,0 +1,86 @@
+"""Online DC-ELM, Algorithm 2 (Woodbury chunk updates)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import online
+
+
+def _data(n, L=12, M=2, seed=0):
+    k1, k2 = jax.random.split(jax.random.key(seed))
+    return (
+        jax.random.normal(k1, (n, L)) / np.sqrt(L),
+        jax.random.normal(k2, (n, M)),
+    )
+
+
+C, V = 8.0, 4
+
+
+def test_add_chunk_matches_direct():
+    H, T = _data(100)
+    dH, dT = _data(7, seed=1)
+    st = online.init_state(H, T, C, V)
+    st2 = online.add_chunk(st, dH, dT)
+    ref = online.init_state(
+        jnp.concatenate([H, dH]), jnp.concatenate([T, dT]), C, V
+    )
+    np.testing.assert_allclose(st2.omega, ref.omega, rtol=5e-3, atol=5e-5)
+    np.testing.assert_allclose(st2.beta, ref.beta, rtol=5e-3, atol=5e-4)
+
+
+def test_remove_chunk_matches_direct():
+    H, T = _data(100)
+    st = online.init_state(H, T, C, V)
+    st2 = online.remove_chunk(st, H[-9:], T[-9:])
+    ref = online.init_state(H[:-9], T[:-9], C, V)
+    np.testing.assert_allclose(st2.omega, ref.omega, rtol=5e-3, atol=5e-5)
+    np.testing.assert_allclose(st2.beta, ref.beta, rtol=5e-3, atol=5e-4)
+
+
+def test_add_then_remove_roundtrip():
+    H, T = _data(80)
+    dH, dT = _data(5, seed=2)
+    st = online.init_state(H, T, C, V)
+    st2 = online.remove_chunk(online.add_chunk(st, dH, dT), dH, dT)
+    np.testing.assert_allclose(st2.omega, st.omega, rtol=5e-3, atol=5e-5)
+    np.testing.assert_allclose(st2.Q, st.Q, rtol=1e-4, atol=1e-4)
+
+
+def test_streaming_chunks_equal_batch():
+    """Chunk-by-chunk online learning == batch training (paper Sec. III-E)."""
+    H, T = _data(128, seed=5)
+    st = online.init_state(H[:32], T[:32], C, V)
+    for i in range(32, 128, 16):
+        st = online.add_chunk(st, H[i : i + 16], T[i : i + 16])
+    ref = online.init_state(H, T, C, V)
+    np.testing.assert_allclose(st.beta, ref.beta, rtol=1e-2, atol=1e-3)
+
+
+def test_update_chunk_remove_then_add():
+    H, T = _data(64)
+    dH, dT = _data(6, seed=3)
+    st = online.init_state(H, T, C, V)
+    st2 = online.update_chunk(st, added=(dH, dT), removed=(H[:6], T[:6]))
+    ref = online.init_state(
+        jnp.concatenate([H[6:], dH]), jnp.concatenate([T[6:], dT]), C, V
+    )
+    np.testing.assert_allclose(st2.beta, ref.beta, rtol=5e-3, atol=5e-4)
+
+
+def test_batched_variants():
+    Hs = jnp.stack([_data(40, seed=i)[0] for i in range(3)])
+    Ts = jnp.stack([_data(40, seed=i)[1] for i in range(3)])
+    sts = jax.vmap(lambda h, t: online.init_state(h, t, C, V))(Hs, Ts)
+    dH = Hs[:, :5]
+    dT = Ts[:, :5]
+    out = online.batched_add_chunk(sts, dH, dT)
+    for i in range(3):
+        ref = online.add_chunk(
+            online.OnlineNodeState(sts.omega[i], sts.Q[i]), dH[i], dT[i]
+        )
+        np.testing.assert_allclose(out.omega[i], ref.omega, rtol=1e-5)
+    betas = online.reseed_betas(out)
+    assert betas.shape == (3, 12, 2)

@@ -1,0 +1,106 @@
+"""PartitionSpec assignment rules (distributed/sharding.py)."""
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import registry
+from repro.distributed.sharding import MeshAxes, param_pspecs
+from repro.models import Model
+
+AXES_TRAIN = MeshAxes(
+    node=("data",), fsdp=(), model="model",
+    sizes={"data": 16, "model": 16},
+)
+AXES_POD = MeshAxes(
+    node=("pod",), fsdp=("data",), model="model",
+    sizes={"pod": 2, "data": 16, "model": 16},
+)
+AXES_SERVE = MeshAxes(
+    node=(), fsdp=("data",), model="model",
+    sizes={"data": 16, "model": 16},
+)
+
+
+def _specs(arch, axes, node_dim):
+    cfg = registry()[arch]
+    shapes = jax.eval_shape(Model(cfg).init, jax.random.key(0))
+    if node_dim:
+        V = max(axes.node_count, 1)
+        shapes = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((V,) + s.shape, s.dtype), shapes
+        )
+    return cfg, shapes, param_pspecs(cfg, axes, shapes, node_dim=node_dim)
+
+
+def test_dense_divisible_heads_sharded():
+    cfg, shapes, specs = _specs("qwen2-72b", AXES_POD, node_dim=True)
+    wq = specs["layers"]["attn"]["wq"]
+    # (V, L, d, H, hd): node, -, fsdp, model, -
+    assert wq == P("pod", None, "data", "model", None)
+    # vocab divisible: embedding sharded on vocab + fsdp on d
+    assert specs["embed"] == P("pod", "model", "data")
+
+
+def test_nondivisible_heads_replicated():
+    cfg, shapes, specs = _specs("starcoder2-3b", AXES_TRAIN, node_dim=True)
+    # 24 heads % 16 != 0 -> attention replicated over model
+    assert specs["layers"]["attn"]["wq"] == P("data", None, None, None, None)
+    # but MLP f=12288 divides -> sharded
+    assert specs["layers"]["mlp"]["w_gate"] == P("data", None, None, "model")
+
+
+def test_moe_expert_parallel_when_divisible():
+    _, _, specs = _specs("dbrx-132b", AXES_POD, node_dim=True)
+    # 16 experts over 16 chips: expert-parallel
+    assert specs["layers"]["moe"]["w_gate"] == P("pod", None, "model", "data", None)
+
+
+def test_moe_tensor_parallel_fallback():
+    _, _, specs = _specs("grok-1-314b", AXES_POD, node_dim=True)
+    # 8 experts < 16 chips: fall back to d_ff sharding
+    assert specs["layers"]["moe"]["w_gate"] == P("pod", None, None, "data", "model")
+
+
+def test_ssm_head_sharding():
+    _, _, specs = _specs("mamba2-780m", AXES_TRAIN, node_dim=True)
+    # 48 ssm heads % 16 == 0 -> inner projections shard over model
+    assert specs["layers"]["mamba"]["w_z"] == P("data", None, None, "model")
+    assert specs["layers"]["mamba"]["out_proj"] == P("data", None, "model", None)
+    # shared B/C projections stay replicated
+    assert specs["layers"]["mamba"]["w_B"] == P("data", None, None, None)
+
+
+def test_vocab_not_divisible_replicated():
+    _, _, specs = _specs("internvl2-2b", AXES_TRAIN, node_dim=True)
+    # 92553 % 16 != 0 -> vocab dim replicated, d sharded only under fsdp
+    assert specs["embed"] == P("data", None, None)
+
+
+def test_serve_mode_no_node_dim():
+    _, shapes, specs = _specs("gemma2-2b", AXES_SERVE, node_dim=False)
+    # embed (vocab, d): vocab 256000 % 16 == 0
+    assert specs["embed"] == P("model", "data")
+    for spec, shape in zip(jax.tree.leaves(specs), jax.tree.leaves(shapes)):
+        assert len(spec) == len(shape.shape)
+
+
+def test_all_specs_rank_match():
+    for arch in registry():
+        for axes, nd in [(AXES_TRAIN, True), (AXES_POD, True), (AXES_SERVE, False)]:
+            _, shapes, specs = _specs(arch, axes, node_dim=nd)
+            for spec, shape in zip(
+                jax.tree.leaves(
+                    specs, is_leaf=lambda x: isinstance(x, P)
+                ),
+                jax.tree.leaves(shapes),
+            ):
+                assert len(spec) <= len(shape.shape), (arch, spec, shape.shape)
+                # every dim sharded by an axis must divide
+                for dim, ax in zip(shape.shape, list(spec)):
+                    if ax is None:
+                        continue
+                    axs = ax if isinstance(ax, tuple) else (ax,)
+                    size = 1
+                    for a in axs:
+                        size *= axes.sizes[a]
+                    assert dim % size == 0, (arch, spec, shape.shape)

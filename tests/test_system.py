@@ -1,0 +1,131 @@
+"""End-to-end behaviour tests: the paper's claims + system integration.
+
+Multi-device paths run in subprocesses with forced host device counts so
+the rest of the suite keeps the real single-device backend.
+"""
+
+import json
+import os
+
+import pytest
+
+from tests.conftest import REPO, run_py
+
+
+def test_sinc_experiment_end_to_end():
+    """Paper Test Case 1: DC-ELM ~= centralized ELM on noisy SinC."""
+    code = """
+import jax
+jax.config.update('jax_enable_x64', True)  # stiff C=2^8 ridge solves
+import jax.numpy as jnp
+from repro.core import consensus, dc_elm, elm
+from repro.data.sinc import make_sinc_dataset
+X, Y, Xt, Yt = make_sinc_dataset(jax.random.key(0), num_nodes=4, per_node=500, num_test=1000)
+X, Y = X.astype(jnp.float64), Y.astype(jnp.float64)
+fmap, final, _ = dc_elm.simulate_train(
+    jax.random.key(1), X, Y, num_features=100, C=2**8,
+    graph=consensus.paper_fig2(), gamma=1/2.1, num_iters=2000)
+H = jax.vmap(fmap)(X)
+beta_c = elm.ridge_solve(H.reshape(-1, 100), Y.reshape(-1, 1), 2**8)
+cent = elm.ELM(feature_map=fmap, beta=beta_c)
+mse_c = float(elm.mse(cent, Xt, Yt))
+mses = [float(elm.mse(elm.ELM(feature_map=fmap, beta=final.betas[i]), Xt, Yt)) for i in range(4)]
+assert mse_c < 5e-3, mse_c
+assert max(mses) < mse_c * 1.6 + 2e-3, (mses, mse_c)
+print('OK', mse_c, max(mses))
+"""
+    r = run_py(code)
+    assert r.returncode == 0, r.stderr
+
+
+def test_consensus_training_on_devices():
+    """Sharded consensus trainer: loss falls, replicas agree."""
+    code = """
+import jax, jax.numpy as jnp, numpy as np
+from repro.configs import registry
+from repro.distributed.steps import make_train_bundle, jit_train_step
+from repro.core import dsgd
+from repro.optim import adamw
+from repro.data.lm import TokenStream
+mesh = jax.make_mesh((4, 2), ('data', 'model'), axis_types=(jax.sharding.AxisType.Auto,)*2)
+cfg = registry()['starcoder2-3b'].reduced()
+bundle = make_train_bundle(cfg, mesh, adamw(3e-3), seed=0)
+V = bundle.node_count
+state = bundle.init_fn(jax.random.key(0))
+stream = TokenStream(cfg.vocab_size, 0)
+rng = np.random.default_rng(0)
+def nb():
+    t = stream.sample(rng, V*2, 32).reshape(V, 2, 33)
+    return {'tokens': jnp.asarray(t[..., :-1], jnp.int32),
+            'labels': jnp.asarray(t[..., 1:], jnp.int32)}
+b = nb()
+shape = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), b)
+step = jit_train_step(bundle, mesh, shape)
+losses = []
+for i in range(25):
+    state, m = step(state, b)
+    losses.append(float(jnp.mean(m['loss'])))
+    b = nb()
+assert losses[-1] < losses[0], losses
+cd = float(dsgd.consensus_distance(state.params))
+assert cd < 0.05, cd
+print('OK', losses[0], losses[-1], cd)
+"""
+    r = run_py(code, devices=8, timeout=900)
+    assert r.returncode == 0, r.stderr
+
+
+def test_elm_head_integration():
+    """Paper algorithm on frozen backbone features reaches fusion answer."""
+    code = """
+from repro.launch.elm_head import main
+d1 = main(['--arch', 'gemma2-2b', '--reduced', '--nodes', '4',
+           '--batches', '2', '--iters', '3000', '--C', '1e-4'])
+assert d1 < 0.05, d1
+print('OK', d1)
+"""
+    r = run_py(code, timeout=900)
+    assert r.returncode == 0, r.stderr
+
+
+def test_train_cli_reduced():
+    code = """
+from repro.launch.train import main
+loss = main(['--arch', 'mamba2-780m', '--reduced', '--steps', '15',
+             '--batch', '2', '--seq', '32', '--devices', '1x1',
+             '--log-every', '0'])
+assert loss < 7.0, loss
+print('OK', loss)
+"""
+    r = run_py(code, timeout=900)
+    assert r.returncode == 0, r.stderr
+
+
+def test_serve_cli_reduced():
+    code = """
+from repro.launch.serve import main
+gen = main(['--arch', 'h2o-danube-1.8b', '--reduced', '--batch', '2',
+            '--prompt-len', '24', '--gen', '8'])
+assert gen.shape == (2, 8)
+print('OK')
+"""
+    r = run_py(code, timeout=900)
+    assert r.returncode == 0, r.stderr
+
+
+@pytest.mark.slow
+def test_dryrun_one_combo():
+    """Dry-run contract: 512-device lower+compile for one combo."""
+    out = "/tmp/test_dryrun_combo.json"
+    code = f"""
+import runpy, sys
+sys.argv = ['dryrun', '--arch', 'h2o-danube-1.8b', '--shape', 'decode_32k',
+            '--out', '{out}', '--quiet']
+runpy.run_module('repro.launch.dryrun', run_name='__main__')
+"""
+    r = run_py(code, timeout=1200)
+    assert r.returncode == 0, r.stderr
+    with open(out) as f:
+        rec = json.load(f)
+    assert rec["ok"], rec.get("reason")
+    assert rec["roofline"]["chips"] == 256
