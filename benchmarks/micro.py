@@ -8,7 +8,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import consensus, dc_elm, gossip, incremental, online
+from repro.core import consensus, dc_elm, engine, gossip, incremental, online
 from repro.kernels.gram import gram_pallas
 from repro.kernels.gram_ref import gram_reference
 from repro.kernels.ssd_ref import ssd_reference
@@ -127,10 +127,11 @@ def bench_consensus_vs_incremental():
     beta_star = dc_elm.centralized_from_node_stats(P_, Q_, C)
     budget_hops = 2000
     g = consensus.complete(V)  # all-neighbor exchange, 1 hop latency
-    final, _ = dc_elm.simulate_run(
-        state, g, g.default_gamma(), C, budget_hops
+    eng = engine.simulated_dc_elm(g, C)
+    betas, _ = eng.run(
+        state.betas, state.omegas, g.default_gamma(), budget_hops
     )
-    d_dc = float(dc_elm.distance_to(final.betas, beta_star))
+    d_dc = float(dc_elm.distance_to(betas, beta_star))
     z, _ = incremental.run(
         P_, Q_, alpha=2e-4, C=C, num_cycles=budget_hops // V
     )
@@ -155,6 +156,52 @@ def bench_consensus_vs_incremental():
     return rows, {}
 
 
+def bench_streaming_driver():
+    """Algorithm 2 end-to-end through the engine: one chunk event
+    (Woodbury add+remove, re-seed, K rounds) vs recompute-from-scratch
+    (O(L^3) per-node re-inversion, then the same K rounds)."""
+    rows = []
+    K = 50
+    for V, L, n, dn in [(4, 256, 4096, 64), (8, 512, 4096, 128)]:
+        M, C = 4, 8.0
+        g = consensus.ring(V)
+        ks = jax.random.split(jax.random.key(6), 4)
+        H = jax.random.normal(ks[0], (V, n, L)) / np.sqrt(L)
+        T = jax.random.normal(ks[1], (V, n, M))
+        dH = jax.random.normal(ks[2], (V, dn, L)) / np.sqrt(L)
+        dT = jax.random.normal(ks[3], (V, dn, M))
+        eng = engine.simulated_dc_elm(g, C)
+        state = eng.stream_init(H, T)
+        gamma = g.default_gamma()
+
+        @jax.jit
+        def chunk_event(s):
+            s2, _ = eng.stream_chunk(
+                s, added=(dH, dT), removed=(H[:, :dn], T[:, :dn]),
+                gamma=gamma, num_iters=K,
+            )
+            return s2.betas
+
+        us_stream = _timeit_us(chunk_event, state)
+
+        H2 = jnp.concatenate([H[:, dn:], dH], axis=1)
+        T2 = jnp.concatenate([T[:, dn:], dT], axis=1)
+
+        @jax.jit
+        def recompute(H2, T2):
+            s = eng.stream_init(H2, T2)
+            betas, _ = eng.run(s.betas, s.omegas, gamma, K)
+            return betas
+
+        us_direct = _timeit_us(recompute, H2, T2)
+        rows.append((
+            f"streaming/engine_V{V}_L{L}_dn{dn}_K{K}", us_stream,
+            f"recompute_us={us_direct:.0f};"
+            f"speedup={us_direct/us_stream:.1f}x",
+        ))
+    return rows, {}
+
+
 def bench_gossip_topologies():
     """Consensus cost across ICI-realizable topologies at equal rounds.
 
@@ -171,10 +218,11 @@ def bench_gossip_topologies():
     rounds = 1500
     for kind in ["ring", "torus", "hypercube", "complete"]:
         g = consensus.build(kind, V)
-        final, _ = dc_elm.simulate_run(
-            state, g, g.default_gamma(), C, rounds
+        eng = engine.simulated_dc_elm(g, C)
+        betas, _ = eng.run(
+            state.betas, state.omegas, g.default_gamma(), rounds
         )
-        dist = float(dc_elm.distance_to(final.betas, beta_star))
+        dist = float(dc_elm.distance_to(betas, beta_star))
         bytes_round = g.d_max * L * M * 4
         rows.append((
             f"topology/{kind}16", 0.0,

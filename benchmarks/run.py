@@ -66,6 +66,7 @@ def _register():
         "online": micro.bench_online_vs_direct,
         "comm": micro.bench_consensus_vs_incremental,
         "topology": micro.bench_gossip_topologies,
+        "streaming": micro.bench_streaming_driver,
         "roofline": _roofline_table,
     })
 

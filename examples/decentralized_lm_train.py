@@ -19,7 +19,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get
-from repro.core import consensus, dsgd
+from repro.core import consensus, dsgd, engine
 from repro.data.lm import TokenStream
 from repro.models import Model
 from repro.optim import adamw, linear_warmup_cosine
@@ -56,8 +56,14 @@ def main():
     V = args.nodes
     graph = consensus.ring(V) if V > 2 else consensus.line(V)
     opt = adamw(linear_warmup_cosine(3e-4, 20, args.steps))
+    # the same ConsensusEngine driver as DC-ELM, with the identity-metric
+    # AverageRule mixing parameter pytrees after each optimizer step
+    eng = engine.simulated_averaging(
+        jnp.asarray(graph.adjacency, jnp.float32)
+    )
     step = dsgd.make_simulated_train_step(
-        lambda p, b: model.loss(p, b)[0], opt, graph
+        lambda p, b: model.loss(p, b)[0], opt,
+        gamma=graph.default_gamma(), engine=eng,
     )
     state = dsgd.init_simulated(jax.random.key(0), model.init, opt, V)
 

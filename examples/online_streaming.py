@@ -1,7 +1,11 @@
 """Online DC-ELM (Algorithm 2): chunk-by-chunk streaming with expiry.
 
-Each node receives new samples and drops expired ones; the Woodbury
-updates keep per-chunk cost at O(L^2 dN) instead of O(L^3) re-solves.
+Each node receives new samples and drops expired ones; the engine's
+streaming driver (`ConsensusEngine.stream_chunk`) runs the full
+Algorithm 2 event — Woodbury add/remove in O(L^2 dN), beta re-seed at
+the new local optimum, K consensus rounds — per chunk. The identical
+driver runs sharded on a device mesh (see tests/test_engine.py); here it
+uses the simulated DenseMixer on the paper's Fig. 2 network.
 
 Run:  PYTHONPATH=src python examples/online_streaming.py
 """
@@ -11,22 +15,25 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.core import consensus, dc_elm, online
+from repro.core import consensus, engine
 from repro.core.features import make_random_features
 from repro.data.sinc import make_sinc_dataset
 
 V, L, C = 4, 100, 2.0**6
+WINDOW = 3  # chunks kept per node before they expire
 graph = consensus.paper_fig2()
 key = jax.random.key(0)
 fmap = make_random_features(jax.random.key(1), 1, L)
 
+eng = engine.simulated_dc_elm(graph, C)
+
 # initial data: a small warm-up set per node
 X, Y, X_test, Y_test = make_sinc_dataset(key, num_nodes=V, per_node=100)
-H0 = jax.vmap(fmap)(X)
-states = jax.vmap(lambda h, t: online.init_state(h, t, C, V))(H0, Y)
+state = eng.stream_init(jax.vmap(fmap)(X), Y)
 
 stream_key = jax.random.key(7)
 H_test = fmap(X_test)
+live_chunks = []  # sliding window of (H, T) chunks still in the model
 
 for step in range(6):
     # each node receives a fresh chunk of 50 samples...
@@ -35,17 +42,19 @@ for step in range(6):
     Yn = jnp.sin(Xn) / jnp.where(Xn == 0, 1.0, Xn) + jax.random.uniform(
         k2, (V, 50, 1), minval=-0.2, maxval=0.2
     )
+    added = (jax.vmap(fmap)(Xn), Yn)
+    # ...and the oldest chunk expires once the window is full
+    removed = live_chunks.pop(0) if len(live_chunks) >= WINDOW else None
+    live_chunks.append(added)
+
     t0 = time.perf_counter()
-    states = online.batched_add_chunk(states, jax.vmap(fmap)(Xn), Yn)
-    # ...then re-seed the consensus iteration from the updated stats
-    betas = online.reseed_betas(states)
-    dc_state = dc_elm.DCELMState(
-        betas=betas, omegas=states.omega, k=jnp.zeros((), jnp.int32)
+    state, _ = eng.stream_chunk(
+        state, added=added, removed=removed, gamma=1 / 2.1, num_iters=200
     )
-    final, _ = dc_elm.simulate_run(dc_state, graph, 1 / 2.1, C, 200)
-    jax.block_until_ready(final.betas)
+    jax.block_until_ready(state.betas)
     dt = time.perf_counter() - t0
-    preds = jnp.einsum("nl,vlm->vnm", H_test, final.betas)
+    preds = jnp.einsum("nl,vlm->vnm", H_test, state.betas)
     mse = float(jnp.mean((preds - Y_test[None]) ** 2))
-    print(f"chunk {step}: +50 samples/node, update+consensus in "
+    what = "+50" + ("/-50" if removed is not None else "")
+    print(f"chunk {step}: {what} samples/node, update+consensus in "
           f"{dt*1e3:.0f} ms, network test MSE {mse:.5f}")

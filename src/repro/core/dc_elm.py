@@ -11,16 +11,21 @@ Per-node state and iteration (paper eqs. 20-21):
 with 0 < gamma < 1/d_max. Theorem 2: on a connected graph, beta_i(k) ->
 beta* (the centralized solution) for every node.
 
-Two execution paths, both jitted:
+The iteration itself is implemented once, in core/engine.py
+(``DCELMRule`` under a ``ConsensusEngine``); this module keeps the
+paper-facing state/statistics helpers plus the historical entry points
+as thin wrappers over the engine:
 
 * ``simulate_*`` — all V nodes live on one device as a leading axis;
-  mixing uses the dense adjacency. Ground-truth path used by the
-  fidelity experiments (SinC / MNIST reproductions) and by tests —
-  supports arbitrary graphs (incl. the paper's random geometric ones).
+  mixing uses the dense adjacency (``mixers.DenseMixer``). Ground-truth
+  path used by the fidelity experiments (SinC / MNIST reproductions)
+  and by tests — supports arbitrary graphs (incl. the paper's random
+  geometric ones).
 
 * ``sharded_*`` — node i is the shard at mesh position i along the
   consensus axes; mixing is neighbor-only ``lax.ppermute`` gossip
-  (core/gossip.py) under ``shard_map``. This is the production path.
+  (``mixers.PpermuteMixer`` over core/gossip.py) under ``shard_map``.
+  This is the production path.
 """
 
 from __future__ import annotations
@@ -32,10 +37,10 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax import lax
 from jax.sharding import PartitionSpec as P
 
-from repro.core import gossip
+from repro.core import engine as engine_lib
+from repro.core import gossip, mixers
 from repro.core.consensus import Graph
 
 
@@ -136,14 +141,11 @@ def simulate_step(
     state: DCELMState, adjacency: jax.Array, gamma: jax.Array, C: float
 ) -> DCELMState:
     """One synchronous DC-ELM round on a dense adjacency (paper eq. 20)."""
-    V = state.num_nodes
-    betas = state.betas  # (V, L, M)
-    # sum_j a_ij (beta_j - beta_i)  ==  A @ betas - deg * betas
-    mixed = jnp.einsum("ij,jlm->ilm", adjacency, betas)
-    deg = jnp.sum(adjacency, axis=1)
-    lap_term = mixed - deg[:, None, None] * betas
-    update = jnp.einsum("vlk,vkm->vlm", state.omegas, lap_term)
-    new_betas = betas + (gamma / (V * C)) * update
+    eng = engine_lib.ConsensusEngine(
+        mixers.DenseMixer(adjacency),
+        engine_lib.DCELMRule(state.num_nodes, C),
+    )
+    new_betas = eng.step(state.betas, state.omegas, gamma)
     return dataclasses.replace(state, betas=new_betas, k=state.k + 1)
 
 
@@ -156,22 +158,19 @@ def simulate_run(
     *,
     trace_fn: Callable[[jax.Array], jax.Array] | None = None,
 ):
-    """Run num_iters rounds with lax.scan.
+    """Run num_iters rounds through the engine's scan driver.
 
     trace_fn: optional per-iteration metric over stacked betas (e.g. the
     paper's average empirical risk R_d(k), eq. 32). Returns
     (final_state, traces or None).
     """
-    adj = jnp.asarray(graph.adjacency, dtype=state.betas.dtype)
+    eng = engine_lib.simulated_dc_elm(graph, C, dtype=state.betas.dtype)
     gamma = jnp.asarray(gamma, dtype=state.betas.dtype)
-
-    def body(s, _):
-        s = simulate_step(s, adj, gamma, C)
-        out = trace_fn(s.betas) if trace_fn is not None else jnp.zeros(())
-        return s, out
-
-    final, traces = lax.scan(body, state, None, length=num_iters)
-    return final, (traces if trace_fn is not None else None)
+    betas, traces = eng.run(
+        state.betas, state.omegas, gamma, num_iters, trace_fn=trace_fn
+    )
+    final = dataclasses.replace(state, betas=betas, k=state.k + num_iters)
+    return final, traces
 
 
 def simulate_train(
@@ -220,20 +219,15 @@ def simulate_run_time_varying(
     connected) — each individual snapshot may be disconnected. gamma
     must satisfy the bound for the max degree across snapshots.
     """
-    adjs = jnp.stack(
-        [jnp.asarray(g.adjacency, dtype=state.betas.dtype) for g in graphs]
+    eng = engine_lib.simulated_dc_elm(
+        list(graphs), C, dtype=state.betas.dtype
     )
     gamma = jnp.asarray(gamma, dtype=state.betas.dtype)
-    n = len(graphs)
-
-    def body(s, k):
-        adj = adjs[k % n]
-        s = simulate_step(s, adj, gamma, C)
-        out = trace_fn(s.betas) if trace_fn is not None else jnp.zeros(())
-        return s, out
-
-    final, traces = lax.scan(body, state, jnp.arange(num_iters))
-    return final, (traces if trace_fn is not None else None)
+    betas, traces = eng.run(
+        state.betas, state.omegas, gamma, num_iters, trace_fn=trace_fn
+    )
+    final = dataclasses.replace(state, betas=betas, k=state.k + num_iters)
+    return final, traces
 
 
 def joint_gamma_bound(graphs: list[Graph]) -> float:
@@ -244,11 +238,6 @@ def joint_gamma_bound(graphs: list[Graph]) -> float:
 # ---------------------------------------------------------------------------
 # Sharded (multi-device, ppermute gossip) path
 # ---------------------------------------------------------------------------
-
-
-def _node_spec(spec: gossip.GossipSpec) -> P:
-    """PartitionSpec placing the leading node axis on the consensus axes."""
-    return P(spec.axes if len(spec.axes) > 1 else spec.axes[0])
 
 
 def sharded_step_fn(
@@ -262,18 +251,16 @@ def sharded_step_fn(
     axes) sharded across those axes; inside shard_map each shard sees its
     own (1, L, M) slice and exchanges only with mesh neighbors.
     """
-    sizes = gossip.mesh_axis_sizes(mesh)
-    gossip.validate_spec(spec, mesh)
-    V = spec.num_nodes(sizes)
-    nspec = _node_spec(spec)
+    from repro.utils import compat
+
+    eng = engine_lib.sharded_dc_elm(mesh, spec, C)
+    nspec = eng.mixer.node_pspec()
 
     def body(betas, omegas, gamma):
         # betas: (1, L, M) local shard
-        lap = gossip.neighbor_laplacian(betas, spec, sizes)
-        upd = jnp.einsum("vlk,vkm->vlm", omegas, lap)
-        return betas + (gamma / (V * C)) * upd
+        return eng.step(betas, omegas, gamma)
 
-    shard = jax.shard_map(
+    shard = compat.shard_map(
         body,
         mesh=mesh,
         in_specs=(nspec, nspec, P()),
@@ -291,37 +278,10 @@ def sharded_run(
     C: float,
     num_iters: int,
 ):
-    """num_iters gossip rounds under jit+scan on the mesh."""
-    sizes = gossip.mesh_axis_sizes(mesh)
-    V = spec.num_nodes(sizes)
-    nspec = _node_spec(spec)
-
-    def body(carry, _):
-        b = carry
-
-        def inner(b_, o_):
-            lap = gossip.neighbor_laplacian(b_, spec, sizes)
-            upd = jnp.einsum("vlk,vkm->vlm", o_, lap)
-            return b_ + (gamma / (V * C)) * upd
-
-        b = jax.shard_map(
-            inner, mesh=mesh, in_specs=(nspec, nspec), out_specs=nspec
-        )(b, omegas)
-        return b, None
-
-    @functools.partial(
-        jax.jit,
-        in_shardings=(
-            jax.sharding.NamedSharding(mesh, nspec),
-            jax.sharding.NamedSharding(mesh, nspec),
-        ),
-        out_shardings=jax.sharding.NamedSharding(mesh, nspec),
-    )
-    def run(b, o):
-        final, _ = lax.scan(lambda c, x: body(c, x), b, None, length=num_iters)
-        return final
-
-    return run(betas, omegas)
+    """num_iters gossip rounds as one shard_map(scan) program on the mesh."""
+    eng = engine_lib.sharded_dc_elm(mesh, spec, C)
+    final, _ = eng.run(betas, omegas, gamma, num_iters)
+    return final
 
 
 # ---------------------------------------------------------------------------

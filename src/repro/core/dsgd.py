@@ -12,10 +12,12 @@ no closed form; this recovers D-PSGD-style decentralized SGD, the
 modern descendant of the paper's scheme). gamma < 1/d_max still governs
 stability of the mixing step.
 
-Two paths again:
-  * simulated — stacked leading node axis + dense adjacency (tests,
+Both paths run through the ConsensusEngine (core/engine.py) with the
+``AverageRule`` — the same driver DC-ELM uses, with the identity metric
+in place of Omega_i:
+  * simulated — stacked leading node axis + ``DenseMixer`` (tests,
     small experiments);
-  * sharded — gossip.neighbor_laplacian under shard_map; this is what
+  * sharded — ``PpermuteMixer`` inside shard_map; this is what
     launch/train.py lowers for the assigned architectures, with each
     consensus node's replica further sharded over the "model" axis.
 """
@@ -23,7 +25,6 @@ Two paths again:
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Callable, NamedTuple
 
 import jax
@@ -31,6 +32,11 @@ import jax.numpy as jnp
 
 from repro.core import gossip
 from repro.core.consensus import Graph
+from repro.core.engine import (
+    ConsensusEngine,
+    simulated_averaging,
+    sharded_averaging,
+)
 from repro.optim.optimizers import Optimizer, apply_updates
 
 
@@ -39,59 +45,48 @@ class DSGDState(NamedTuple):
     opt_state: object
 
 
-def _compress(x, mode):
-    """Gossip payload compression (paper Sec. V future work: 'reduction
-    of the amount of information exchanging'). 'bf16' halves every
-    neighbor message; the Laplacian delta is applied back in the
-    original dtype, so quantization error enters only through the
-    (bounded, gamma-scaled) mixing term."""
-    if mode is None:
-        return x
-    if mode == "bf16":
-        return x.astype(jnp.bfloat16)
-    raise ValueError(f"unknown gossip compression {mode!r}")
-
-
 def mix_simulated(stacked, adjacency: jax.Array, gamma, compress=None) -> object:
     """Paper mixing rule on a stacked pytree (leading axis = node)."""
-
-    def leaf(x):
-        x2 = _compress(x.reshape(x.shape[0], -1), compress)
-        mixed = (
-            adjacency @ x2.astype(jnp.float32)
-            - jnp.sum(adjacency, 1)[:, None] * x2.astype(jnp.float32)
-        )
-        out = x.reshape(x.shape[0], -1) + gamma * mixed.astype(x.dtype)
-        return out.reshape(x.shape)
-
-    return jax.tree.map(leaf, stacked)
+    return simulated_averaging(adjacency, compress=compress).step(
+        stacked, None, gamma
+    )
 
 
 def mix_sharded(
     params, gamma, spec: gossip.GossipSpec, axis_sizes, compress=None
 ) -> object:
     """Paper mixing rule inside shard_map (one replica per consensus node)."""
-    payload = jax.tree.map(lambda p: _compress(p, compress), params)
-    lap = gossip.neighbor_laplacian(payload, spec, axis_sizes)
-    return jax.tree.map(
-        lambda p, d: p + gamma * d.astype(p.dtype), params, lap
+    return sharded_averaging(spec, axis_sizes, compress=compress).step(
+        params, None, gamma
     )
 
 
 def make_simulated_train_step(
     loss_fn: Callable,
     optimizer: Optimizer,
-    graph: Graph,
+    graph: Graph | None = None,
     gamma: float | None = None,
+    *,
+    engine: ConsensusEngine | None = None,
 ):
     """Build a jitted decentralized train step for the simulated path.
 
     loss_fn(params, batch) -> scalar; params is one node's pytree.
     State params/opt_state carry a leading V axis; batches are (V, ...).
+    Pass either a ``graph`` (an AverageRule engine is built for it) or a
+    ready-made ``engine`` (e.g. with gossip compression).
     """
+    if engine is None:
+        if graph is None:
+            raise ValueError("need a graph or an engine")
+        engine = simulated_averaging(
+            jnp.asarray(graph.adjacency, jnp.float32)
+        )
     if gamma is None:
-        gamma = graph.default_gamma()
-    adjacency = jnp.asarray(graph.adjacency, jnp.float32)
+        if graph is not None:
+            gamma = graph.default_gamma()
+        else:
+            gamma = engine.mixer.default_gamma()
 
     grad_fn = jax.vmap(jax.value_and_grad(loss_fn))
     v_update = jax.vmap(optimizer.update)
@@ -101,7 +96,7 @@ def make_simulated_train_step(
         losses, grads = grad_fn(state.params, batch)
         updates, opt_state = v_update(grads, state.opt_state, state.params)
         params = apply_updates(state.params, updates)
-        params = mix_simulated(params, adjacency, gamma)
+        params = engine.step(params, None, gamma)
         return DSGDState(params, opt_state), losses
 
     return step

@@ -17,7 +17,6 @@ the pooled corpus — with no raw token leaving its node.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import NamedTuple
 
 import jax
@@ -25,7 +24,8 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ArchConfig
-from repro.core import gossip
+from repro.core import engine as engine_lib
+from repro.core import mixers
 from repro.distributed import sharding as shd
 from repro.kernels import gram_ops
 from repro.models import Model
@@ -106,28 +106,36 @@ def make_elm_head_bundle(
 
         return jax.vmap(per_node)(stats.P, stats.Q)
 
+    # one mixer for the bundle's lifetime: its _programs cache keys on
+    # (rule, iters, specs), so repeated gossip_rounds calls compile once
+    mixer = (
+        mixers.PpermuteMixer(spec=spec, axis_sizes=sizes, mesh=mesh)
+        if spec is not None
+        else None
+    )
+
     def gossip_rounds(betas, omegas, gamma, iters: int, C: float):
-        """Paper eq. (20) on the mesh consensus axes."""
-        if spec is None:
+        """Paper eq. (20) on the mesh consensus axes, via the engine.
+
+        The vocab readout's trailing dim is model-sharded, so the
+        engine's sharded scan gets explicit state/aux specs instead of
+        the default node-only placement.
+        """
+        if mixer is None:
             return betas
-        bspec = P(node_spec, None, mspec)
-        ospec = stats_pspecs.P
-
-        def one_round(b, o):
-            lap = gossip.neighbor_laplacian(b, spec, sizes)
-            return b + (gamma / (V * C)) * jnp.einsum("vlk,vkm->vlm", o, lap)
-
-        def run(b, o):
-            def body(bb, _):
-                return jax.shard_map(
-                    one_round, mesh=mesh, in_specs=(bspec, ospec),
-                    out_specs=bspec,
-                )(bb, o), None
-
-            b, _ = jax.lax.scan(body, b, None, length=iters)
-            return b
-
-        return run(betas, omegas)
+        eng = engine_lib.ConsensusEngine(mixer, engine_lib.DCELMRule(V, C))
+        final, _ = eng.run(
+            betas,
+            omegas,
+            gamma,
+            iters,
+            state_spec=P(node_spec, None, mspec),
+            # Omega contracts over its full (d, d) block inside the
+            # shard_map, so it must enter replicated over "model" even
+            # when its at-rest storage (stats_pspecs.P) is model-sharded
+            aux_spec=P(node_spec, None, None),
+        )
+        return final
 
     return ELMHeadBundle(
         init_stats=init_stats,

@@ -1,0 +1,262 @@
+"""ConsensusEngine — the one consensus update rule, every execution path.
+
+The paper's fusion-center-free iteration (Algorithm 1, eq. 20)
+
+    beta_i(k+1) = beta_i(k) + (gamma / VC) * Omega_i * lap_i,
+    lap_i = sum_{j in N_i} a_ij (beta_j(k) - beta_i(k))
+
+used to live in four hand-rolled copies (simulated step/run, the two
+sharded bodies, plus per-consumer glue). It now lives **here, once**,
+factored as
+
+    Engine  =  Mixer (who computes lap_i, and where)   [core/mixers.py]
+            x  UpdateRule (what lap_i does to the state)     [this file]
+
+UpdateRules:
+  * ``DCELMRule``   — the paper's preconditioned step (Omega_i metric).
+  * ``AverageRule`` — identity metric: plain consensus averaging
+    (gossip.neighbor_avg semantics) and D-PSGD parameter mixing
+    (core/dsgd.py) over arbitrary pytrees.
+
+On top of the round driver, ``stream_chunk`` implements **Algorithm 2**
+end-to-end — Woodbury remove/add of a data chunk, beta re-seed at the
+new local optimum, K consensus rounds — and runs on *both* mixers, so
+the sharded production path gets online learning from the same code
+the simulated fidelity path is tested with. See DESIGN.md.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import gossip, online
+from repro.core.consensus import Graph
+from repro.core.mixers import DenseMixer, PpermuteMixer
+
+
+# ---------------------------------------------------------------------------
+# Update rules
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class DCELMRule:
+    """Paper eq. (20): beta += (gamma/VC) * Omega @ lap.
+
+    ``aux`` carries the stacked frozen preconditioners Omega_i with the
+    same leading node axis as the state ((V, L, L) dense, (1, L, L) per
+    shard) — the einsum below is identical in both layouts. This is the
+    only implementation of the DC-ELM round body in the codebase.
+    """
+
+    num_nodes: int
+    C: float
+
+    def __call__(self, x, lap, aux, gamma):
+        V, C = self.num_nodes, self.C
+        update = jnp.einsum("vlk,vkm->vlm", aux, lap)
+        return x + (gamma / (V * C)) * update
+
+
+@dataclasses.dataclass(frozen=True)
+class AverageRule:
+    """Identity-metric mixing x += gamma * lap, per pytree leaf.
+
+    The paper's rule with Omega_i = I: plain consensus averaging, and —
+    applied to parameter pytrees after a local optimizer step — the
+    D-PSGD mixing used by the deep-net trainer (core/dsgd.py), where the
+    non-quadratic objective has no closed-form ELM preconditioner.
+    """
+
+    def __call__(self, x, lap, aux, gamma):
+        del aux
+        return jax.tree.map(lambda v, d: v + gamma * d.astype(v.dtype), x, lap)
+
+
+# ---------------------------------------------------------------------------
+# Engine
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ConsensusEngine:
+    """One consensus iteration = rule(state, mixer.laplacian(state))."""
+
+    mixer: Any
+    rule: Callable
+
+    def step(self, x, aux=None, gamma=None, k=0):
+        """A single consensus round, in the mixer's execution context.
+
+        For ``PpermuteMixer`` this must run inside a caller-managed
+        shard_map (distributed/steps.py and core/elm_head.py do this to
+        mix replicas whose leaves are further model-sharded); for
+        ``DenseMixer`` it is directly callable/jittable.
+        """
+        return self.rule(x, self.mixer.laplacian(x, k), aux, gamma)
+
+    def run(
+        self,
+        x,
+        aux,
+        gamma,
+        num_iters: int,
+        *,
+        trace_fn=None,
+        state_spec=None,
+        aux_spec=None,
+    ):
+        """num_iters rounds under the mixer's scan driver.
+
+        trace_fn: optional per-round metric over the stacked state
+        (DenseMixer only). state_spec/aux_spec: PartitionSpec overrides
+        for states whose trailing dims are also sharded (PpermuteMixer
+        only). Returns (final_state, traces or None).
+        """
+        return self.mixer.run(
+            self.rule, x, aux, gamma, num_iters, trace_fn, state_spec,
+            aux_spec,
+        )
+
+    # -- streaming (paper Algorithm 2) ------------------------------------
+
+    def stream_init(self, H_nodes, T_nodes) -> "StreamState":
+        """Per-node sufficient statistics + local ridge seed from stacked
+        warm-up data H:(V,Ni,L), T:(V,Ni,M). Requires a DCELMRule."""
+        C, V = self._ridge_constants()
+        states = jax.vmap(lambda h, t: online.init_state(h, t, C, V))(
+            H_nodes, T_nodes
+        )
+        return StreamState(
+            omegas=states.omega, Qs=states.Q, betas=online.reseed_betas(states)
+        )
+
+    def stream_chunk(
+        self,
+        state: "StreamState",
+        added=None,
+        removed=None,
+        *,
+        gamma,
+        num_iters: int,
+        trace_fn=None,
+        state_spec=None,
+        aux_spec=None,
+    ):
+        """One Algorithm 2 event on every node, end-to-end.
+
+        added/removed: optional (dH, dT) pairs with stacked shapes
+        (V, dN, L)/(V, dN, M). Steps 5-12: Woodbury remove-then-add in
+        O(L^2 dN) per node; step 13: re-seed beta_i = Omega_i Q_i (which
+        restores the zero-gradient-sum invariant); then ``num_iters``
+        consensus rounds toward the new centralized solution. Works on
+        both mixers — on PpermuteMixer the stat updates are node-local
+        batched ops and only the rounds touch the ICI.
+
+        Returns (StreamState, traces or None).
+        """
+        self._ridge_constants()  # assert a DCELMRule before any work
+        ostate = online.OnlineNodeState(omega=state.omegas, Q=state.Qs)
+        if removed is not None:
+            ostate = online.batched_remove_chunk(ostate, *removed)
+        if added is not None:
+            ostate = online.batched_add_chunk(ostate, *added)
+        betas = online.reseed_betas(ostate)
+        final, traces = self.run(
+            betas,
+            ostate.omega,
+            gamma,
+            num_iters,
+            trace_fn=trace_fn,
+            state_spec=state_spec,
+            aux_spec=aux_spec,
+        )
+        return (
+            StreamState(omegas=ostate.omega, Qs=ostate.Q, betas=final),
+            traces,
+        )
+
+    def _ridge_constants(self) -> tuple[float, int]:
+        if not isinstance(self.rule, DCELMRule):
+            raise TypeError(
+                "streaming (Algorithm 2) re-seeds beta = Omega @ Q and so "
+                f"requires a DCELMRule, got {type(self.rule).__name__}"
+            )
+        return self.rule.C, self.rule.num_nodes
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class StreamState:
+    """Stacked per-node streaming state (Algorithm 2 carry).
+
+    omegas: (V, L, L) current (I/(VC) + P_i)^{-1}
+    Qs:     (V, L, M) current H_i^T T_i
+    betas:  (V, L, M) node estimates after the last consensus rounds
+    """
+
+    omegas: jax.Array
+    Qs: jax.Array
+    betas: jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Convenience constructors
+# ---------------------------------------------------------------------------
+
+
+def simulated_dc_elm(
+    graphs: Graph | list[Graph] | jax.Array,
+    C: float,
+    *,
+    dtype=jnp.float32,
+    compress: str | None = None,
+) -> ConsensusEngine:
+    """DC-ELM over arbitrary dense graphs (the fidelity/simulation path)."""
+    if isinstance(graphs, (Graph, list)):
+        mixer = DenseMixer.from_graphs(graphs, dtype=dtype, compress=compress)
+    else:
+        mixer = DenseMixer(graphs, compress=compress)
+    return ConsensusEngine(mixer, DCELMRule(mixer.num_nodes, C))
+
+
+def sharded_dc_elm(
+    mesh: jax.sharding.Mesh,
+    spec: gossip.GossipSpec,
+    C: float,
+    *,
+    compress: str | None = None,
+) -> ConsensusEngine:
+    """DC-ELM over mesh neighbors (the ppermute production path)."""
+    mixer = PpermuteMixer.for_mesh(mesh, spec, compress=compress)
+    return ConsensusEngine(mixer, DCELMRule(mixer.num_nodes, C))
+
+
+def simulated_averaging(
+    adjacency, *, compress: str | None = None
+) -> ConsensusEngine:
+    """Plain consensus averaging / D-PSGD mixing on a dense adjacency."""
+    return ConsensusEngine(
+        DenseMixer(adjacency, compress=compress), AverageRule()
+    )
+
+
+def sharded_averaging(
+    spec: gossip.GossipSpec,
+    axis_sizes: dict,
+    *,
+    mesh: jax.sharding.Mesh | None = None,
+    compress: str | None = None,
+) -> ConsensusEngine:
+    """Plain consensus averaging / D-PSGD mixing via ppermute gossip."""
+    return ConsensusEngine(
+        PpermuteMixer(
+            spec=spec, axis_sizes=dict(axis_sizes), mesh=mesh,
+            compress=compress,
+        ),
+        AverageRule(),
+    )

@@ -21,6 +21,8 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
+from repro.utils import compat
+
 
 def solve(P_sum: jax.Array, Q_sum: jax.Array, C: float) -> jax.Array:
     L = P_sum.shape[0]
@@ -48,7 +50,7 @@ def sharded_fn(mesh: jax.sharding.Mesh, reduce_axes, C: float):
         Q_ = lax.psum(Q_, reduce_axes)
         return solve(P_, Q_, C)
 
-    shard = jax.shard_map(
+    shard = compat.shard_map(
         body,
         mesh=mesh,
         in_specs=(P(reduce_axes), P(reduce_axes)),

@@ -35,24 +35,33 @@ def run(
     C: float,
     num_cycles: int,
     beta0: jax.Array | None = None,
+    decay: float = 0.0,
 ):
     """Run num_cycles Hamiltonian cycles; returns the estimate trace.
 
     The cycle order is node 0, 1, ..., V-1 (identity Hamiltonian path on
     the stacked representation — finding one in a general graph is the
     NP-hard step the paper criticizes; here we simply assume it).
+
+    Cycle k uses the step alpha / (1 + decay * k). The default
+    decay=0.0 is the paper's constant-step baseline, which stalls at an
+    O(alpha) bias around the optimum; pass decay > 0 (harmonic
+    diminishing schedule, the standard incremental-gradient convergence
+    condition) when exact convergence is wanted.
     """
     V, L, M = Q_.shape
     VC = V * C
     z0 = jnp.zeros((L, M), P_.dtype) if beta0 is None else beta0
 
-    def cycle(z, _):
+    def cycle(z, k):
+        a = alpha / (1.0 + decay * k)
+
         def hop(z, pq):
             p, q = pq
-            return z - alpha * node_grad(z, p, q, VC), None
+            return z - a * node_grad(z, p, q, VC), None
 
         z, _ = lax.scan(hop, z, (P_, Q_))
         return z, z
 
-    zf, trace = lax.scan(cycle, z0, None, length=num_cycles)
+    zf, trace = lax.scan(cycle, z0, jnp.arange(num_cycles))
     return zf, trace

@@ -1,0 +1,268 @@
+"""Pluggable communication backends ("mixers") for the ConsensusEngine.
+
+A Mixer answers one question — *how does the network Laplacian term*
+
+    lap_i = sum_{j in N_i} a_ij (x_j - x_i)
+
+*get computed for this execution substrate?* — and one follow-up: *how
+do we scan many consensus rounds in that substrate?* Everything about
+the update rule itself (DC-ELM's preconditioned step, plain averaging,
+D-PSGD parameter mixing) lives in ``core/engine.py`` and is shared by
+all mixers.
+
+Two implementations:
+
+* ``DenseMixer`` — all V nodes stacked on the leading axis of every
+  leaf, mixing via the dense adjacency (optionally a sequence of
+  adjacencies for time-varying topologies). Single-device / vmap path;
+  supports arbitrary graphs incl. the paper's random geometric ones.
+
+* ``PpermuteMixer`` — node i is the shard at mesh position i along the
+  consensus axes; mixing is neighbor-only ``lax.ppermute`` gossip
+  (core/gossip.py) under ``shard_map``. ICI-realizable topologies only.
+  This is the production path.
+
+Both accept the gossip payload compression knob ("bf16"): the payload
+is quantized before the Laplacian is formed, and the (bounded,
+gamma-scaled) delta is applied back in the state dtype.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.core import gossip
+from repro.core.consensus import Graph
+from repro.utils import compat
+
+
+def compress_payload(x: jax.Array, mode: str | None) -> jax.Array:
+    """Quantize a gossip payload (paper Sec. V: 'reduction of the amount
+    of information exchanging')."""
+    if mode is None:
+        return x
+    if mode == "bf16":
+        return x.astype(jnp.bfloat16)
+    raise ValueError(f"unknown gossip compression {mode!r}")
+
+
+def _mix_dtype(payload_dtype) -> jnp.dtype:
+    """Accumulate the Laplacian at least in f32 (bf16 payloads upcast)."""
+    return jnp.promote_types(payload_dtype, jnp.float32)
+
+
+class DenseMixer:
+    """Dense-adjacency mixing over a stacked leading node axis.
+
+    adjacencies: (V, V) for a static graph, or (S, V, V) for a
+    time-varying sequence — round k mixes with snapshot k % S.
+    """
+
+    def __init__(self, adjacencies, *, compress: str | None = None):
+        adjacencies = jnp.asarray(adjacencies)
+        if adjacencies.ndim == 2:
+            adjacencies = adjacencies[None]
+        if adjacencies.ndim != 3 or (
+            adjacencies.shape[-1] != adjacencies.shape[-2]
+        ):
+            raise ValueError(
+                f"adjacencies must be (V,V) or (S,V,V), got {adjacencies.shape}"
+            )
+        self.adjacencies = adjacencies
+        self.compress = compress
+
+    @classmethod
+    def from_graphs(
+        cls,
+        graphs: Graph | Sequence[Graph],
+        *,
+        dtype=jnp.float32,
+        compress: str | None = None,
+    ) -> "DenseMixer":
+        if isinstance(graphs, Graph):
+            graphs = [graphs]
+        adjs = np.stack([np.asarray(g.adjacency) for g in graphs])
+        return cls(jnp.asarray(adjs, dtype=dtype), compress=compress)
+
+    @property
+    def num_nodes(self) -> int:
+        return self.adjacencies.shape[-1]
+
+    def default_gamma(self, safety: float = 0.9) -> float:
+        """safety / max_k d_max(G_k) (paper Thm. 2 bound, joint over
+        snapshots). Requires concrete adjacencies (not under a trace)."""
+        d_max = float(jnp.max(jnp.sum(self.adjacencies, axis=-1)))
+        return safety / d_max
+
+    def _adjacency(self, k):
+        if self.adjacencies.shape[0] == 1:
+            return self.adjacencies[0]
+        return self.adjacencies[k % self.adjacencies.shape[0]]
+
+    def laplacian(self, x, k=0):
+        """Stacked Laplacian term, one leaf at a time: A @ x - deg * x."""
+        adj = self._adjacency(k)
+
+        def leaf(v):
+            flat = v.reshape(v.shape[0], -1)
+            payload = compress_payload(flat, self.compress)
+            dt = _mix_dtype(payload.dtype)
+            p = payload.astype(dt)
+            a = adj.astype(dt)
+            lap = a @ p - jnp.sum(a, axis=1)[:, None] * p
+            return lap.astype(v.dtype).reshape(v.shape)
+
+        return jax.tree.map(leaf, x)
+
+    def run(
+        self,
+        rule,
+        x,
+        aux,
+        gamma,
+        num_iters: int,
+        trace_fn=None,
+        state_spec=None,
+        aux_spec=None,
+    ):
+        """Scan ``rule(x, laplacian(x, k), aux, gamma)`` for num_iters rounds."""
+        del state_spec, aux_spec  # placement hints are a sharded concern
+
+        def f(carry, k):
+            nxt = rule(carry, self.laplacian(carry, k), aux, gamma)
+            out = trace_fn(nxt) if trace_fn is not None else jnp.zeros(())
+            return nxt, out
+
+        final, traces = lax.scan(f, x, jnp.arange(num_iters))
+        return final, (traces if trace_fn is not None else None)
+
+
+@dataclasses.dataclass(frozen=True)
+class PpermuteMixer:
+    """ppermute-gossip mixing for ICI topologies (gossip.GossipSpec).
+
+    ``laplacian`` is usable inside any caller-managed ``shard_map``
+    (that is how distributed/steps.py mixes model-sharded replicas);
+    ``run`` additionally owns the shard_map + scan wrapping for the
+    standard layout where state leaves carry a leading node axis of
+    size V = prod(consensus axes), sharded across those axes.
+    """
+
+    spec: gossip.GossipSpec
+    axis_sizes: dict
+    mesh: jax.sharding.Mesh | None = None
+    compress: str | None = None
+    # jitted shard_map(scan) programs keyed by (rule, num_iters, specs,
+    # has_aux) — reusing the engine across calls (the streaming loop
+    # pattern) then hits the compile cache instead of retracing.
+    _programs: dict = dataclasses.field(
+        default_factory=dict, repr=False, compare=False
+    )
+
+    @classmethod
+    def for_mesh(
+        cls,
+        mesh: jax.sharding.Mesh,
+        spec: gossip.GossipSpec,
+        *,
+        compress: str | None = None,
+    ) -> "PpermuteMixer":
+        gossip.validate_spec(spec, mesh)
+        return cls(
+            spec=spec,
+            axis_sizes=gossip.mesh_axis_sizes(mesh),
+            mesh=mesh,
+            compress=compress,
+        )
+
+    @property
+    def num_nodes(self) -> int:
+        return self.spec.num_nodes(self.axis_sizes)
+
+    def default_gamma(self, safety: float = 0.9) -> float:
+        return safety * self.spec.gamma_upper_bound(self.axis_sizes)
+
+    def node_pspec(self) -> P:
+        """PartitionSpec placing the leading node axis on the consensus axes."""
+        axes = self.spec.axes
+        return P(axes if len(axes) > 1 else axes[0])
+
+    def laplacian(self, x, k=0):
+        """Neighbor Laplacian via ppermute — call inside shard_map."""
+        del k  # ICI topologies are static; snapshots don't vary per round
+        if self.compress is not None:
+            payload = jax.tree.map(
+                lambda v: compress_payload(v, self.compress), x
+            )
+        else:
+            payload = x
+        lap = gossip.neighbor_laplacian(payload, self.spec, self.axis_sizes)
+        return jax.tree.map(lambda v, d: d.astype(v.dtype), x, lap)
+
+    def run(
+        self,
+        rule,
+        x,
+        aux,
+        gamma,
+        num_iters: int,
+        trace_fn=None,
+        state_spec=None,
+        aux_spec=None,
+    ):
+        """shard_map(scan(rule ∘ laplacian)) on the mesh: one collective
+        program for the whole consensus run, neighbor-only ICI traffic
+        inside. Programs are cached per (rule, num_iters, specs) and
+        take gamma as a traced argument, so repeated calls on the same
+        mixer — e.g. every streaming chunk event — compile once.
+        """
+        if trace_fn is not None:
+            raise NotImplementedError(
+                "per-round traces are a simulated-path (DenseMixer) feature"
+            )
+        if self.mesh is None:
+            raise ValueError(
+                "PpermuteMixer.run needs a mesh; build via for_mesh(...)"
+            )
+        sspec = self.node_pspec() if state_spec is None else state_spec
+        aspec = self.node_pspec() if aux_spec is None else aux_spec
+        key = (rule, num_iters, sspec, aspec, aux is None)
+        fn = self._programs.get(key)
+        if fn is None:
+            if aux is None:
+
+                def scanned(b, g):
+                    def f(carry, k):
+                        return rule(carry, self.laplacian(carry, k), None, g), None
+
+                    final, _ = lax.scan(f, b, jnp.arange(num_iters))
+                    return final
+
+                fn = jax.jit(compat.shard_map(
+                    scanned, self.mesh, in_specs=(sspec, P()), out_specs=sspec
+                ))
+            else:
+
+                def scanned(b, o, g):
+                    def f(carry, k):
+                        return rule(carry, self.laplacian(carry, k), o, g), None
+
+                    final, _ = lax.scan(f, b, jnp.arange(num_iters))
+                    return final
+
+                fn = jax.jit(compat.shard_map(
+                    scanned, self.mesh,
+                    in_specs=(sspec, aspec, P()), out_specs=sspec,
+                ))
+            self._programs[key] = fn
+        gamma = jnp.asarray(gamma)
+        if aux is None:
+            return fn(x, gamma), None
+        return fn(x, aux, gamma), None

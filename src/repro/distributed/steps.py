@@ -22,6 +22,7 @@ from repro.core import dsgd, gossip
 from repro.distributed import sharding as shd
 from repro.models import Model
 from repro.optim.optimizers import Optimizer, apply_updates
+from repro.utils import compat
 
 
 class TrainState(NamedTuple):
@@ -193,7 +194,7 @@ def make_train_bundle(
                     p, gamma, spec, sizes, compress=gossip_compress
                 )
 
-            params = jax.shard_map(
+            params = compat.shard_map(
                 mix, mesh=mesh, in_specs=(pspecs,), out_specs=pspecs,
             )(params)
         metrics = dict(metrics, loss=losses)

@@ -21,7 +21,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get as get_config
-from repro.core import consensus, dc_elm, fusion_elm
+from repro.core import consensus, dc_elm, engine, fusion_elm
 from repro.data.lm import TokenStream
 from repro.kernels import gram_ops
 from repro.models import Model
@@ -79,11 +79,12 @@ def main(argv=None):
     state = dc_elm.simulate_init_from_stats(P_, Q_, args.C)
     beta_star = dc_elm.centralized_from_node_stats(P_, Q_, args.C)
     d0 = float(dc_elm.distance_to(state.betas, beta_star))
-    final, _ = dc_elm.simulate_run(
-        state, graph, graph.default_gamma(), args.C, args.iters
+    eng = engine.simulated_dc_elm(graph, args.C, dtype=state.betas.dtype)
+    final_betas, _ = eng.run(
+        state.betas, state.omegas, graph.default_gamma(), args.iters
     )
-    d1 = float(dc_elm.distance_to(final.betas, beta_star))
-    cons = float(dc_elm.consensus_error(final.betas))
+    d1 = float(dc_elm.distance_to(final_betas, beta_star))
+    cons = float(dc_elm.consensus_error(final_betas))
     fusion = fusion_elm.solve(jnp.sum(P_, 0), jnp.sum(Q_, 0), args.C)
     fusion_err = float(
         jnp.max(jnp.abs(fusion - beta_star)) / (1 + jnp.max(jnp.abs(beta_star)))

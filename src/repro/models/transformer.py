@@ -117,7 +117,9 @@ def constrain_batch_dim(x: jax.Array, cfg: ArchConfig) -> jax.Array:
     replicated. Active under act_shard == "batch"."""
     if cfg.act_shard != "batch":
         return x
-    mesh = jax.sharding.get_abstract_mesh()
+    from repro.utils import compat
+
+    mesh = compat.get_abstract_mesh()
     names = getattr(mesh, "axis_names", ()) if mesh is not None else ()
     if "model" not in names:
         return x
@@ -140,7 +142,9 @@ def constrain_acts(h: jax.Array, cfg: ArchConfig) -> jax.Array:
     """
     if cfg.act_shard == "none":
         return h
-    mesh = jax.sharding.get_abstract_mesh()
+    from repro.utils import compat
+
+    mesh = compat.get_abstract_mesh()
     names = getattr(mesh, "axis_names", ()) if mesh is not None else ()
     if "model" not in names:
         return h

@@ -118,11 +118,17 @@ def test_fusion_center_baseline_exact():
 
 
 def test_incremental_baseline_approaches_solution():
-    """Sec. II-B1 Hamiltonian-cycle baseline reaches the neighborhood."""
+    """Sec. II-B1 Hamiltonian-cycle baseline reaches the neighborhood.
+
+    Uses a diminishing step (decay>0): the constant-step variant stalls
+    at its O(alpha) bias just outside the 5% ball for this problem.
+    """
     H, T, C = _problem(V=4, Ni=32, L=8, M=1)
     _, P_, Q_ = dc_elm.simulate_init(H, T, C)
     beta_star = dc_elm.centralized_from_node_stats(P_, Q_, C)
-    zf, _ = incremental.run(P_, Q_, alpha=5e-3, C=C, num_cycles=3000)
+    zf, _ = incremental.run(
+        P_, Q_, alpha=5e-3, C=C, num_cycles=3000, decay=1e-2
+    )
     rel = float(
         jnp.linalg.norm(zf - beta_star) / (1 + jnp.linalg.norm(beta_star))
     )

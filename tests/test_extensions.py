@@ -86,13 +86,14 @@ def test_sharded_compressed_mix(tmp_path):
     code = """
 import jax, jax.numpy as jnp, numpy as np
 from repro.core import dsgd, gossip
+from repro.utils import compat
 from jax.sharding import PartitionSpec as P
-mesh = jax.make_mesh((8,), ('data',), axis_types=(jax.sharding.AxisType.Auto,))
+mesh = compat.make_mesh((8,), ('data',))
 spec = gossip.GossipSpec(axes=('data',), kinds=('ring',))
 x = {'w': (jnp.arange(8*4, dtype=jnp.float32).reshape(8, 4) * 0.37) ** 1.5}
 def body(v):
     return dsgd.mix_sharded(v, 0.25, spec, {'data': 8}, compress='bf16')
-out = jax.jit(jax.shard_map(body, mesh=mesh, in_specs=(P('data'),), out_specs=P('data')))(x)
+out = jax.jit(compat.shard_map(body, mesh, in_specs=(P('data'),), out_specs=P('data')))(x)
 ref = dsgd.mix_simulated(x, jnp.asarray(np.roll(np.eye(8),1,0)+np.roll(np.eye(8),-1,0), jnp.float32), 0.25, compress='bf16')
 assert np.allclose(out['w'], ref['w'], atol=6e-2), (out['w'], ref['w'])  # bf16 rounding-order differs between paths
 print('OK')

@@ -54,13 +54,14 @@ def test_sharded_laplacian_equals_dense():
     code = """
 import jax, jax.numpy as jnp, numpy as np
 from repro.core import gossip, consensus
+from repro.utils import compat
 from jax.sharding import PartitionSpec as P
-mesh = jax.make_mesh((8,), ('data',), axis_types=(jax.sharding.AxisType.Auto,))
+mesh = compat.make_mesh((8,), ('data',))
 spec = gossip.GossipSpec(axes=('data',), kinds=('hypercube',))
 x = jnp.arange(8*3, dtype=jnp.float32).reshape(8, 3) ** 1.5
 def body(v):
     return gossip.neighbor_laplacian(v, spec, {'data': 8})
-out = jax.jit(jax.shard_map(body, mesh=mesh, in_specs=P('data'), out_specs=P('data')))(x)
+out = jax.jit(compat.shard_map(body, mesh, in_specs=P('data'), out_specs=P('data')))(x)
 g = spec.to_graph({'data': 8})
 lap = jnp.asarray(g.adjacency @ np.array(x) - g.degrees[:, None] * np.array(x))
 assert np.allclose(out, lap, atol=1e-5), (out, lap)

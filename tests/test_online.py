@@ -81,6 +81,11 @@ def test_batched_variants():
         ref = online.add_chunk(
             online.OnlineNodeState(sts.omega[i], sts.Q[i]), dH[i], dT[i]
         )
-        np.testing.assert_allclose(out.omega[i], ref.omega, rtol=1e-5)
+        # atol floor: the vmapped path lowers to a batched triangular
+        # solve whose f32 reduction order differs from the single-node
+        # solve by a few ULP near zero
+        np.testing.assert_allclose(
+            out.omega[i], ref.omega, rtol=1e-5, atol=1e-7
+        )
     betas = online.reseed_betas(out)
     assert betas.shape == (3, 12, 2)

@@ -3,7 +3,10 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import consensus, dc_elm, elm, gossip, online
 from repro.models.layers import chunked_cross_entropy, cross_entropy

@@ -47,7 +47,8 @@ from repro.distributed.steps import make_train_bundle, jit_train_step
 from repro.core import dsgd
 from repro.optim import adamw
 from repro.data.lm import TokenStream
-mesh = jax.make_mesh((4, 2), ('data', 'model'), axis_types=(jax.sharding.AxisType.Auto,)*2)
+from repro.utils import compat
+mesh = compat.make_mesh((4, 2), ('data', 'model'))
 cfg = registry()['starcoder2-3b'].reduced()
 bundle = make_train_bundle(cfg, mesh, adamw(3e-3), seed=0)
 V = bundle.node_count
