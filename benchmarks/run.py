@@ -67,6 +67,7 @@ def _register():
         "comm": micro.bench_consensus_vs_incremental,
         "topology": micro.bench_gossip_topologies,
         "streaming": micro.bench_streaming_driver,
+        "faults": micro.bench_fault_tolerance,
         "roofline": _roofline_table,
     })
 
@@ -94,6 +95,8 @@ def main() -> None:
                 kw = {"trials": 3}
             if args.fast and name == "fig7":
                 kw = {"iters": 300}
+            if args.fast and name == "faults":
+                kw = {"rounds": 1000}
             rows, _ = fn(**kw)
             for r in rows:
                 print(f"{r[0]},{r[1]:.1f},{r[2]}")

@@ -1,0 +1,88 @@
+"""Fault tolerance: DC-ELM degrades gracefully, the fusion center stalls.
+
+Three scenes on a 16-node hypercube:
+
+1. **Bernoulli link dropout** — every link independently drops each
+   round with probability p. A `consensus.FaultModel` certifies the
+   trace stays jointly connected and a `FaultyMixer` replays it; DC-ELM
+   keeps converging to the centralized solution, just needing more
+   rounds as p grows.
+
+2. **Node crash / rejoin** — a node's links all die for a burst and
+   come back. The survivors keep consenting among themselves; the
+   crashed node is pulled back to the network solution after rejoining.
+
+3. **Fusion-center contrast** — the parallel-ELM baseline
+   (`core/fusion_elm`) reduces (P_i, Q_i) with one all-reduce. That
+   barrier needs *every* chip: while any node is down the reduction
+   blocks and the fusion answer simply does not exist, whereas DC-ELM's
+   live nodes kept improving the whole time (DESIGN.md §6).
+
+Streaming churn (a node's *data* leaving/joining the problem, not just
+its links) is `ConsensusEngine.stream_leave` / `stream_join`.
+
+Run:  PYTHONPATH=src python examples/fault_tolerance.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import consensus, dc_elm, engine, fusion_elm
+
+V, Ni, L, M, C = 16, 48, 12, 1, 0.05
+ROUNDS = 3000
+
+ks = jax.random.split(jax.random.key(0), 2)
+H = jax.random.normal(ks[0], (V, Ni, L))
+T = jax.random.normal(ks[1], (V, Ni, M))
+state, P_, Q_ = dc_elm.simulate_init(H, T, C)
+beta_star = dc_elm.centralized_from_node_stats(P_, Q_, C)
+dist = lambda b: float(dc_elm.distance_to(b, beta_star))  # noqa: E731
+
+graph = consensus.build("hypercube", V)
+gamma = graph.default_gamma()
+
+# sanity: the fusion-center baseline and the consensus target agree
+beta_fusion = fusion_elm.simulate(H, T, C)
+assert float(jnp.max(jnp.abs(beta_fusion - beta_star))) < 1e-4
+
+print(f"== 1. Bernoulli link dropout ({V}-node hypercube, "
+      f"{ROUNDS} rounds) ==")
+for p in [0.0, 0.1, 0.2, 0.3]:
+    fm = consensus.FaultModel.sample_certified(
+        graph, p, num_rounds=ROUNDS, window=16
+    )
+    eng = engine.with_faults(engine.simulated_dc_elm(graph, C), fm, ROUNDS)
+    betas, _ = eng.run(state.betas, state.omegas, gamma, ROUNDS)
+    print(f"  p={p:.1f}: distance to centralized = {dist(betas):.2e}")
+
+print("\n== 2. Node crash / rejoin ==")
+crash = consensus.NodeCrash(node=3, start=300, duration=600)
+fm = consensus.FaultModel(graph=graph, crashes=(crash,))
+eng = engine.with_faults(engine.simulated_dc_elm(graph, C), fm, ROUNDS)
+betas, traces = eng.run(
+    state.betas, state.omegas, gamma, ROUNDS,
+    trace_fn=lambda b: dc_elm.distance_to(b, beta_star),
+)
+traces = np.asarray(traces)
+print(f"  node {crash.node} down for rounds "
+      f"[{crash.start}, {crash.start + crash.duration})")
+for k in [crash.start, crash.start + crash.duration, ROUNDS]:
+    print(f"  after round {k:4d}: distance = {traces[k - 1]:.2e}")
+
+print("\n== 3. Fusion-center baseline under the same crash ==")
+down = crash.duration
+print(f"  DC-ELM rounds stalled by the crash:      0 "
+      f"(gossip loses only that node's links)")
+print(f"  fusion all-reduce rounds stalled:        {down} "
+      f"(barrier needs all {V} chips)")
+alive = [i for i in range(V) if i != crash.node]
+beta_partial = fusion_elm.simulate(H[jnp.asarray(alive)],
+                                   T[jnp.asarray(alive)], C)
+err = float(jnp.max(jnp.abs(beta_partial - beta_star)))
+print(f"  restarting fusion WITHOUT the crashed chip answers a "
+      f"different problem:\n"
+      f"    ||beta(V-1 nodes) - beta*|| = {err:.3f} "
+      f"(the crashed node's data is gone)")
+print(f"  DC-ELM distance at the same moment: {traces[crash.start + down - 1]:.2e}")

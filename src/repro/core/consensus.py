@@ -226,6 +226,176 @@ def build(kind: str, V: int) -> Graph:
 
 
 # ---------------------------------------------------------------------------
+# Fault injection (paper Sec. V: time-varying / unreliable links)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class LinkOutage:
+    """A correlated burst outage: edge (i, j) is down for rounds
+    [start, start + duration)."""
+
+    edge: tuple[int, int]
+    start: int
+    duration: int
+
+
+@dataclasses.dataclass(frozen=True)
+class NodeCrash:
+    """Node crash/rejoin: every edge incident to ``node`` is down for
+    rounds [start, start + duration); the node rejoins afterwards.
+
+    The node's *process* stays up (it keeps its state and local data);
+    only its links die — the paper's communication-failure model. Data
+    level churn (the node's shard leaving the problem) is
+    ``ConsensusEngine.stream_leave``/``stream_join``.
+    """
+
+    node: int
+    start: int
+    duration: int
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultModel:
+    """Generates per-round edge keep-masks over a base graph.
+
+    Three composable failure processes (all applied on top of each
+    other, worst wins):
+
+    * ``edge_drop_prob`` — i.i.d. per-round Bernoulli loss of each
+      undirected edge (packet loss / flaky link).
+    * ``outages`` — scheduled correlated bursts: a link down for a
+      contiguous round interval.
+    * ``crashes`` — scheduled node crash/rejoin: all of a node's links
+      down for a contiguous round interval.
+
+    ``edge_keep(R)`` is deterministic in ``seed``, so the simulated
+    (DenseMixer) and sharded (PpermuteMixer) execution paths of a
+    ``FaultyMixer`` can replay the *same* fault trace and be compared
+    bit-for-bit-level close. Consumers index round k with mask k % R.
+
+    Theorem 2's convergence survives faults as long as the masked graph
+    sequence stays *jointly connected* — every window of W consecutive
+    rounds has a connected union graph. ``certify_jointly_connected``
+    checks that (cyclically, matching the k % R replay), and
+    ``sample_certified`` searches seeds until it holds.
+    """
+
+    graph: Graph
+    edge_drop_prob: float = 0.0
+    outages: tuple[LinkOutage, ...] = ()
+    crashes: tuple[NodeCrash, ...] = ()
+    seed: int = 0
+
+    def __post_init__(self):
+        if not 0.0 <= self.edge_drop_prob < 1.0:
+            raise ValueError("edge_drop_prob must be in [0, 1)")
+        V = self.graph.num_nodes
+        for o in self.outages:
+            i, j = o.edge
+            if not (0 <= i < V and 0 <= j < V) or i == j:
+                raise ValueError(f"bad outage edge {o.edge}")
+        for c in self.crashes:
+            if not 0 <= c.node < V:
+                raise ValueError(f"bad crash node {c.node}")
+
+    @property
+    def num_nodes(self) -> int:
+        return self.graph.num_nodes
+
+    def edge_keep(self, num_rounds: int) -> np.ndarray:
+        """(R, V, V) symmetric 0/1 keep-masks over the base edge set."""
+        V = self.num_nodes
+        R = int(num_rounds)
+        edges = (self.graph.adjacency > 0).astype(np.float64)
+        keep = np.ones((R, V, V))
+        if self.edge_drop_prob > 0.0:
+            rng = np.random.default_rng(self.seed)
+            u = rng.random((R, V, V))
+            u = np.triu(u, 1)
+            u = u + np.transpose(u, (0, 2, 1))  # symmetric per-edge draws
+            keep *= (u >= self.edge_drop_prob).astype(np.float64)
+        for o in self.outages:
+            i, j = o.edge
+            lo, hi = max(o.start, 0), min(o.start + o.duration, R)
+            keep[lo:hi, i, j] = keep[lo:hi, j, i] = 0.0
+        for c in self.crashes:
+            lo, hi = max(c.start, 0), min(c.start + c.duration, R)
+            keep[lo:hi, c.node, :] = 0.0
+            keep[lo:hi, :, c.node] = 0.0
+        return keep * edges[None]
+
+    def adjacency_stream(self, num_rounds: int) -> np.ndarray:
+        """(R, V, V) masked adjacency snapshots A_k = A * keep_k."""
+        return self.edge_keep(num_rounds) * np.asarray(self.graph.adjacency)[None]
+
+    def graphs(self, num_rounds: int) -> list[Graph]:
+        return [
+            Graph(a, name=f"{self.graph.name}_fault{k}")
+            for k, a in enumerate(self.adjacency_stream(num_rounds))
+        ]
+
+    def gamma_upper_bound(self) -> float:
+        """Faults only *remove* edges, so d_max never grows: the base
+        graph's Thm. 2 bound stays valid for every masked snapshot."""
+        return self.graph.gamma_upper_bound()
+
+    def certify_jointly_connected(
+        self, num_rounds: int, window: int
+    ) -> bool:
+        """True iff every (cyclic) window of ``window`` consecutive
+        masked snapshots has a connected union graph.
+
+        Cyclic because consumers replay mask k % R forever; the fault
+        trace is effectively periodic.
+        """
+        stream = self.adjacency_stream(num_rounds)
+        R = stream.shape[0]
+        if window <= 0:
+            raise ValueError("window must be positive")
+        if window >= R:
+            union = stream.max(axis=0)
+            return Graph(union, name="union").is_connected
+        for s in range(R):
+            idx = [(s + t) % R for t in range(window)]
+            union = stream[idx].max(axis=0)
+            if not Graph(union, name="union").is_connected:
+                return False
+        return True
+
+    @classmethod
+    def sample_certified(
+        cls,
+        graph: Graph,
+        edge_drop_prob: float,
+        num_rounds: int,
+        window: int,
+        *,
+        outages: tuple[LinkOutage, ...] = (),
+        crashes: tuple[NodeCrash, ...] = (),
+        seed: int = 0,
+        max_tries: int = 50,
+    ) -> "FaultModel":
+        """Search seeds until the fault trace is jointly connected."""
+        for s in range(seed, seed + max_tries):
+            fm = cls(
+                graph=graph,
+                edge_drop_prob=edge_drop_prob,
+                outages=outages,
+                crashes=crashes,
+                seed=s,
+            )
+            if fm.certify_jointly_connected(num_rounds, window):
+                return fm
+        raise RuntimeError(
+            f"no jointly connected fault trace in {max_tries} seeds "
+            f"(p={edge_drop_prob}, window={window}); grow the window or "
+            "lower the failure rate"
+        )
+
+
+# ---------------------------------------------------------------------------
 # Convergence-rate analysis (paper Appendix C)
 # ---------------------------------------------------------------------------
 

@@ -22,7 +22,12 @@ On top of the round driver, ``stream_chunk`` implements **Algorithm 2**
 end-to-end — Woodbury remove/add of a data chunk, beta re-seed at the
 new local optimum, K consensus rounds — and runs on *both* mixers, so
 the sharded production path gets online learning from the same code
-the simulated fidelity path is tested with. See DESIGN.md.
+the simulated fidelity path is tested with. Streaming also survives
+churn: ``stream_leave``/``stream_join`` remove or add whole nodes
+(their data shard included) with a rank-L Woodbury re-target of every
+survivor's preconditioner, and ``with_faults`` wraps any engine's
+mixer in a fault-injection layer (``mixers.FaultyMixer``). See
+DESIGN.md §4 and §8.
 """
 
 from __future__ import annotations
@@ -32,10 +37,11 @@ from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import gossip, online
-from repro.core.consensus import Graph
-from repro.core.mixers import DenseMixer, PpermuteMixer
+from repro.core.consensus import FaultModel, Graph
+from repro.core.mixers import DenseMixer, FaultyMixer, PpermuteMixer
 
 
 # ---------------------------------------------------------------------------
@@ -157,6 +163,10 @@ class ConsensusEngine:
         both mixers — on PpermuteMixer the stat updates are node-local
         batched ops and only the rounds touch the ICI.
 
+        Node-level churn (a whole member arriving/departing, not just
+        its data chunks) is ``stream_leave``/``stream_join``, which
+        rebuild the engine for the new V.
+
         Returns (StreamState, traces or None).
         """
         self._ridge_constants()  # assert a DCELMRule before any work
@@ -179,6 +189,142 @@ class ConsensusEngine:
             StreamState(omegas=ostate.omega, Qs=ostate.Q, betas=final),
             traces,
         )
+
+    # -- elastic membership (beyond-paper: Algorithm 2 under churn) --------
+
+    def stream_leave(
+        self, state: "StreamState", node: int, *, graph: Graph | None = None
+    ) -> tuple["ConsensusEngine", "StreamState"]:
+        """Node ``node`` departs the network, taking its whole shard
+        (data, statistics, estimate) with it.
+
+        The centralized target becomes the solution over the remaining
+        V-1 nodes' data, and V itself sits inside every surviving
+        Omega_j through the ridge term I/(VC) — so each survivor
+        re-targets its preconditioner with a rank-L Woodbury update
+        (``online.rescale_num_nodes``) and re-seeds beta_j = Omega_j Q_j,
+        restoring the zero-gradient-sum invariant for the smaller
+        network. Returns ``(new_engine, new_state)`` — the engine is
+        rebuilt for the (V-1)-node rule and topology.
+
+        graph: the surviving communication graph; default = the base
+        adjacency with ``node``'s row/column deleted (every snapshot,
+        for time-varying bases). Membership is a data-plane change and
+        needs re-stacked arrays, so it is a DenseMixer feature; on the
+        sharded path model *link* loss with a FaultyMixer instead (the
+        mesh shard cannot leave the physical device).
+        """
+        C, V = self._ridge_constants()
+        if not 0 <= node < V:
+            raise ValueError(f"node {node} out of range for V={V}")
+        adjacencies = self._membership_adjacencies(graph, drop=node)
+        keep = [i for i in range(V) if i != node]
+        omegas = online.batched_rescale_num_nodes(
+            state.omegas[jnp.asarray(keep)], V, V - 1, C
+        )
+        Qs = state.Qs[jnp.asarray(keep)]
+        ostate = online.OnlineNodeState(omega=omegas, Q=Qs)
+        new_engine = self._rewrap_faults(
+            ConsensusEngine(
+                DenseMixer(adjacencies, compress=self._base_compress()),
+                DCELMRule(V - 1, C),
+            ),
+            drop=node,
+        )
+        return new_engine, StreamState(
+            omegas=omegas, Qs=Qs, betas=online.reseed_betas(ostate)
+        )
+
+    def stream_join(
+        self,
+        state: "StreamState",
+        H_new: jax.Array,
+        T_new: jax.Array,
+        *,
+        graph: Graph | None = None,
+    ) -> tuple["ConsensusEngine", "StreamState"]:
+        """A new node joins with local data H_new:(Nn, L), T_new:(Nn, M).
+
+        The joiner builds its statistics from scratch at the new
+        network size; every incumbent re-targets Omega for V -> V+1 via
+        the same rank-L Woodbury rescale and re-seeds. The joiner takes
+        index V (append order). Returns ``(new_engine, new_state)``.
+
+        graph: the enlarged communication graph; default = the base
+        adjacency with the joiner connected to every incumbent.
+        """
+        C, V = self._ridge_constants()
+        adjacencies = self._membership_adjacencies(graph, add=True)
+        omegas = online.batched_rescale_num_nodes(state.omegas, V, V + 1, C)
+        joiner = online.init_state(H_new, T_new, C, V + 1)
+        omegas = jnp.concatenate([omegas, joiner.omega[None]], axis=0)
+        Qs = jnp.concatenate([state.Qs, joiner.Q[None]], axis=0)
+        ostate = online.OnlineNodeState(omega=omegas, Q=Qs)
+        new_engine = self._rewrap_faults(
+            ConsensusEngine(
+                DenseMixer(adjacencies, compress=self._base_compress()),
+                DCELMRule(V + 1, C),
+            ),
+            add=True,
+        )
+        return new_engine, StreamState(
+            omegas=omegas, Qs=Qs, betas=online.reseed_betas(ostate)
+        )
+
+    def _membership_adjacencies(
+        self, graph: Graph | None, *, drop: int | None = None,
+        add: bool = False,
+    ) -> jnp.ndarray:
+        """Adjacency snapshots for the post-churn network."""
+        if graph is not None:
+            return jnp.asarray(graph.adjacency, jnp.float32)[None]
+        mixer = self.mixer
+        if isinstance(mixer, FaultyMixer):
+            mixer = mixer.base
+        if not isinstance(mixer, DenseMixer):
+            raise TypeError(
+                "elastic membership resizes the stacked node axis and so "
+                "needs a DenseMixer engine (or an explicit `graph=`); on "
+                "the sharded path model link loss with a FaultyMixer"
+            )
+        adj = np.asarray(mixer.adjacencies)
+        if drop is not None:
+            adj = np.delete(np.delete(adj, drop, axis=1), drop, axis=2)
+        if add:
+            S, V = adj.shape[0], adj.shape[1]
+            new = np.zeros((S, V + 1, V + 1), dtype=adj.dtype)
+            new[:, :V, :V] = adj
+            new[:, V, :V] = 1.0
+            new[:, :V, V] = 1.0
+            adj = new
+        return jnp.asarray(adj)
+
+    def _rewrap_faults(
+        self, new_engine: "ConsensusEngine", *, drop: int | None = None,
+        add: bool = False,
+    ) -> "ConsensusEngine":
+        """Carry a FaultyMixer's trace across a membership change.
+
+        The masks are resized like the adjacency (departed row/column
+        deleted; a joiner's links start all-up). The transformed trace
+        has NOT been re-certified for joint connectivity — re-run
+        ``FaultModel.certify_jointly_connected`` on it if the churned
+        network must keep the convergence guarantee.
+        """
+        if not isinstance(self.mixer, FaultyMixer):
+            return new_engine
+        keep = self.mixer.edge_keep
+        if drop is not None:
+            keep = np.delete(np.delete(keep, drop, axis=1), drop, axis=2)
+        if add:
+            R, V = keep.shape[0], keep.shape[1]
+            grown = np.ones((R, V + 1, V + 1), dtype=keep.dtype)
+            grown[:, :V, :V] = keep
+            keep = grown
+        return with_faults(new_engine, keep)
+
+    def _base_compress(self):
+        return getattr(self.mixer, "compress", None)
 
     def _ridge_constants(self) -> tuple[float, int]:
         if not isinstance(self.rule, DCELMRule):
@@ -234,6 +380,28 @@ def sharded_dc_elm(
     """DC-ELM over mesh neighbors (the ppermute production path)."""
     mixer = PpermuteMixer.for_mesh(mesh, spec, compress=compress)
     return ConsensusEngine(mixer, DCELMRule(mixer.num_nodes, C))
+
+
+def with_faults(
+    eng: ConsensusEngine,
+    faults,
+    num_rounds: int | None = None,
+) -> ConsensusEngine:
+    """Wrap an engine's mixer in a ``FaultyMixer``.
+
+    faults: a ``consensus.FaultModel`` (then ``num_rounds`` sets the
+    fault-trace period) or a ready (R, V, V) edge keep-mask array. The
+    update rule, step bound, and — on the sharded path — the compiled
+    collective program are untouched; only dropped links stop
+    contributing to the Laplacian.
+    """
+    if isinstance(faults, FaultModel):
+        if num_rounds is None:
+            raise ValueError("num_rounds is required with a FaultModel")
+        mixer = FaultyMixer.from_fault_model(eng.mixer, faults, num_rounds)
+    else:
+        mixer = FaultyMixer(eng.mixer, faults)
+    return ConsensusEngine(mixer, eng.rule)
 
 
 def simulated_averaging(

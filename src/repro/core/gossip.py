@@ -154,6 +154,90 @@ def neighbor_laplacian(x, spec: GossipSpec, axis_sizes: dict[str, int]):
     return jax.tree.map(leaf, x)
 
 
+def masked_neighbor_laplacian(
+    x, spec: GossipSpec, axis_sizes: dict[str, int], keep
+):
+    """Laplacian term with per-permutation keep-weights for THIS node.
+
+    ``keep`` is a (num_perms,) vector — entry p multiplies the
+    contribution node i receives through edge-permutation p this round
+    (0 = link down, 1 = link up). Every ppermute still executes, so the
+    collective schedule (and any compiled program built over it) is
+    identical to the fault-free one; a dropped link just contributes
+    zero to the Laplacian. Call inside shard_map.
+    """
+
+    def leaf(v):
+        acc = None
+        p = 0
+        for ax, perm in _axis_perms(spec, axis_sizes):
+            recv = lax.ppermute(v, ax, perm)
+            d = (recv - v) * keep[p].astype(v.dtype)
+            acc = d if acc is None else acc + d
+            p += 1
+        if acc is None:
+            return jax.numpy.zeros_like(v)
+        return acc
+
+    return jax.tree.map(leaf, x)
+
+
+def global_node_index(spec: GossipSpec, axis_sizes: dict[str, int]):
+    """This shard's product-graph node index, row-major over spec.axes.
+
+    Matches both ``GossipSpec.to_graph`` node numbering and the layout
+    of a leading array axis sharded with PartitionSpec(spec.axes).
+    Call inside shard_map.
+    """
+    idx = None
+    for ax in spec.axes:
+        i = lax.axis_index(ax)
+        idx = i if idx is None else idx * axis_sizes[ax] + i
+    if idx is None:
+        raise ValueError("spec has no axes")
+    return idx
+
+
+def perm_sources(spec: GossipSpec, axis_sizes: dict[str, int]) -> np.ndarray:
+    """(num_perms, V) table: src[p, i] = the node whose value node i
+    receives through edge-permutation p (global product-graph indices,
+    same order as ``_axis_perms``)."""
+    sizes = [axis_sizes[ax] for ax in spec.axes]
+    V = int(np.prod(sizes))
+    coords = np.stack(np.unravel_index(np.arange(V), sizes), axis=-1)
+    rows = []
+    for a, (ax, kind) in enumerate(zip(spec.axes, spec.kinds)):
+        n = axis_sizes[ax]
+        for perm in _PERM_BUILDERS[kind](n):
+            inv = np.empty(n, dtype=np.int64)  # dst -> src along axis a
+            for s, d in perm:
+                inv[d] = s
+            c = coords.copy()
+            c[:, a] = inv[c[:, a]]
+            rows.append(np.ravel_multi_index(tuple(c.T), sizes))
+    if not rows:
+        return np.zeros((0, V), dtype=np.int64)
+    return np.stack(rows).astype(np.int64)
+
+
+def fold_edge_keep(
+    spec: GossipSpec, axis_sizes: dict[str, int], edge_keep: np.ndarray
+) -> np.ndarray:
+    """Fold (R, V, V) symmetric edge keep-masks onto the ppermute
+    schedule: returns (R, num_perms, V) with out[r, p, i] =
+    edge_keep[r, src[p, i], i] — the weight of the in-edge node i uses
+    from permutation p in round r."""
+    edge_keep = np.asarray(edge_keep)
+    V = spec.num_nodes(axis_sizes)
+    if edge_keep.ndim != 3 or edge_keep.shape[-2:] != (V, V):
+        raise ValueError(
+            f"edge_keep must be (R, {V}, {V}), got {edge_keep.shape}"
+        )
+    src = perm_sources(spec, axis_sizes)  # (P, V)
+    dst = np.arange(V)[None, :]
+    return edge_keep[:, src, dst]
+
+
 def neighbor_avg(x, spec: GossipSpec, axis_sizes: dict[str, int], gamma: float):
     """One plain-consensus averaging step x <- x + gamma * Lap-term."""
     lap = neighbor_laplacian(x, spec, axis_sizes)

@@ -25,11 +25,17 @@ Two implementations:
 Both accept the gossip payload compression knob ("bf16"): the payload
 is quantized before the Laplacian is formed, and the (bounded,
 gamma-scaled) delta is applied back in the state dtype.
+
+``FaultyMixer`` composes over either of the two: it replays a
+per-round edge keep-mask stream (``consensus.FaultModel``) so links
+drop, burst-fail, or whole nodes crash and rejoin, while the update
+rule and execution substrate stay untouched.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Sequence
 
 import jax
@@ -266,3 +272,185 @@ class PpermuteMixer:
         if aux is None:
             return fn(x, gamma), None
         return fn(x, aux, gamma), None
+
+
+class FaultyMixer:
+    """Fault-injection wrapper: a base mixer plus per-round edge masks.
+
+    ``edge_keep`` is an (R, V, V) symmetric 0/1 stream (typically
+    ``consensus.FaultModel.edge_keep``); round k mixes with mask
+    k % R. Composition per base:
+
+    * ``DenseMixer`` — each round's dense adjacency is multiplied by
+      its mask; time-varying bases compose (snapshot k % S, mask
+      k % R) over one period of length lcm(S, R).
+
+    * ``PpermuteMixer`` — the masks are folded onto the ppermute
+      schedule (``gossip.fold_edge_keep``) and each permutation's
+      received contribution is weighted inside the shard_map body, so
+      a dropped link contributes zero to the Laplacian while the
+      collective schedule — and therefore the compiled
+      ``shard_map(scan)`` program — is byte-identical to the
+      fault-free one. The folded masks enter the jitted program as a
+      *traced* argument and programs are cached on the shared base
+      mixer, so sweeping failure rates (new masks, same shapes) never
+      recompiles.
+
+    Fault masks only remove edges, so the base mixer's Thm. 2 step
+    bound (``default_gamma``) remains valid for every masked snapshot.
+    """
+
+    def __init__(self, base, edge_keep):
+        edge_keep = np.asarray(edge_keep, dtype=np.float32)
+        if edge_keep.ndim == 2:
+            edge_keep = edge_keep[None]
+        V = base.num_nodes
+        if edge_keep.ndim != 3 or edge_keep.shape[-2:] != (V, V):
+            raise ValueError(
+                f"edge_keep must be (R, {V}, {V}), got {edge_keep.shape}"
+            )
+        if not np.allclose(edge_keep, np.transpose(edge_keep, (0, 2, 1))):
+            raise ValueError("edge_keep must be symmetric per round")
+        self.base = base
+        self.edge_keep = edge_keep
+        self.num_rounds = edge_keep.shape[0]
+        if isinstance(base, DenseMixer):
+            S = base.adjacencies.shape[0]
+            R = edge_keep.shape[0]
+            period = math.lcm(S, R)
+            masked = (
+                np.asarray(base.adjacencies)[np.arange(period) % S]
+                * edge_keep[np.arange(period) % R]
+            )
+            self._dense = DenseMixer(
+                jnp.asarray(masked, base.adjacencies.dtype),
+                compress=base.compress,
+            )
+            self._keep = None
+        elif isinstance(base, PpermuteMixer):
+            self._dense = None
+            self._keep = jnp.asarray(
+                gossip.fold_edge_keep(base.spec, base.axis_sizes, edge_keep)
+            )
+        else:
+            raise TypeError(
+                f"FaultyMixer wraps DenseMixer or PpermuteMixer, got "
+                f"{type(base).__name__}"
+            )
+
+    @classmethod
+    def from_fault_model(cls, base, model, num_rounds: int) -> "FaultyMixer":
+        """Wrap ``base`` with ``model``'s fault trace over num_rounds."""
+        return cls(base, model.edge_keep(num_rounds))
+
+    @property
+    def num_nodes(self) -> int:
+        return self.base.num_nodes
+
+    @property
+    def compress(self):
+        return self.base.compress
+
+    def default_gamma(self, safety: float = 0.9) -> float:
+        return self.base.default_gamma(safety)
+
+    def node_pspec(self) -> P:
+        return self.base.node_pspec()
+
+    def laplacian(self, x, k=0):
+        """Masked Laplacian for round k (k % R into the fault trace).
+
+        Dense: directly callable. Ppermute: call inside a
+        caller-managed shard_map over the base mesh — the shard finds
+        its own mask row via its mesh position.
+        """
+        if self._dense is not None:
+            return self._dense.laplacian(x, k)
+        base = self.base
+        my = gossip.global_node_index(base.spec, base.axis_sizes)
+        keep = self._keep[jnp.mod(jnp.asarray(k), self.num_rounds), :, my]
+        return self._masked_laplacian(x, keep)
+
+    def _masked_laplacian(self, x, keep):
+        base = self.base
+        if base.compress is not None:
+            payload = jax.tree.map(
+                lambda v: compress_payload(v, base.compress), x
+            )
+        else:
+            payload = x
+        lap = gossip.masked_neighbor_laplacian(
+            payload, base.spec, base.axis_sizes, keep
+        )
+        return jax.tree.map(lambda v, d: d.astype(v.dtype), x, lap)
+
+    def run(
+        self,
+        rule,
+        x,
+        aux,
+        gamma,
+        num_iters: int,
+        trace_fn=None,
+        state_spec=None,
+        aux_spec=None,
+    ):
+        if self._dense is not None:
+            return self._dense.run(
+                rule, x, aux, gamma, num_iters, trace_fn, state_spec,
+                aux_spec,
+            )
+        base = self.base
+        if trace_fn is not None:
+            raise NotImplementedError(
+                "per-round traces are a simulated-path (DenseMixer) feature"
+            )
+        if base.mesh is None:
+            raise ValueError(
+                "FaultyMixer.run over ppermute needs a mesh; build the "
+                "base via PpermuteMixer.for_mesh(...)"
+            )
+        sspec = self.node_pspec() if state_spec is None else state_spec
+        aspec = self.node_pspec() if aux_spec is None else aux_spec
+        # cache on the *base* mixer: the folded masks are a traced
+        # input, so every FaultyMixer sharing this base (e.g. a
+        # failure-rate sweep) reuses one compiled program per
+        # (rule, num_iters, specs, mask period).
+        key = (
+            "faulty", rule, num_iters, sspec, aspec, aux is None,
+            self._keep.shape,
+        )
+        fn = base._programs.get(key)
+        if fn is None:
+            R = self.num_rounds
+
+            def scanned(b, o, keep_all, g):
+                my = gossip.global_node_index(base.spec, base.axis_sizes)
+
+                def f(carry, k):
+                    keep = keep_all[jnp.mod(k, R), :, my]
+                    lap = self._masked_laplacian(carry, keep)
+                    return rule(carry, lap, o, g), None
+
+                final, _ = lax.scan(f, b, jnp.arange(num_iters))
+                return final
+
+            if aux is None:
+                fn = jax.jit(compat.shard_map(
+                    lambda b, keep_all, g: scanned(b, None, keep_all, g),
+                    base.mesh,
+                    in_specs=(sspec, P(), P()),
+                    out_specs=sspec,
+                ))
+            else:
+                fn = jax.jit(compat.shard_map(
+                    scanned,
+                    base.mesh,
+                    in_specs=(sspec, aspec, P(), P()),
+                    out_specs=sspec,
+                ))
+            base._programs[key] = fn
+        gamma = jnp.asarray(gamma)
+        if aux is None:
+            return fn(x, self._keep, gamma), None
+        return fn(x, aux, self._keep, gamma), None

@@ -99,6 +99,36 @@ batched_add_chunk = jax.jit(jax.vmap(add_chunk))
 batched_remove_chunk = jax.jit(jax.vmap(remove_chunk))
 
 
+def rescale_num_nodes(
+    omega: jax.Array, V_old: int, V_new: int, C: float
+) -> jax.Array:
+    """Re-target Omega = (I/(V_old C) + P)^{-1} to a new network size.
+
+    Elastic membership changes V, and V sits inside every node's frozen
+    preconditioner through the ridge term I/(VC). The shift is
+    delta * I with delta = 1/(V_new C) - 1/(V_old C), i.e. a rank-L
+    identity "chunk": reuse the same Woodbury identities as data
+    add/remove with dH = sqrt(|delta|) * I_L (add when the ridge
+    stiffens — a node left — remove when it relaxes — a node joined).
+    """
+    if V_old == V_new:
+        return omega
+    delta = (1.0 / V_new - 1.0 / V_old) / C
+    L = omega.shape[-1]
+    dH = jnp.sqrt(jnp.asarray(abs(delta), omega.dtype)) * jnp.eye(
+        L, dtype=omega.dtype
+    )
+    if delta > 0:
+        return woodbury_add(omega, dH)
+    return woodbury_remove(omega, dH)
+
+
+batched_rescale_num_nodes = jax.jit(
+    jax.vmap(rescale_num_nodes, in_axes=(0, None, None, None)),
+    static_argnums=(1, 2, 3),
+)
+
+
 def reseed_betas(states: OnlineNodeState) -> jax.Array:
     """Stacked beta_i = Omega_i Q_i after an online update (step 13)."""
     return jnp.einsum("vlk,vkm->vlm", states.omega, states.Q)

@@ -1,0 +1,378 @@
+"""Fault-injection consensus: FaultModel, FaultyMixer, elastic membership.
+
+Pins the robustness acceptance contract:
+  (a) DC-ELM under per-round Bernoulli edge dropout (p <= 0.3) on a
+      certified jointly connected trace still converges to the
+      centralized solution on both mixers, simulated == sharded;
+  (b) a node leave -> rejoin during streaming recovers the
+      ``online.direct_state`` reference;
+  (c) the fusion-center comparison example runs end-to-end.
+"""
+
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import consensus, dc_elm, engine, gossip, mixers, online
+from tests.conftest import REPO, run_py
+
+
+def _problem(V=8, Ni=40, L=10, M=1, seed=0):
+    kx, kt = jax.random.split(jax.random.key(seed))
+    H = jax.random.normal(kx, (V, Ni, L)) / np.sqrt(L)
+    T = jax.random.normal(kt, (V, Ni, M))
+    return H, T
+
+
+# ---------------------------------------------------------------------------
+# FaultModel
+# ---------------------------------------------------------------------------
+
+
+def test_fault_model_masks_symmetric_deterministic():
+    g = consensus.hypercube(3)
+    fm = consensus.FaultModel(graph=g, edge_drop_prob=0.3, seed=7)
+    k1, k2 = fm.edge_keep(50), fm.edge_keep(50)
+    np.testing.assert_array_equal(k1, k2)  # replayable by seed
+    np.testing.assert_array_equal(k1, np.transpose(k1, (0, 2, 1)))
+    assert set(np.unique(k1)) <= {0.0, 1.0}
+    # masks live only on base edges
+    assert np.all(k1[:, g.adjacency == 0] == 0)
+    # p=0 keeps every edge every round
+    all_up = consensus.FaultModel(graph=g).edge_keep(5)
+    np.testing.assert_array_equal(all_up, np.broadcast_to(
+        (g.adjacency > 0).astype(float), (5, 8, 8)))
+
+
+def test_fault_model_outage_and_crash_windows():
+    g = consensus.ring(6)
+    fm = consensus.FaultModel(
+        graph=g,
+        outages=(consensus.LinkOutage(edge=(0, 1), start=5, duration=10),),
+        crashes=(consensus.NodeCrash(node=3, start=2, duration=4),),
+    )
+    keep = fm.edge_keep(20)
+    assert keep[4, 0, 1] == 1 and keep[5, 0, 1] == 0
+    assert keep[14, 0, 1] == 0 and keep[15, 0, 1] == 1
+    assert np.all(keep[2:6, 3, :] == 0) and np.all(keep[2:6, :, 3] == 0)
+    assert keep[6, 3, 2] == 1  # rejoined
+
+
+def test_certification_catches_partition():
+    g = consensus.ring(4)
+    # both of node 0's links permanently dead => never jointly connected
+    fm = consensus.FaultModel(
+        graph=g,
+        outages=(
+            consensus.LinkOutage(edge=(0, 1), start=0, duration=100),
+            consensus.LinkOutage(edge=(0, 3), start=0, duration=100),
+        ),
+    )
+    assert not fm.certify_jointly_connected(100, window=100)
+    assert consensus.FaultModel(graph=g).certify_jointly_connected(10, 1)
+    with pytest.raises(RuntimeError):
+        consensus.FaultModel.sample_certified(
+            g, 0.0, num_rounds=100, window=100,
+            outages=fm.outages, max_tries=3,
+        )
+
+
+def test_certification_joint_but_not_per_round():
+    """A trace whose every snapshot is disconnected but whose windowed
+    unions are connected certifies (the paper's joint-connectivity
+    condition, not per-round connectivity)."""
+    halves = consensus.alternating_halves(6)
+    union = consensus.Graph(
+        np.maximum(halves[0].adjacency, halves[1].adjacency)
+    )
+    # drop exactly the odd-pair edges on even rounds and vice versa
+    outages = []
+    for i in range(6):
+        for j in range(i + 1, 6):
+            if halves[0].adjacency[i, j] and not halves[1].adjacency[i, j]:
+                outages.append(consensus.LinkOutage((i, j), 1, 1))
+            elif halves[1].adjacency[i, j] and not halves[0].adjacency[i, j]:
+                outages.append(consensus.LinkOutage((i, j), 0, 1))
+    fm = consensus.FaultModel(graph=union, outages=tuple(outages))
+    for k, a in enumerate(fm.adjacency_stream(2)):
+        assert not consensus.Graph(a).is_connected, k
+    assert fm.certify_jointly_connected(2, window=2)
+    assert not fm.certify_jointly_connected(2, window=1)
+
+
+def test_fault_gamma_bound_delegates():
+    g = consensus.hypercube(3)
+    fm = consensus.FaultModel(graph=g, edge_drop_prob=0.2)
+    assert fm.gamma_upper_bound() == g.gamma_upper_bound()
+    base = mixers.DenseMixer.from_graphs(g)
+    faulty = mixers.FaultyMixer.from_fault_model(base, fm, 16)
+    assert faulty.default_gamma() == base.default_gamma()
+
+
+# ---------------------------------------------------------------------------
+# FaultyMixer over DenseMixer
+# ---------------------------------------------------------------------------
+
+
+def test_faulty_dense_laplacian_matches_masked_reference():
+    g = consensus.hypercube(3)
+    fm = consensus.FaultModel(graph=g, edge_drop_prob=0.4, seed=1)
+    keep = fm.edge_keep(7)
+    base = mixers.DenseMixer.from_graphs(g)
+    faulty = mixers.FaultyMixer(base, keep)
+    x = jax.random.normal(jax.random.key(2), (8, 5, 3))
+    flat = np.asarray(x).reshape(8, -1)
+    for k in [0, 3, 6, 9]:  # 9 wraps: mask k % R
+        adj = np.asarray(g.adjacency) * keep[k % 7]
+        ref = (adj @ flat - adj.sum(1)[:, None] * flat).reshape(x.shape)
+        out = faulty.laplacian(x, k)
+        np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-5)
+
+
+def test_dropout_converges_simulated():
+    """Acceptance (a), simulated path: p=0.3 per-round Bernoulli dropout
+    on a certified jointly connected trace still reaches beta*."""
+    H, T = _problem()
+    C = 0.5
+    g = consensus.hypercube(3)
+    fm = consensus.FaultModel.sample_certified(
+        g, 0.3, num_rounds=500, window=12
+    )
+    state, P_, Q_ = dc_elm.simulate_init(H, T, C)
+    beta_star = dc_elm.centralized_from_node_stats(P_, Q_, C)
+    eng = engine.with_faults(engine.simulated_dc_elm(g, C), fm, 500)
+    betas, _ = eng.run(state.betas, state.omegas, g.default_gamma(), 2000)
+    assert float(dc_elm.distance_to(betas, beta_star)) < 0.01
+
+
+def test_fold_edge_keep_covers_every_edge_once():
+    """Each undirected edge's two directions land on exactly the two
+    (perm, dst) slots that receive through it — for every ICI kind."""
+    for kind, n in [("ring", 8), ("ring", 2), ("hypercube", 8),
+                    ("complete", 5)]:
+        spec = gossip.GossipSpec(axes=("data",), kinds=(kind,))
+        sizes = {"data": n}
+        src = gossip.perm_sources(spec, sizes)
+        g = spec.to_graph(sizes)
+        # summing indicator masks per edge reconstructs the adjacency
+        counts = np.zeros((n, n))
+        for p in range(src.shape[0]):
+            for i in range(n):
+                counts[src[p, i], i] += 1
+        np.testing.assert_array_equal(counts, g.adjacency)
+
+
+def test_dropout_sharded_matches_simulated():
+    """Acceptance (a), sharded path: the same fault trace replayed
+    through masked ppermute gossip == the masked dense engine, and a
+    second fault trace reuses the compiled program."""
+    code = """
+import numpy as np, jax, jax.numpy as jnp
+from repro.core import consensus, dc_elm, engine, gossip
+from repro.utils import compat
+V, Ni, L, M, C = 8, 32, 12, 2, 0.5
+mesh = compat.make_mesh((8,), ('data',))
+spec = gossip.GossipSpec(axes=('data',), kinds=('hypercube',))
+g = spec.to_graph({'data': V})
+fm = consensus.FaultModel.sample_certified(g, 0.3, num_rounds=300, window=10)
+keep = fm.edge_keep(300)
+kx, kt = jax.random.split(jax.random.key(0))
+H = jax.random.normal(kx, (V, Ni, L)) / np.sqrt(L)
+T = jax.random.normal(kt, (V, Ni, M))
+state, P_, Q_ = dc_elm.simulate_init(H, T, C)
+beta_star = dc_elm.centralized_from_node_stats(P_, Q_, C)
+gamma = g.default_gamma()
+dense = engine.with_faults(engine.simulated_dc_elm(g, C), keep)
+ref, _ = dense.run(state.betas, state.omegas, gamma, 300)
+base = engine.sharded_dc_elm(mesh, spec, C)
+shd = engine.with_faults(base, keep)
+out, _ = shd.run(state.betas, state.omegas, gamma, 300)
+assert np.allclose(out, ref, atol=2e-5), np.abs(out - ref).max()
+assert float(dc_elm.distance_to(out, beta_star)) < 0.01
+n_programs = len(base.mixer._programs)
+keep2 = consensus.FaultModel(graph=g, edge_drop_prob=0.1, seed=9).edge_keep(300)
+shd2 = engine.with_faults(base, keep2)
+out2, _ = shd2.run(state.betas, state.omegas, gamma, 300)
+assert len(base.mixer._programs) == n_programs, 'recompiled for new masks'
+dense2 = engine.with_faults(engine.simulated_dc_elm(g, C), keep2)
+ref2, _ = dense2.run(state.betas, state.omegas, gamma, 300)
+assert np.allclose(out2, ref2, atol=2e-5), np.abs(out2 - ref2).max()
+print('OK')
+"""
+    r = run_py(code, devices=8)
+    assert r.returncode == 0, r.stderr
+    assert "OK" in r.stdout
+
+
+def test_faulty_step_inside_shard_map():
+    """engine.step with a faulty ppermute mixer inside a caller-managed
+    shard_map picks the round's mask via its mesh position."""
+    code = """
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from repro.core import consensus, dc_elm, engine, gossip
+from repro.utils import compat
+V, L, M, C = 8, 6, 2, 0.5
+mesh = compat.make_mesh((8,), ('data',))
+spec = gossip.GossipSpec(axes=('data',), kinds=('ring',))
+g = spec.to_graph({'data': V})
+keep = consensus.FaultModel(graph=g, edge_drop_prob=0.5, seed=3).edge_keep(11)
+H, T = (jax.random.normal(k, s) for k, s in
+        zip(jax.random.split(jax.random.key(1)), [(V, 20, L), (V, 20, M)]))
+state, _, _ = dc_elm.simulate_init(H, T, C)
+gamma = jnp.float32(g.default_gamma())
+shd = engine.with_faults(engine.sharded_dc_elm(mesh, spec, C), keep)
+dense = engine.with_faults(engine.simulated_dc_elm(g, C), keep)
+for k in [0, 4, 13]:
+    fn = compat.shard_map(lambda b, o: shd.step(b, o, gamma, k=k), mesh,
+                          in_specs=(P('data'), P('data')), out_specs=P('data'))
+    out = jax.jit(fn)(state.betas, state.omegas)
+    ref = dense.step(state.betas, state.omegas, gamma, k=k)
+    assert np.allclose(out, ref, atol=1e-5), (k, np.abs(out - ref).max())
+print('OK')
+"""
+    r = run_py(code, devices=8)
+    assert r.returncode == 0, r.stderr
+    assert "OK" in r.stdout
+
+
+# ---------------------------------------------------------------------------
+# Elastic membership (streaming churn)
+# ---------------------------------------------------------------------------
+
+
+def test_stream_leave_rejoin_recovers_direct_state():
+    """Acceptance (b): a node leaves mid-stream and rejoins with its
+    data; the stacked statistics recover the O(L^3) recompute reference
+    at every stage and consensus reaches the restored centralized
+    solution."""
+    V, L, M, C = 4, 10, 2, 4.0
+    H, T = _problem(V=V, Ni=30, L=L, M=M, seed=5)
+    g = consensus.complete(V)
+    eng = engine.simulated_dc_elm(g, C)
+    s = eng.stream_init(H, T)
+
+    eng3, s3 = eng.stream_leave(s, 1)
+    assert eng3.rule.num_nodes == 3
+    assert eng3.mixer.num_nodes == 3
+    stay = jnp.asarray([0, 2, 3])
+    ref3 = jax.vmap(lambda h, t: online.direct_state(h, t, C, 3))(
+        H[stay], T[stay]
+    )
+    np.testing.assert_allclose(s3.omegas, ref3.omega, rtol=1e-4, atol=1e-6)
+    np.testing.assert_allclose(s3.Qs, ref3.Q, rtol=1e-6, atol=1e-6)
+
+    # the shrunken network keeps streaming: rounds + a data chunk
+    dH, dT = _problem(V=3, Ni=6, L=L, M=M, seed=6)
+    s3, _ = eng3.stream_chunk(
+        s3, added=(dH, dT), gamma=eng3.mixer.default_gamma(), num_iters=40
+    )
+
+    # node 1 rejoins with its original data (appended at index 3)
+    eng4, s4 = eng3.stream_join(s3, H[1], T[1])
+    assert eng4.rule.num_nodes == 4
+    # post-rejoin node order is [0, 2, 3, 1] (joiner appends)
+    H4 = [jnp.concatenate([H[i], dH[j]]) for j, i in enumerate([0, 2, 3])]
+    H4.append(H[1])
+    T4 = [jnp.concatenate([T[i], dT[j]]) for j, i in enumerate([0, 2, 3])]
+    T4.append(T[1])
+    refs = [online.direct_state(h, t, C, 4) for h, t in zip(H4, T4)]
+    np.testing.assert_allclose(
+        s4.omegas, jnp.stack([r.omega for r in refs]), rtol=1e-3, atol=1e-5
+    )
+    np.testing.assert_allclose(
+        s4.Qs, jnp.stack([r.Q for r in refs]), rtol=1e-5, atol=1e-5
+    )
+
+    # and the restored network consents to the restored beta*
+    s4, _ = eng4.stream_chunk(
+        s4, gamma=eng4.mixer.default_gamma(), num_iters=1500
+    )
+    P4 = jnp.stack([h.T @ h for h in H4])
+    Q4 = jnp.stack([h.T @ t for h, t in zip(H4, T4)])
+    beta_star = dc_elm.centralized_from_node_stats(P4, Q4, C)
+    assert float(dc_elm.distance_to(s4.betas, beta_star)) < 0.05
+
+
+def test_membership_needs_dense_or_explicit_graph():
+    spec = gossip.GossipSpec(axes=("data",), kinds=("ring",))
+    eng = engine.ConsensusEngine(
+        mixers.PpermuteMixer(spec=spec, axis_sizes={"data": 4}),
+        engine.DCELMRule(4, 1.0),
+    )
+    s = engine.StreamState(
+        omegas=jnp.broadcast_to(jnp.eye(3), (4, 3, 3)),
+        Qs=jnp.zeros((4, 3, 2)),
+        betas=jnp.zeros((4, 3, 2)),
+    )
+    with pytest.raises(TypeError):
+        eng.stream_leave(s, 0)
+    # an explicit graph sidesteps the sharded-adjacency question
+    eng2, s2 = eng.stream_leave(s, 0, graph=consensus.ring(3))
+    assert eng2.mixer.num_nodes == 3 and s2.betas.shape[0] == 3
+
+
+def test_membership_preserves_fault_layer():
+    """stream_leave/stream_join on a with_faults engine carry the fault
+    trace across the membership change (masks resized with the
+    adjacency, joiner links all-up) instead of silently going
+    fault-free."""
+    V, C = 4, 4.0
+    H, T = _problem(V=V, Ni=20, L=6, M=1, seed=8)
+    g = consensus.complete(V)
+    keep = consensus.FaultModel(
+        graph=g, edge_drop_prob=0.4, seed=2
+    ).edge_keep(9)
+    eng = engine.with_faults(engine.simulated_dc_elm(g, C), keep)
+    s = eng.stream_init(H, T)
+
+    eng2, s2 = eng.stream_leave(s, 1)
+    assert isinstance(eng2.mixer, mixers.FaultyMixer)
+    stay = [0, 2, 3]
+    np.testing.assert_array_equal(
+        eng2.mixer.edge_keep, keep[np.ix_(range(9), stay, stay)]
+    )
+
+    eng3, _ = eng2.stream_join(s2, H[1], T[1])
+    assert isinstance(eng3.mixer, mixers.FaultyMixer)
+    grown = eng3.mixer.edge_keep
+    np.testing.assert_array_equal(grown[:, :3, :3], eng2.mixer.edge_keep)
+    assert np.all(grown[:, 3, :] == 1) and np.all(grown[:, :, 3] == 1)
+
+
+def test_rescale_num_nodes_matches_direct():
+    H, T = _problem(V=1, Ni=50, L=8, M=2, seed=9)
+    H, T = H[0], T[0]
+    for C in [0.5, 8.0]:
+        for V_old, V_new in [(4, 3), (3, 4), (5, 5)]:
+            s = online.init_state(H, T, C, V_old)
+            out = online.rescale_num_nodes(s.omega, V_old, V_new, C)
+            ref = online.init_state(H, T, C, V_new)
+            np.testing.assert_allclose(
+                out, ref.omega, rtol=1e-4, atol=1e-6
+            )
+
+
+# ---------------------------------------------------------------------------
+# Example (acceptance c)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_fault_tolerance_example_runs():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (
+        os.path.join(REPO, "src") + os.pathsep + env.get("PYTHONPATH", "")
+    )
+    r = subprocess.run(
+        [sys.executable, os.path.join(REPO, "examples", "fault_tolerance.py")],
+        capture_output=True, text=True, env=env, timeout=900,
+    )
+    assert r.returncode == 0, r.stderr
+    assert "Fusion-center baseline" in r.stdout
+    assert "distance to centralized" in r.stdout

@@ -75,3 +75,45 @@ print('OK')
 def test_collective_bytes_per_round():
     spec = gossip.GossipSpec(axes=("data",), kinds=("ring",))
     assert gossip.collective_bytes_per_round(spec, {"data": 8}, 100) == 200
+
+
+@pytest.mark.parametrize("axes,kinds,sizes", [
+    (("data",), ("ring",), {"data": 8}),
+    (("data",), ("ring",), {"data": 2}),
+    (("data",), ("hypercube",), {"data": 16}),
+    (("data",), ("complete",), {"data": 6}),
+    (("pod", "data"), ("ring", "ring"), {"pod": 4, "data": 4}),  # torus2d
+    (("pod", "data"), ("ring", "hypercube"), {"pod": 2, "data": 8}),
+])
+def test_gamma_bound_implementations_agree(axes, kinds, sizes):
+    """Thm. 2's 1/d_max bound has four implementations —
+    ``consensus.Graph.gamma_upper_bound``,
+    ``gossip.GossipSpec.gamma_upper_bound``, and the two mixers'
+    ``default_gamma`` — which must agree on every ICI-realizable
+    topology (drift here silently breaks the sharded/simulated
+    equivalence)."""
+    from repro.core import mixers
+
+    spec = gossip.GossipSpec(axes=axes, kinds=kinds)
+    g = spec.to_graph(sizes)
+    bound = g.gamma_upper_bound()
+    assert spec.gamma_upper_bound(sizes) == pytest.approx(bound, rel=1e-12)
+
+    dense = mixers.DenseMixer.from_graphs(g)
+    ppermute = mixers.PpermuteMixer(spec=spec, axis_sizes=dict(sizes))
+    safety = 0.9
+    assert dense.default_gamma(safety) == pytest.approx(
+        safety * bound, rel=1e-6
+    )
+    assert ppermute.default_gamma(safety) == pytest.approx(
+        safety * bound, rel=1e-12
+    )
+    # the fault wrapper must not shift the bound either (masks only
+    # remove edges)
+    faulty = mixers.FaultyMixer(dense, np.ones((3,) + g.adjacency.shape))
+    assert faulty.default_gamma(safety) == dense.default_gamma(safety)
+    # torus2d cross-check: the explicit constructor agrees with the
+    # ring x ring product spec
+    if kinds == ("ring", "ring"):
+        ref = consensus.torus2d(sizes["pod"], sizes["data"])
+        assert ref.gamma_upper_bound() == pytest.approx(bound, rel=1e-12)

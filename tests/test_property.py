@@ -32,25 +32,6 @@ def test_ridge_primal_dual_equivalence(n, l, m, c, seed):
 
 
 @given(
-    n=st.integers(10, 60),
-    dn=st.integers(1, 8),
-    l=st.integers(2, 10),
-    seed=st.integers(0, 2**30),
-)
-@settings(**_SMALL)
-def test_woodbury_add_remove_inverse(n, dn, l, seed):
-    """remove(add(S, d), d) == S for any chunk."""
-    ks = jax.random.split(jax.random.key(seed), 4)
-    H = jax.random.normal(ks[0], (n, l)) / np.sqrt(l)
-    T = jax.random.normal(ks[1], (n, 1))
-    dH = jax.random.normal(ks[2], (dn, l)) / np.sqrt(l)
-    dT = jax.random.normal(ks[3], (dn, 1))
-    s0 = online.init_state(H, T, C=4.0, V=2)
-    s1 = online.remove_chunk(online.add_chunk(s0, dH, dT), dH, dT)
-    np.testing.assert_allclose(s1.omega, s0.omega, rtol=1e-2, atol=1e-3)
-
-
-@given(
     v=st.integers(2, 10),
     gamma=st.floats(0.01, 0.45),
     seed=st.integers(0, 2**30),
@@ -69,6 +50,88 @@ def test_mixing_preserves_network_average(v, gamma, seed):
     np.testing.assert_allclose(
         jnp.sum(out.betas, 0), jnp.sum(betas, 0), rtol=1e-4, atol=1e-4
     )
+
+
+@given(
+    n=st.integers(10, 60),
+    dn=st.integers(1, 8),
+    l=st.integers(2, 10),
+    m=st.integers(1, 3),
+    c=st.floats(0.2, 50.0),
+    v=st.integers(1, 12),
+    dtype=st.sampled_from(["float32", "float64"]),
+    seed=st.integers(0, 2**30),
+)
+@settings(**_SMALL)
+def test_woodbury_add_then_remove_roundtrips_state(
+    n, dn, l, m, c, v, dtype, seed
+):
+    """add(S, d) then remove(..., d) round-trips the FULL state (omega
+    AND Q) to the original, across random shapes/dtypes/constants."""
+    with _dtype_ctx(dtype):
+        dt = jnp.dtype(dtype)
+        ks = jax.random.split(jax.random.key(seed), 4)
+        H = jax.random.normal(ks[0], (n, l), dt) / np.sqrt(l)
+        T = jax.random.normal(ks[1], (n, m), dt)
+        dH = jax.random.normal(ks[2], (dn, l), dt) / np.sqrt(l)
+        dT = jax.random.normal(ks[3], (dn, m), dt)
+        s0 = online.init_state(H, T, C=c, V=v)
+        s1 = online.remove_chunk(online.add_chunk(s0, dH, dT), dH, dT)
+        tol = dict(rtol=1e-2, atol=1e-3) if dtype == "float32" else dict(
+            rtol=1e-8, atol=1e-10
+        )
+        np.testing.assert_allclose(s1.omega, s0.omega, **tol)
+        np.testing.assert_allclose(s1.Q, s0.Q, **tol)
+        # and the reverse ordering: remove a real chunk, then re-add it
+        s2 = online.add_chunk(
+            online.remove_chunk(s0, H[:dn], T[:dn]), H[:dn], T[:dn]
+        )
+        np.testing.assert_allclose(s2.omega, s0.omega, **tol)
+        np.testing.assert_allclose(s2.Q, s0.Q, **tol)
+
+
+@given(
+    n=st.integers(10, 60),
+    dn=st.integers(1, 8),
+    l=st.integers(2, 10),
+    m=st.integers(1, 3),
+    c=st.floats(0.2, 50.0),
+    v=st.integers(1, 12),
+    dtype=st.sampled_from(["float32", "float64"]),
+    seed=st.integers(0, 2**30),
+)
+@settings(**_SMALL)
+def test_woodbury_matches_direct_state(n, dn, l, m, c, v, dtype, seed):
+    """Woodbury add/remove == online.direct_state (the O(L^3)
+    recompute-from-scratch reference) on the surviving data."""
+    with _dtype_ctx(dtype):
+        dt = jnp.dtype(dtype)
+        ks = jax.random.split(jax.random.key(seed), 4)
+        H = jax.random.normal(ks[0], (n, l), dt) / np.sqrt(l)
+        T = jax.random.normal(ks[1], (n, m), dt)
+        dH = jax.random.normal(ks[2], (dn, l), dt) / np.sqrt(l)
+        dT = jax.random.normal(ks[3], (dn, m), dt)
+        s = online.init_state(H, T, C=c, V=v)
+        s = online.add_chunk(s, dH, dT)
+        s = online.remove_chunk(s, H[:dn], T[:dn])
+        H2 = jnp.concatenate([H[dn:], dH])
+        T2 = jnp.concatenate([T[dn:], dT])
+        ref = online.direct_state(H2, T2, C=c, V=v)
+        tol = dict(rtol=2e-2, atol=2e-3) if dtype == "float32" else dict(
+            rtol=1e-7, atol=1e-9
+        )
+        np.testing.assert_allclose(s.omega, ref.omega, **tol)
+        np.testing.assert_allclose(s.Q, ref.Q, **tol)
+        np.testing.assert_allclose(s.beta, ref.beta, **tol)
+
+
+def _dtype_ctx(dtype: str):
+    """x64 mode for float64 draws; a no-op context for float32."""
+    import contextlib
+
+    if dtype == "float64":
+        return jax.experimental.enable_x64()
+    return contextlib.nullcontext()
 
 
 @given(
