@@ -2,6 +2,7 @@
 
 from __future__ import annotations
 
+import os
 import time
 
 import jax
@@ -293,4 +294,178 @@ def bench_gossip_topologies():
             f"lambda2={g.algebraic_connectivity:.3f};"
             f"dmax={g.d_max:.0f};bytes_per_node_per_round={bytes_round:.0f}",
         ))
+    return rows, {}
+
+
+def bench_compression_pareto(rounds: int = 2000, tol: float = 1e-2):
+    """Accuracy-vs-bytes Pareto for compressed gossip (DESIGN.md §9).
+
+    Every scheme runs the same `rounds` window on the same problem and
+    reports rounds-to-tolerance, exact bytes-on-wire up to that round,
+    and total window bytes — so the table answers both "what does it
+    cost to *reach* the fp32 residual" and "what does it cost to reach
+    and then *hold* it" (a serving window; this is where event-
+    triggered rounds go quiet and win). The acceptance rows check that
+    int8 + error feedback reaches the fp32 run's tolerance residual
+    within 10x the fp32 rounds at <= 25% of the fp32 window bytes, on
+    both mixers, including composed with a certified FaultModel trace.
+
+    topk ships k=10% of entries and needs a reduced consensus gain
+    (gamma x0.3) to contract — the classic CHOCO delta-compression
+    trade.
+    """
+    from repro.core.compression import CompressionSpec
+
+    rows = []
+    V, Ni, L, M, C = 8, 32, 32, 4, 0.5
+    ks = jax.random.split(jax.random.key(11), 2)
+    H = (jax.random.normal(ks[0], (V, Ni, L)) / np.sqrt(L)).astype(
+        jnp.float32
+    )
+    T = jax.random.normal(ks[1], (V, Ni, M)).astype(jnp.float32)
+    state, P_, Q_ = dc_elm.simulate_init(H, T, C)
+    beta_star = dc_elm.centralized_from_node_stats(P_, Q_, C)
+    g = consensus.build("hypercube", V)
+    gamma = g.default_gamma()
+    trace_fn = lambda b: dc_elm.distance_to(b, beta_star)  # noqa: E731
+    fm = consensus.FaultModel.sample_certified(
+        g, 0.2, num_rounds=64, window=16
+    )
+    keep = fm.edge_keep(64)
+
+    schemes = [
+        ("fp32", None, 1.0),
+        ("bf16+ef", CompressionSpec(mode="bf16"), 1.0),
+        ("int8+ef", CompressionSpec(mode="int8", tile=128), 1.0),
+        ("int8-noef", CompressionSpec(mode="int8", tile=128,
+                                      error_feedback=False), 1.0),
+        ("topk10+ef", CompressionSpec(mode="topk", k=0.1), 0.3),
+        ("int8+ef+event", CompressionSpec(mode="int8", tile=128,
+                                          event_threshold=1e-3), 1.0),
+    ]
+
+    def measure(eng, gscale):
+        betas, tr = eng.run(
+            state.betas, state.omegas, gamma * gscale, rounds,
+            trace_fn=trace_fn,
+        )
+        tr = np.asarray(tr)
+        hit = np.nonzero(tr < tol)[0]
+        r2t = int(hit[0]) + 1 if hit.size else -1
+        ws = eng.wire_stats
+        b2t = float(ws.per_round_bytes[:r2t].sum()) if r2t > 0 else -1.0
+        return r2t, b2t, float(ws.bytes_on_wire), float(tr[-1]), ws
+
+    base = {}
+    for faulted in (False, True):
+        tag = "faulty/" if faulted else "dense/"
+        for name, spec, gscale in schemes:
+            eng = engine.simulated_dc_elm(g, C, compress=spec)
+            if faulted:
+                eng = engine.with_faults(eng, keep)
+            r2t, b2t, bwin, final, ws = measure(eng, gscale)
+            key = tag + name
+            base[key] = (r2t, b2t, bwin)
+            fp = base[tag + "fp32"]
+            rows.append((
+                f"compression/{key}", 0.0,
+                f"rounds_to_{tol:g}={r2t};bytes_to_tol={b2t:.0f};"
+                f"window_bytes={bwin:.0f};window_ratio={bwin/fp[2]:.3f};"
+                f"final_residual={final:.2e};"
+                f"skip_frac={ws.links_skipped/max(ws.links_live,1):.2f}",
+            ))
+        # acceptance: int8+EF (event-triggered) vs the fp32 window
+        fp, ev = base[tag + "fp32"], base[tag + "int8+ef+event"]
+        ok_rounds = 0 < ev[0] <= 10 * max(fp[0], 1)
+        ok_bytes = ev[2] <= 0.25 * fp[2]
+        rows.append((
+            f"compression/{tag}acceptance", 0.0,
+            f"int8_ef_within_10x_rounds={ok_rounds};"
+            f"bytes_le_25pct_fp32={ok_bytes};"
+            f"rounds={ev[0]}v{fp[0]};bytes_ratio={ev[2]/fp[2]:.3f}",
+        ))
+
+    # the same comparison on the ppermute production path (+ faults),
+    # in a subprocess with 8 fake host devices; residuals are sampled
+    # between cached shard_map(scan) blocks (period-aligned with the
+    # fault trace) since per-round traces are a dense-path feature
+    import subprocess
+    import sys
+
+    code = f"""
+import numpy as np, jax, jax.numpy as jnp
+from repro.core import consensus, dc_elm, engine, gossip
+from repro.core.compression import CompressionSpec
+from repro.utils import compat
+V, Ni, L, M, C = {V}, {Ni}, {L}, {M}, {C}
+# block == the fault-trace period: a bare FaultyMixer restarts its
+# round counter per run() call, so period-aligned blocks keep the fp32
+# baseline on the same certified cyclic trace the compressed schemes
+# (which carry an absolute round counter) replay
+rounds, tol, block = {rounds}, {tol}, 64
+mesh = compat.make_mesh((8,), ('data',))
+ks = jax.random.split(jax.random.key(11), 2)
+H = (jax.random.normal(ks[0], (V, Ni, L)) / np.sqrt(L)).astype(jnp.float32)
+T = jax.random.normal(ks[1], (V, Ni, M)).astype(jnp.float32)
+state, P_, Q_ = dc_elm.simulate_init(H, T, C)
+beta_star = dc_elm.centralized_from_node_stats(P_, Q_, C)
+spec = gossip.GossipSpec(axes=('data',), kinds=('hypercube',))
+g = spec.to_graph({{'data': V}})
+gamma = g.default_gamma()
+fm = consensus.FaultModel.sample_certified(g, 0.2, num_rounds=64, window=16)
+keep = fm.edge_keep(64)
+for faulted in (False, True):
+    tag = 'ppermute_faulty/' if faulted else 'ppermute/'
+    base = {{}}
+    for name, cs in [('fp32', None),
+                     ('int8+ef', CompressionSpec(mode='int8', tile=128)),
+                     ('int8+ef+event', CompressionSpec(
+                          mode='int8', tile=128, event_threshold=1e-3))]:
+        eng = engine.sharded_dc_elm(mesh, spec, C, compress=cs)
+        if faulted:
+            eng = engine.with_faults(eng, keep)
+        betas, stats, r2t, prb = state.betas, None, -1, []
+        for b in range(rounds // block):
+            betas, _ = eng.run(betas, state.omegas, gamma, block)
+            ws = eng.wire_stats
+            stats = ws if stats is None else stats + ws
+            prb.append(ws.per_round_bytes)
+            if r2t < 0 and float(dc_elm.distance_to(betas, beta_star)) < tol:
+                r2t = (b + 1) * block
+        prb = np.concatenate(prb)
+        b2t = float(prb[:r2t].sum()) if r2t > 0 else -1.0
+        base[name] = (r2t, stats.bytes_on_wire)
+        print(f"ROW,compression/{{tag}}{{name}},0.0,"
+              f"rounds_to_tol_le={{r2t}};bytes_to_tol={{b2t:.0f}};"
+              f"window_bytes={{stats.bytes_on_wire}};"
+              f"window_ratio={{stats.bytes_on_wire/base[list(base)[0]][1]:.3f}};"
+              f"final_residual={{float(dc_elm.distance_to(betas, beta_star)):.2e}};"
+              f"skip_frac={{stats.links_skipped/max(stats.links_live,1):.2f}}")
+    fp, ev = base['fp32'], base['int8+ef+event']
+    ok_rounds = 0 < ev[0] <= 10 * max(fp[0], 1)
+    ok_bytes = ev[1] <= 0.25 * fp[1]
+    print(f"ROW,compression/{{tag}}acceptance,0.0,"
+          f"int8_ef_within_10x_rounds={{ok_rounds}};"
+          f"bytes_le_25pct_fp32={{ok_bytes}};"
+          f"rounds={{ev[0]}}v{{fp[0]}};bytes_ratio={{ev[1]/fp[1]:.3f}}")
+print('DONE')
+"""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"
+    ) + os.pathsep + env.get("PYTHONPATH", "")
+    r = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True,
+        env=env, timeout=1800,
+    )
+    if "DONE" not in r.stdout:
+        rows.append((
+            "compression/ppermute", 0.0,
+            f"ERROR:{r.stderr.strip().splitlines()[-1] if r.stderr else 'unknown'}",
+        ))
+    for line in r.stdout.splitlines():
+        if line.startswith("ROW,"):
+            _, name, us, derived = line.split(",", 3)
+            rows.append((name, float(us), derived))
     return rows, {}

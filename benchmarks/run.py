@@ -68,6 +68,7 @@ def _register():
         "topology": micro.bench_gossip_topologies,
         "streaming": micro.bench_streaming_driver,
         "faults": micro.bench_fault_tolerance,
+        "compression": micro.bench_compression_pareto,
         "roofline": _roofline_table,
     })
 
@@ -97,6 +98,8 @@ def main() -> None:
                 kw = {"iters": 300}
             if args.fast and name == "faults":
                 kw = {"rounds": 1000}
+            if args.fast and name == "compression":
+                kw = {"rounds": 600}
             rows, _ = fn(**kw)
             for r in rows:
                 print(f"{r[0]},{r[1]:.1f},{r[2]}")

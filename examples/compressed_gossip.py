@@ -1,0 +1,105 @@
+"""Compressed gossip: shrinking DC-ELM's wire traffic 10x.
+
+The paper motivates DC-ELM for networks where "the amount of
+information exchanging" is the binding constraint (Sec. V). This
+walkthrough builds up the compression subsystem (DESIGN.md §9) on a
+16-node hypercube, scene by scene:
+
+1. **Wire formats** — bf16 cast, int8 stochastic quantization with
+   per-tile scales, top-k sparsification. Every scheme converges to
+   the same centralized solution; the engine reports exact
+   bytes-on-wire for each (`ConsensusEngine.wire_stats`).
+
+2. **Error feedback** — why int8 gossip has *no* quantization floor
+   here: each node transmits the quantized difference against its
+   public replica (CHOCO-style), so the quantizer's scale decays with
+   the residual. The memoryless ablation (`error_feedback=False`)
+   shows the floor you'd get without the memory.
+
+3. **Event-triggered rounds** — nodes whose residual moved less than
+   a threshold stay silent (zero bytes). In a reach-and-hold window
+   the network goes quiet after convergence: ~10x fewer bytes than
+   fp32 at the same tolerance.
+
+4. **Stacking with faults** — `with_faults` slides the fault layer
+   under the compression layer, so encoded payloads cross whatever
+   links the certified trace left alive; convergence and exact
+   live-link byte accounting survive.
+
+Run:  PYTHONPATH=src python examples/compressed_gossip.py
+"""
+
+import jax
+import numpy as np
+
+from repro.core import consensus, dc_elm, engine
+from repro.core.compression import CompressionSpec
+
+V, Ni, L, M, C = 16, 48, 32, 4, 0.5
+ROUNDS = 1200
+
+ks = jax.random.split(jax.random.key(0), 2)
+H = jax.random.normal(ks[0], (V, Ni, L)) / np.sqrt(L)
+T = jax.random.normal(ks[1], (V, Ni, M))
+state, P_, Q_ = dc_elm.simulate_init(H, T, C)
+beta_star = dc_elm.centralized_from_node_stats(P_, Q_, C)
+dist = lambda b: float(dc_elm.distance_to(b, beta_star))  # noqa: E731
+
+graph = consensus.build("hypercube", V)
+gamma = graph.default_gamma()
+
+
+def show(name, eng, gamma=gamma, rounds=ROUNDS):
+    betas, _ = eng.run(state.betas, state.omegas, gamma, rounds)
+    ws = eng.wire_stats
+    print(f"  {name:<16s} dist={dist(betas):.2e}  "
+          f"bytes={ws.bytes_on_wire/1e6:7.2f}MB  "
+          f"ratio={ws.compression_ratio:5.3f}  "
+          f"silent_links={ws.links_skipped}/{ws.links_live}")
+    return betas
+
+
+print(f"== 1. Wire formats ({V}-node hypercube, {ROUNDS} rounds) ==")
+show("fp32", engine.simulated_dc_elm(graph, C))
+show("bf16", engine.simulated_dc_elm(graph, C,
+                                     compress=CompressionSpec("bf16")))
+show("int8 (t=128)", engine.simulated_dc_elm(
+    graph, C, compress=CompressionSpec("int8", tile=128)))
+# top-k transmits 10% of entries; CHOCO theory asks for a smaller
+# consensus gain when the compressor keeps this little per round
+show("topk 10%", engine.simulated_dc_elm(
+    graph, C, compress=CompressionSpec("topk", k=0.1)), gamma=0.3 * gamma)
+
+print("\n== 2. Error feedback: replica memory removes the floor ==")
+show("int8 + EF", engine.simulated_dc_elm(
+    graph, C, compress=CompressionSpec("int8", tile=128)))
+show("int8, no EF", engine.simulated_dc_elm(
+    graph, C,
+    compress=CompressionSpec("int8", tile=128, error_feedback=False)))
+print("  (no-EF is stuck ~3 decades higher: each round re-quantizes the "
+      "full-scale state,\n   EF quantizes a residual that shrinks 127x "
+      "per round)")
+
+print("\n== 3. Event-triggered rounds: converge, then go quiet ==")
+spec = CompressionSpec("int8", tile=128, event_threshold=1e-3)
+eng = engine.simulated_dc_elm(graph, C, compress=spec)
+betas, _ = eng.run(state.betas, state.omegas, gamma, ROUNDS)
+ws = eng.wire_stats
+fp32_bytes = ws.bytes_uncompressed
+duty = ws.per_round_bytes / max(ws.per_round_bytes.max(), 1)
+print(f"  dist={dist(betas):.2e}  bytes={ws.bytes_on_wire/1e6:.2f}MB "
+      f"vs fp32 {fp32_bytes/1e6:.2f}MB -> {ws.compression_ratio:.1%}")
+print(f"  broadcast duty cycle: first 50 rounds {duty[:50].mean():.0%}, "
+      f"last 50 rounds {duty[-50:].mean():.0%}")
+
+print("\n== 4. Stacked with a certified fault trace (20% link dropout) ==")
+fm = consensus.FaultModel.sample_certified(graph, 0.2, num_rounds=64,
+                                           window=16)
+eng = engine.with_faults(
+    engine.simulated_dc_elm(graph, C, compress=spec), fm.edge_keep(64)
+)
+print(f"  mixer stack: {type(eng.mixer).__name__}"
+      f"({type(eng.mixer.base).__name__})")
+show("int8+EF+event", eng)
+print("  (bytes count only live links; dropped links move nothing and "
+      "silent nodes send nothing)")

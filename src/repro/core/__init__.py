@@ -7,12 +7,14 @@ Modules:
   dc_elm      DC-ELM Algorithm 1 (simulated + ppermute-sharded)
   online      Online DC-ELM Algorithm 2 (Woodbury updates)
   gossip      ppermute neighbor-exchange primitives
+  compression quantized/sparsified gossip payloads + wire accounting
   dsgd        beyond-paper decentralized deep training (paper rule on pytrees)
   incremental Hamiltonian-cycle baseline (Sec. II-B1)
   fusion_elm  fusion-center / MapReduce baseline (refs [17][18])
 """
 
 from repro.core import (  # noqa: F401
+    compression,
     consensus,
     dc_elm,
     dsgd,

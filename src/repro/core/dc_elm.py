@@ -26,6 +26,11 @@ as thin wrappers over the engine:
   consensus axes; mixing is neighbor-only ``lax.ppermute`` gossip
   (``mixers.PpermuteMixer`` over core/gossip.py) under ``shard_map``.
   This is the production path.
+
+Robustness and wire-format layers compose around either path at the
+engine level: ``engine.with_faults`` (per-round edge keep-masks),
+``engine.with_compression`` / the constructors' ``compress=`` knob
+(bf16 / int8 / top-k payloads with error feedback — DESIGN.md §8–§9).
 """
 
 from __future__ import annotations

@@ -26,8 +26,13 @@ the simulated fidelity path is tested with. Streaming also survives
 churn: ``stream_leave``/``stream_join`` remove or add whole nodes
 (their data shard included) with a rank-L Woodbury re-target of every
 survivor's preconditioner, and ``with_faults`` wraps any engine's
-mixer in a fault-injection layer (``mixers.FaultyMixer``). See
-DESIGN.md §4 and §8.
+mixer in a fault-injection layer (``mixers.FaultyMixer``).
+``with_compression`` (or a ``compression.CompressionSpec`` handed to
+any constructor's ``compress=``) wraps the mixer in a
+``CompressedMixer`` — quantized/sparsified wire payloads with error
+feedback and event-triggered rounds — and every run surfaces exact
+bytes-on-wire accounting as ``ConsensusEngine.wire_stats``. See
+DESIGN.md §4, §8 and §9.
 """
 
 from __future__ import annotations
@@ -40,6 +45,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import gossip, online
+from repro.core.compression import CompressedMixer, CompressionSpec
 from repro.core.consensus import FaultModel, Graph
 from repro.core.mixers import DenseMixer, FaultyMixer, PpermuteMixer
 
@@ -90,10 +96,35 @@ class AverageRule:
 
 @dataclasses.dataclass(frozen=True)
 class ConsensusEngine:
-    """One consensus iteration = rule(state, mixer.laplacian(state))."""
+    """One consensus iteration = rule(state, mixer.laplacian(state)).
+
+    Wire-format and robustness knobs compose around the mixer without
+    touching the rule:
+
+    * ``compress=`` on the convenience constructors — ``None``/"none"
+      (no compression, the default) or "bf16" select the mixers' inline
+      payload cast; an "int8"/"topk" mode string or a full
+      ``compression.CompressionSpec`` (error feedback, event-triggered
+      broadcasts) wraps the mixer in a ``CompressedMixer``.
+      ``with_compression(eng, spec)`` does the same to an existing
+      engine.
+    * ``with_faults(eng, model_or_masks)`` injects a per-round edge
+      keep-mask stream (``mixers.FaultyMixer``). The two stack —
+      compression always sits outermost, so encoded payloads cross
+      whatever links the fault trace left alive.
+
+    After any ``run``/``stream_chunk``, ``eng.wire_stats`` holds the
+    exact bytes-on-wire accounting of the rounds just executed
+    (``compression.WireStats``), on every mixer stack.
+    """
 
     mixer: Any
     rule: Callable
+
+    @property
+    def wire_stats(self):
+        """Exact ``compression.WireStats`` of the last run (or None)."""
+        return getattr(self.mixer, "last_wire_stats", None)
 
     def step(self, x, aux=None, gamma=None, k=0):
         """A single consensus round, in the mixer's execution context.
@@ -165,7 +196,10 @@ class ConsensusEngine:
 
         Node-level churn (a whole member arriving/departing, not just
         its data chunks) is ``stream_leave``/``stream_join``, which
-        rebuild the engine for the new V.
+        rebuild the engine for the new V. After the event,
+        ``self.wire_stats`` holds the exact bytes the rounds moved
+        (and the mixer accumulates ``total_bytes_on_wire`` across
+        events).
 
         Returns (StreamState, traces or None).
         """
@@ -279,7 +313,7 @@ class ConsensusEngine:
         if graph is not None:
             return jnp.asarray(graph.adjacency, jnp.float32)[None]
         mixer = self.mixer
-        if isinstance(mixer, FaultyMixer):
+        while isinstance(mixer, (CompressedMixer, FaultyMixer)):
             mixer = mixer.base
         if not isinstance(mixer, DenseMixer):
             raise TypeError(
@@ -303,25 +337,35 @@ class ConsensusEngine:
         self, new_engine: "ConsensusEngine", *, drop: int | None = None,
         add: bool = False,
     ) -> "ConsensusEngine":
-        """Carry a FaultyMixer's trace across a membership change.
+        """Carry FaultyMixer / CompressedMixer wrappers across a
+        membership change.
 
-        The masks are resized like the adjacency (departed row/column
-        deleted; a joiner's links start all-up). The transformed trace
-        has NOT been re-certified for joint connectivity — re-run
+        Fault masks are resized like the adjacency (departed row/column
+        deleted; a joiner's links start all-up); a compression spec is
+        re-applied on top unchanged. The transformed fault trace has
+        NOT been re-certified for joint connectivity — re-run
         ``FaultModel.certify_jointly_connected`` on it if the churned
         network must keep the convergence guarantee.
         """
-        if not isinstance(self.mixer, FaultyMixer):
-            return new_engine
-        keep = self.mixer.edge_keep
-        if drop is not None:
-            keep = np.delete(np.delete(keep, drop, axis=1), drop, axis=2)
-        if add:
-            R, V = keep.shape[0], keep.shape[1]
-            grown = np.ones((R, V + 1, V + 1), dtype=keep.dtype)
-            grown[:, :V, :V] = keep
-            keep = grown
-        return with_faults(new_engine, keep)
+        mixer = self.mixer
+        comp = mixer.spec if isinstance(mixer, CompressedMixer) else None
+        if comp is not None:
+            mixer = mixer.base
+        if isinstance(mixer, FaultyMixer):
+            keep = mixer.edge_keep
+            if drop is not None:
+                keep = np.delete(
+                    np.delete(keep, drop, axis=1), drop, axis=2
+                )
+            if add:
+                R, V = keep.shape[0], keep.shape[1]
+                grown = np.ones((R, V + 1, V + 1), dtype=keep.dtype)
+                grown[:, :V, :V] = keep
+                keep = grown
+            new_engine = with_faults(new_engine, keep)
+        if comp is not None:
+            new_engine = with_compression(new_engine, comp)
+        return new_engine
 
     def _base_compress(self):
         return getattr(self.mixer, "compress", None)
@@ -360,14 +404,21 @@ def simulated_dc_elm(
     C: float,
     *,
     dtype=jnp.float32,
-    compress: str | None = None,
+    compress=None,
 ) -> ConsensusEngine:
-    """DC-ELM over arbitrary dense graphs (the fidelity/simulation path)."""
+    """DC-ELM over arbitrary dense graphs (the fidelity/simulation path).
+
+    compress: None/"none" (default), "bf16" (inline payload cast), or an
+    "int8"/"topk" mode string / ``compression.CompressionSpec`` (wraps
+    the mixer in a ``CompressedMixer``).
+    """
+    inline, spec = _split_compress(compress)
     if isinstance(graphs, (Graph, list)):
-        mixer = DenseMixer.from_graphs(graphs, dtype=dtype, compress=compress)
+        mixer = DenseMixer.from_graphs(graphs, dtype=dtype, compress=inline)
     else:
-        mixer = DenseMixer(graphs, compress=compress)
-    return ConsensusEngine(mixer, DCELMRule(mixer.num_nodes, C))
+        mixer = DenseMixer(graphs, compress=inline)
+    eng = ConsensusEngine(mixer, DCELMRule(mixer.num_nodes, C))
+    return with_compression(eng, spec) if spec is not None else eng
 
 
 def sharded_dc_elm(
@@ -375,11 +426,17 @@ def sharded_dc_elm(
     spec: gossip.GossipSpec,
     C: float,
     *,
-    compress: str | None = None,
+    compress=None,
 ) -> ConsensusEngine:
-    """DC-ELM over mesh neighbors (the ppermute production path)."""
-    mixer = PpermuteMixer.for_mesh(mesh, spec, compress=compress)
-    return ConsensusEngine(mixer, DCELMRule(mixer.num_nodes, C))
+    """DC-ELM over mesh neighbors (the ppermute production path).
+
+    compress: same knob as ``simulated_dc_elm`` — inline "bf16" or a
+    ``CompressionSpec``/mode string for the compressed-gossip subsystem.
+    """
+    inline, cspec = _split_compress(compress)
+    mixer = PpermuteMixer.for_mesh(mesh, spec, compress=inline)
+    eng = ConsensusEngine(mixer, DCELMRule(mixer.num_nodes, C))
+    return with_compression(eng, cspec) if cspec is not None else eng
 
 
 def with_faults(
@@ -394,7 +451,16 @@ def with_faults(
     update rule, step bound, and — on the sharded path — the compiled
     collective program are untouched; only dropped links stop
     contributing to the Laplacian.
+
+    Stacks with compression: if the engine is already compressed, the
+    fault layer slides *under* the ``CompressedMixer`` so encoded
+    payloads cross whatever links the trace left alive.
     """
+    if isinstance(eng.mixer, CompressedMixer):
+        inner = with_faults(
+            ConsensusEngine(eng.mixer.base, eng.rule), faults, num_rounds
+        )
+        return with_compression(inner, eng.mixer.spec)
     if isinstance(faults, FaultModel):
         if num_rounds is None:
             raise ValueError("num_rounds is required with a FaultModel")
@@ -404,13 +470,37 @@ def with_faults(
     return ConsensusEngine(mixer, eng.rule)
 
 
-def simulated_averaging(
-    adjacency, *, compress: str | None = None
-) -> ConsensusEngine:
+def with_compression(eng: ConsensusEngine, spec) -> ConsensusEngine:
+    """Wrap an engine's mixer in a ``compression.CompressedMixer``.
+
+    spec: a ``CompressionSpec``, a mode string ("bf16" / "int8" /
+    "topk"), or None/"none" (still wraps — useful for uniform wire
+    accounting). Composes over a fault-injected engine; the update rule
+    and Thm. 2 step bound are untouched (DESIGN.md §9).
+    """
+    return ConsensusEngine(CompressedMixer(eng.mixer, spec), eng.rule)
+
+
+def _split_compress(compress):
+    """Constructor ``compress=`` knob -> (inline mixer mode, spec).
+
+    None/"none"/"bf16" ride the mixers' inline payload cast; a richer
+    mode string or a ``CompressionSpec`` becomes a ``CompressedMixer``
+    wrap (so ``simulated_dc_elm(g, C, compress=CompressionSpec(...))``
+    just works).
+    """
+    if compress is None or compress in ("none", "bf16"):
+        return compress, None
+    return None, CompressionSpec.parse(compress)
+
+
+def simulated_averaging(adjacency, *, compress=None) -> ConsensusEngine:
     """Plain consensus averaging / D-PSGD mixing on a dense adjacency."""
-    return ConsensusEngine(
-        DenseMixer(adjacency, compress=compress), AverageRule()
+    inline, spec = _split_compress(compress)
+    eng = ConsensusEngine(
+        DenseMixer(adjacency, compress=inline), AverageRule()
     )
+    return with_compression(eng, spec) if spec is not None else eng
 
 
 def sharded_averaging(
@@ -418,13 +508,15 @@ def sharded_averaging(
     axis_sizes: dict,
     *,
     mesh: jax.sharding.Mesh | None = None,
-    compress: str | None = None,
+    compress=None,
 ) -> ConsensusEngine:
     """Plain consensus averaging / D-PSGD mixing via ppermute gossip."""
-    return ConsensusEngine(
+    inline, cspec = _split_compress(compress)
+    eng = ConsensusEngine(
         PpermuteMixer(
             spec=spec, axis_sizes=dict(axis_sizes), mesh=mesh,
-            compress=compress,
+            compress=inline,
         ),
         AverageRule(),
     )
+    return with_compression(eng, cspec) if cspec is not None else eng

@@ -22,14 +22,22 @@ Two implementations:
   (core/gossip.py) under ``shard_map``. ICI-realizable topologies only.
   This is the production path.
 
-Both accept the gossip payload compression knob ("bf16"): the payload
-is quantized before the Laplacian is formed, and the (bounded,
-gamma-scaled) delta is applied back in the state dtype.
+Both accept the inline gossip payload compression knob (``None`` /
+``"none"`` / ``"bf16"``): the payload is quantized before the
+Laplacian is formed, and the (bounded, gamma-scaled) delta is applied
+back in the state dtype. Richer wire formats — int8 with per-tile
+scales, top-k sparsification, error feedback, event-triggered
+rounds — are ``core/compression.CompressedMixer``, which wraps any
+mixer in this file.
 
 ``FaultyMixer`` composes over either of the two: it replays a
 per-round edge keep-mask stream (``consensus.FaultModel``) so links
 drop, burst-fail, or whole nodes crash and rejoin, while the update
 rule and execution substrate stay untouched.
+
+Every mixer records exact bytes-on-wire accounting
+(``compression.WireStats``) on ``last_wire_stats`` after each ``run``;
+the engine surfaces it as ``ConsensusEngine.wire_stats``.
 """
 
 from __future__ import annotations
@@ -49,14 +57,35 @@ from repro.core.consensus import Graph
 from repro.utils import compat
 
 
+#: modes the inline ``compress=`` knob understands; richer wire formats
+#: (int8 / top-k / event-triggered) live in ``core/compression.py``.
+INLINE_COMPRESS_MODES = (None, "none", "bf16")
+
+
+def _normalize_compress(mode: str | None) -> str | None:
+    """Canonicalize the inline knob: ``None`` and ``"none"`` are the
+    same (no compression); unknown modes fail at construction time."""
+    if mode in (None, "none"):
+        return None
+    if mode == "bf16":
+        return mode
+    raise ValueError(
+        f"unknown gossip compression {mode!r}: the inline mixer knob "
+        f"accepts {INLINE_COMPRESS_MODES}. For int8 / top-k / "
+        "event-triggered wire formats build a core.compression."
+        "CompressionSpec and wrap the engine with "
+        "engine.with_compression(...) (or pass the spec straight to the "
+        "engine constructors' compress=)."
+    )
+
+
 def compress_payload(x: jax.Array, mode: str | None) -> jax.Array:
     """Quantize a gossip payload (paper Sec. V: 'reduction of the amount
     of information exchanging')."""
+    mode = _normalize_compress(mode)
     if mode is None:
         return x
-    if mode == "bf16":
-        return x.astype(jnp.bfloat16)
-    raise ValueError(f"unknown gossip compression {mode!r}")
+    return x.astype(jnp.bfloat16)
 
 
 def _mix_dtype(payload_dtype) -> jnp.dtype:
@@ -82,7 +111,9 @@ class DenseMixer:
                 f"adjacencies must be (V,V) or (S,V,V), got {adjacencies.shape}"
             )
         self.adjacencies = adjacencies
-        self.compress = compress
+        self.compress = _normalize_compress(compress)
+        self.last_wire_stats = None
+        self.total_bytes_on_wire = 0
 
     @classmethod
     def from_graphs(
@@ -147,7 +178,18 @@ class DenseMixer:
             return nxt, out
 
         final, traces = lax.scan(f, x, jnp.arange(num_iters))
+        self._record_wire(x, num_iters)
         return final, (traces if trace_fn is not None else None)
+
+    def _record_wire(self, x, num_iters: int) -> None:
+        """Exact bytes-on-wire: every live directed edge moves one
+        payload per round (shape-only — safe under tracing)."""
+        from repro.core import compression
+
+        compression.record_wire_stats(self, compression.compute_wire_stats(
+            self.compress, compression.dense_out_degrees(self.adjacencies),
+            x, self.num_nodes, num_iters,
+        ))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -171,6 +213,22 @@ class PpermuteMixer:
     _programs: dict = dataclasses.field(
         default_factory=dict, repr=False, compare=False
     )
+    def __post_init__(self):
+        # wire accounting is mutable state on a frozen dataclass; it is
+        # written through compression.record_wire_stats
+        object.__setattr__(self, "compress", _normalize_compress(self.compress))
+        object.__setattr__(self, "last_wire_stats", None)
+        object.__setattr__(self, "total_bytes_on_wire", 0)
+
+    def _record_wire(self, x, num_iters: int) -> None:
+        from repro.core import compression
+
+        deg = self.spec.degree(self.axis_sizes)
+        compression.record_wire_stats(self, compression.compute_wire_stats(
+            self.compress,
+            np.full((1, self.num_nodes), deg, dtype=np.int64),
+            x, self.num_nodes, num_iters,
+        ))
 
     @classmethod
     def for_mesh(
@@ -269,6 +327,7 @@ class PpermuteMixer:
                 ))
             self._programs[key] = fn
         gamma = jnp.asarray(gamma)
+        self._record_wire(x, num_iters)
         if aux is None:
             return fn(x, gamma), None
         return fn(x, aux, gamma), None
@@ -314,6 +373,8 @@ class FaultyMixer:
         self.base = base
         self.edge_keep = edge_keep
         self.num_rounds = edge_keep.shape[0]
+        self.last_wire_stats = None
+        self.total_bytes_on_wire = 0
         if isinstance(base, DenseMixer):
             S = base.adjacencies.shape[0]
             R = edge_keep.shape[0]
@@ -396,10 +457,17 @@ class FaultyMixer:
         aux_spec=None,
     ):
         if self._dense is not None:
-            return self._dense.run(
+            out = self._dense.run(
                 rule, x, aux, gamma, num_iters, trace_fn, state_spec,
                 aux_spec,
             )
+            # the masked-adjacency inner mixer counted only live links
+            from repro.core import compression
+
+            compression.record_wire_stats(
+                self, self._dense.last_wire_stats
+            )
+            return out
         base = self.base
         if trace_fn is not None:
             raise NotImplementedError(
@@ -451,6 +519,18 @@ class FaultyMixer:
                 ))
             base._programs[key] = fn
         gamma = jnp.asarray(gamma)
+        self._record_wire(x, num_iters)
         if aux is None:
             return fn(x, self._keep, gamma), None
         return fn(x, aux, self._keep, gamma), None
+
+    def _record_wire(self, x, num_iters: int) -> None:
+        """Exact live-link accounting over the folded ppermute masks:
+        in-degree == out-degree per node because the edge masks are
+        symmetric and the perm schedule covers both directions."""
+        from repro.core import compression
+
+        out_deg = (np.asarray(self._keep) != 0).sum(axis=1).astype(np.int64)
+        compression.record_wire_stats(self, compression.compute_wire_stats(
+            self.compress, out_deg, x, self.num_nodes, num_iters,
+        ))

@@ -12,6 +12,13 @@ moment Q_i are updated in O(L^2 * DeltaN) via Sherman-Morrison-Woodbury
 After the stat update, beta_i is re-seeded at the new local optimum
 beta_i = Omega_i Q_i (Algorithm 2 step 13) — which restores the
 zero-gradient-sum invariant — and consensus rounds resume.
+
+This module owns the node-local statistics algebra only. The driver
+that applies it across the network — batching the updates over the
+stacked node axis, re-seeding, and running the consensus rounds on
+either mixer — is ``engine.ConsensusEngine.stream_chunk`` (with
+``stream_leave``/``stream_join`` handling whole-node churn via
+``rescale_num_nodes``).
 """
 
 from __future__ import annotations
@@ -94,7 +101,8 @@ def update_chunk(
     return state
 
 
-# Batched (all V nodes at once) variants, used by the online DC-ELM driver.
+# Batched (all V nodes at once) variants, used by the streaming driver
+# ``ConsensusEngine.stream_chunk`` (engine.py).
 batched_add_chunk = jax.jit(jax.vmap(add_chunk))
 batched_remove_chunk = jax.jit(jax.vmap(remove_chunk))
 

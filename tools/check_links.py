@@ -1,0 +1,74 @@
+#!/usr/bin/env python3
+"""Markdown link check (stdlib only; CI's docs job).
+
+Scans every *.md in the repo for
+
+* relative markdown links ``[text](path)`` — the target file must
+  exist (http(s)/mailto and pure #anchchor links are skipped);
+* backticked repo paths like ``core/compression.py:74`` or
+  ``tests/test_compression.py`` — the file part must exist at the repo
+  root, under ``src/`` or under ``src/repro/`` (line numbers are not
+  checked; they drift, the files should not).
+
+Exit code 0 = clean, 1 = broken references (each printed).
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+SKIP_DIRS = {".git", "__pycache__", ".pytest_cache", "results"}
+
+MD_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+CODE_PATH = re.compile(r"`([A-Za-z0-9_./-]+\.(?:py|md|json|yml))(?::\d+)?`")
+
+
+def md_files():
+    for p in sorted(REPO.rglob("*.md")):
+        if not any(part in SKIP_DIRS for part in p.parts):
+            yield p
+
+
+#: where backticked code paths may live; markdown links get no such
+#: leniency — a rendered link resolves relative to its file only
+CODE_ROOTS = ("", "src", "src/repro", "src/repro/core")
+
+
+def resolve(base: Path, target: str, *, code: bool = False) -> bool:
+    target = target.split("#", 1)[0]
+    if not target:
+        return True
+    if (base.parent / target).exists():
+        return True
+    if code:
+        return any((REPO / root / target).exists() for root in CODE_ROOTS)
+    return False
+
+
+def main() -> int:
+    broken = []
+    for md in md_files():
+        text = md.read_text(encoding="utf-8")
+        rel = md.relative_to(REPO)
+        for m in MD_LINK.finditer(text):
+            target = m.group(1)
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            if not resolve(md, target):
+                broken.append(f"{rel}: broken link -> {target}")
+        for m in CODE_PATH.finditer(text):
+            if not resolve(md, m.group(1), code=True):
+                broken.append(f"{rel}: missing file -> {m.group(1)}")
+    if broken:
+        print("\n".join(broken))
+        print(f"\n{len(broken)} broken reference(s)")
+        return 1
+    print(f"link check OK ({sum(1 for _ in md_files())} markdown files)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

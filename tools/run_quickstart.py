@@ -1,0 +1,35 @@
+#!/usr/bin/env python3
+"""Run the README quickstart verbatim (CI's docs job).
+
+Extracts the first ```python fenced block from README.md and executes
+it with ``src/`` on the import path — if the quickstart drifts from the
+code, this fails, not a new user.
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def main() -> int:
+    text = (REPO / "README.md").read_text(encoding="utf-8")
+    m = re.search(r"```python\n(.*?)```", text, re.DOTALL)
+    if not m:
+        print("README.md has no ```python quickstart block")
+        return 1
+    snippet = m.group(1)
+    sys.path.insert(0, str(REPO / "src"))
+    print("--- running README quickstart ---")
+    print(snippet)
+    print("---------------------------------")
+    exec(compile(snippet, "README.md:quickstart", "exec"), {})
+    print("quickstart OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
