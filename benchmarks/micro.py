@@ -1,7 +1,17 @@
-"""Microbenchmarks: kernels, online updates, communication models."""
+"""Microbenchmarks: kernels, online updates, communication models.
+
+Runnable standalone for a single profile:
+
+  PYTHONPATH=src python -m benchmarks.micro --profile stats
+
+prints the fused feature->moment pipeline's FLOP utilization next to
+the existing gram numbers (``--profile`` accepts any registered name;
+``benchmarks.run`` remains the multi-suite entry point).
+"""
 
 from __future__ import annotations
 
+import argparse
 import os
 import time
 
@@ -43,6 +53,60 @@ def bench_gram():
         err = float(jnp.max(jnp.abs(out - gram_reference(H[:256]))))
         rows.append((f"kernels/gram_pallas_interp_N256_L{L}", 0.0,
                      f"max_err={err:.2e}"))
+    return rows, {}
+
+
+def bench_stats_profile():
+    """Fused feature->moment FLOP utilization next to the gram numbers.
+
+    The fused pipeline does the gram work *plus* the feature matmul and
+    activation in the same streaming pass, so its gflops row is
+    directly comparable to kernels/gram_ref at the same (N, L): the
+    utilization the statistics plane sustains on the full Algorithm 1
+    steps 1-3, not just the moment contraction. Includes an
+    interpret-mode correctness row for the Pallas kernel, mirroring
+    bench_gram's.
+    """
+    from repro.core import features, stats
+    from repro.kernels import elm_stats_ops
+    from repro.kernels.elm_stats import elm_stats_pallas
+
+    rows = list(bench_gram()[0])  # the gram numbers, for side-by-side
+    D, M = 64, 8
+    # measure exactly what production dispatches on this backend
+    impl = "pallas" if jax.default_backend() == "tpu" else "scan"
+    fused = jax.jit(
+        lambda X, W, b, T: elm_stats_ops.fused_moments(
+            X, W, b, T, activation="sigmoid", block_n=2048
+        )
+    )
+    for (N, L) in [(2048, 128), (8192, 256), (4096, 512)]:
+        ks = jax.random.split(jax.random.key(0), 4)
+        X = jax.random.normal(ks[0], (N, D), jnp.float32)
+        W = jax.random.normal(ks[1], (D, L), jnp.float32)
+        b = jax.random.normal(ks[2], (L,), jnp.float32)
+        T = jax.random.normal(ks[3], (N, M), jnp.float32)
+        us = _timeit_us(fused, X, W, b, T)
+        flops = 2 * N * D * L + 2 * N * L * (L + M)
+        rows.append((
+            f"kernels/elm_stats_{impl}_N{N}_L{L}", us,
+            f"gflops={flops/us/1e3:.2f};fused=feature+gram+cross",
+        ))
+    # interpret-mode kernel correctness row (vs the statistics plane)
+    fmap = features.make_random_features(jax.random.key(1), D, 64)
+    X = jax.random.normal(jax.random.key(2), (256, D))
+    T = jax.random.normal(jax.random.key(3), (256, M))
+    W, b, act = stats.fusable_params(fmap)
+    P1, Q1 = elm_stats_pallas(
+        X, W, b, T, activation=act, interpret=True, block_l=32, block_n=64
+    )
+    ref = stats.from_raw(X, T, fmap, use_kernel=False)
+    err = max(
+        float(jnp.max(jnp.abs(P1 - ref.P))), float(jnp.max(jnp.abs(Q1 - ref.Q)))
+    )
+    rows.append((
+        "kernels/elm_stats_pallas_interp_N256_L64", 0.0, f"max_err={err:.2e}"
+    ))
     return rows, {}
 
 
@@ -469,3 +533,32 @@ print('DONE')
             _, name, us, derived = line.split(",", 3)
             rows.append((name, float(us), derived))
     return rows, {}
+
+
+PROFILES = {
+    "gram": bench_gram,
+    "stats": bench_stats_profile,
+    "ssd": bench_ssd,
+    "attn": bench_attention,
+    "online": bench_online_vs_direct,
+    "comm": bench_consensus_vs_incremental,
+    "topology": bench_gossip_topologies,
+    "streaming": bench_streaming_driver,
+}
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description="single-profile microbench")
+    ap.add_argument(
+        "--profile", default="stats", choices=sorted(PROFILES),
+        help="which microbench rows to print (default: stats)",
+    )
+    args = ap.parse_args(argv)
+    rows, _ = PROFILES[args.profile]()
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

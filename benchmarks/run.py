@@ -54,13 +54,14 @@ SUITES = {}
 
 
 def _register():
-    from benchmarks import micro, paper_figs
+    from benchmarks import micro, paper_figs, stats_bench
 
     SUITES.update({
         "fig3": paper_figs.fig3_centralized_sinc,
         "fig4": paper_figs.fig4_dcelm_sinc,
         "fig7": paper_figs.fig7_mnist,
         "gram": micro.bench_gram,
+        "stats": stats_bench.bench_stats,
         "ssd": micro.bench_ssd,
         "attn": micro.bench_attention,
         "online": micro.bench_online_vs_direct,
@@ -100,6 +101,8 @@ def main() -> None:
                 kw = {"rounds": 1000}
             if args.fast and name == "compression":
                 kw = {"rounds": 600}
+            if args.fast and name == "stats":
+                kw = {"fast": True}
             rows, _ = fn(**kw)
             for r in rows:
                 print(f"{r[0]},{r[1]:.1f},{r[2]}")

@@ -1,0 +1,175 @@
+"""Statistics-plane benchmark: fused feature->moment pipeline vs the
+unfused materialize-H-then-gram path.
+
+Measures wall time and peak temporary memory across an N sweep and
+writes a machine-readable ``BENCH_stats.json`` at the repo root — the
+bench trajectory for the paper's compute hot spot (Algorithm 1 steps
+1-3). The acceptance point is (N=65536, L=512, bf16): the fused path
+must be reported no slower than the unfused matmul path.
+
+Paths under test (both jit-compiled, never interpret mode):
+  * unfused — H = g(XW + b) materialized at (N, L), then the gram /
+    cross oracles (two extra HBM round trips of H).
+  * fused   — on TPU the Pallas kernel (kernels/elm_stats.py, H lives
+    in VMEM tiles only); elsewhere the lax.scan streaming
+    implementation (kernels/elm_stats_ref.elm_stats_scan), whose peak
+    temp is one chunk's working set.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BENCH_JSON = os.path.join(REPO_ROOT, "BENCH_stats.json")
+
+# the acceptance point from the issue: N=65536, L=512, bf16
+DEFAULT_POINT = dict(N=65536, D=64, L=512, M=8, dtype="bfloat16")
+SCAN_CHUNK = 8192
+
+
+def _timeit_ms(fn, *args, repeats=3):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / repeats * 1e3
+
+
+def _temp_bytes(jitted, *args):
+    """Peak temporary allocation of the compiled program (best effort)."""
+    try:
+        m = jitted.lower(*args).compile().memory_analysis()
+        return int(m.temp_size_in_bytes) if m is not None else -1
+    except Exception:  # noqa: BLE001 — backend without memory analysis
+        return -1
+
+
+def _problem(N, D, L, M, dtype):
+    dt = jnp.dtype(dtype)
+    ks = jax.random.split(jax.random.key(0), 4)
+    X = jax.random.normal(ks[0], (N, D)).astype(dt)
+    W = jax.random.normal(ks[1], (D, L)).astype(dt)
+    b = jax.random.normal(ks[2], (L,)).astype(jnp.float32)
+    T = jax.random.normal(ks[3], (N, M)).astype(dt)
+    return X, W, b, T
+
+
+def _paths():
+    from repro.kernels.elm_stats_ref import (
+        elm_stats_scan, hidden_reference,
+    )
+    from repro.kernels.gram_ref import cross_reference, gram_reference
+
+    @jax.jit
+    def unfused(X, W, b, T):
+        H = hidden_reference(X, W, b, "sigmoid")
+        return gram_reference(H), cross_reference(H, T)
+
+    on_tpu = jax.default_backend() == "tpu"
+    if on_tpu:
+        from repro.kernels.elm_stats import elm_stats_pallas
+
+        def fused(X, W, b, T):
+            return elm_stats_pallas(X, W, b, T, activation="sigmoid")
+
+        fused = jax.jit(fused)
+        fused_name = "pallas"
+    else:
+
+        @jax.jit
+        def fused(X, W, b, T):
+            return elm_stats_scan(
+                X, W, b, T, activation="sigmoid", chunk=SCAN_CHUNK
+            )
+
+        fused_name = f"scan(chunk={SCAN_CHUNK})"
+    return unfused, fused, fused_name
+
+
+def bench_stats(fast: bool = False):
+    """fused-vs-unfused wall time + peak memory, N sweep + acceptance.
+
+    Emits CSV rows and writes BENCH_stats.json at the repo root.
+    """
+    rows = []
+    records = []
+    unfused, fused, fused_name = _paths()
+    sweep_N = [8192, 32768, 65536] if not fast else [4096, 16384]
+    points = [
+        dict(DEFAULT_POINT, N=n) for n in sweep_N
+    ]
+    if not any(p["N"] == DEFAULT_POINT["N"] for p in points):
+        points.append(dict(DEFAULT_POINT))
+    # a f32 row so the dtype effect is visible next to bf16
+    points.append(dict(DEFAULT_POINT, N=sweep_N[-1], dtype="float32"))
+
+    acceptance = None
+    for pt in points:
+        X, W, b, T = _problem(pt["N"], pt["D"], pt["L"], pt["M"], pt["dtype"])
+        reps = 2 if fast else 3
+        res = {}
+        for name, fn in [("unfused", unfused), ("fused", fused)]:
+            ms = _timeit_ms(fn, X, W, b, T, repeats=reps)
+            peak = _temp_bytes(fn, X, W, b, T)
+            res[name] = dict(wall_ms=ms, peak_temp_bytes=peak)
+            tag = (f"stats/{name}_N{pt['N']}_L{pt['L']}_{pt['dtype']}")
+            flops = 2 * pt["N"] * pt["D"] * pt["L"] + 2 * pt["N"] * pt[
+                "L"
+            ] * (pt["L"] + pt["M"])
+            rows.append((
+                tag, ms * 1e3,
+                f"gflops={flops / (ms * 1e3) / 1e3:.2f};"
+                f"peak_temp_MiB={peak / 2**20:.1f}" if peak >= 0 else
+                f"gflops={flops / (ms * 1e3) / 1e3:.2f};peak_temp_MiB=n/a",
+            ))
+        rec = dict(
+            pt,
+            fused_impl=fused_name,
+            backend=jax.default_backend(),
+            **{f"{k}_{m}": v for k, r in res.items() for m, v in r.items()},
+        )
+        rec["fused_speedup"] = res["unfused"]["wall_ms"] / max(
+            res["fused"]["wall_ms"], 1e-9
+        )
+        records.append(rec)
+        is_default = (
+            pt["N"] == DEFAULT_POINT["N"]
+            and pt["L"] == DEFAULT_POINT["L"]
+            and pt["dtype"] == "bfloat16"
+        )
+        if is_default:
+            acceptance = dict(
+                point=pt,
+                fused_wall_ms=res["fused"]["wall_ms"],
+                unfused_wall_ms=res["unfused"]["wall_ms"],
+                fused_not_slower=(
+                    res["fused"]["wall_ms"] <= res["unfused"]["wall_ms"]
+                ),
+            )
+            rows.append((
+                "stats/acceptance_default_point", 0.0,
+                f"fused_not_slower={acceptance['fused_not_slower']};"
+                f"fused_ms={acceptance['fused_wall_ms']:.0f};"
+                f"unfused_ms={acceptance['unfused_wall_ms']:.0f}",
+            ))
+
+    payload = dict(
+        suite="stats",
+        backend=jax.default_backend(),
+        fused_impl=fused_name,
+        default_point=DEFAULT_POINT,
+        rows=records,
+        acceptance=acceptance,
+    )
+    with open(BENCH_JSON, "w") as fh:
+        json.dump(payload, fh, indent=2)
+    rows.append(("stats/json", 0.0, f"written={os.path.basename(BENCH_JSON)}"))
+    return rows, {"json": BENCH_JSON}

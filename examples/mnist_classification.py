@@ -29,8 +29,11 @@ cent = elm.train_centralized(
 )
 acc_c = float(elm.accuracy(cent(jnp.asarray(X_test)), jnp.asarray(T_test)))
 
-H = jax.vmap(cent.feature_map)(jnp.asarray(Xn))
-state, _, _ = dc_elm.simulate_init(H, jnp.asarray(Tn), C)
+# raw pixels -> per-node moments via the statistics plane; the
+# (400, L) hidden matrices are never stacked in memory
+state, _, _ = dc_elm.simulate_init_raw(
+    jnp.asarray(Xn), jnp.asarray(Tn), cent.feature_map, C
+)
 trace = dc_elm.test_error_fn(cent.feature_map, jnp.asarray(X_test),
                              jnp.asarray(T_test))
 final, errs = dc_elm.simulate_run(state, graph, gamma, C, 1500,

@@ -27,9 +27,10 @@ fmap = make_random_features(jax.random.key(1), 1, L)
 
 eng = engine.simulated_dc_elm(graph, C)
 
-# initial data: a small warm-up set per node
+# initial data: a small warm-up set per node — raw-input stream_init
+# runs the fused feature->moment path (core/stats.py)
 X, Y, X_test, Y_test = make_sinc_dataset(key, num_nodes=V, per_node=100)
-state = eng.stream_init(jax.vmap(fmap)(X), Y)
+state = eng.stream_init(X_nodes=X, T_nodes=Y, feature_map=fmap)
 
 stream_key = jax.random.key(7)
 H_test = fmap(X_test)

@@ -18,7 +18,6 @@ graph = consensus.paper_fig2()
 X, Y, X_test, Y_test = make_sinc_dataset(jax.random.key(0))
 X, Y = X.astype(jnp.float64), Y.astype(jnp.float64)
 fmap = make_random_features(jax.random.key(1), 1, 100, dtype=X.dtype)
-H = jax.vmap(fmap)(X)
 
 print(f"network: {graph.name}, d_max={graph.d_max:.0f} "
       f"=> gamma must be < {graph.gamma_upper_bound():.3f}")
@@ -28,7 +27,9 @@ for tag, C, gamma in [
     ("(b) C=2^2, gamma=1/2.1", 2.0**2, 1 / 2.1),
     ("(c) C=2^8, gamma=1/2.1", 2.0**8, 1 / 2.1),
 ]:
-    state, P_, Q_ = dc_elm.simulate_init(H, Y, C)
+    # raw-input init: Algorithm 1 steps 1-3 through the statistics
+    # plane (core/stats.py) — the hidden matrices stay implicit
+    state, P_, Q_ = dc_elm.simulate_init_raw(X, Y, fmap, C)
     trace = dc_elm.average_empirical_risk_fn(fmap, X_test, Y_test)
     final, risks = dc_elm.simulate_run(state, graph, gamma, C, 300,
                                        trace_fn=trace)

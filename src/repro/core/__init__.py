@@ -1,7 +1,10 @@
 """Core: the paper's contribution (DC-ELM and friends) in JAX.
 
 Modules:
-  features    random ELM feature maps h(x)
+  features    random ELM feature maps h(x) (+ the activation registry)
+  stats       the statistics plane: (P, Q, ||T||^2, Omega) for every
+              path — fused feature->moment kernels, chunked
+              SufficientStats, Cholesky solves
   elm         centralized ELM (paper Sec. II-A)
   consensus   communication graphs, Laplacians, rates (Sec. III-A)
   dc_elm      DC-ELM Algorithm 1 (simulated + ppermute-sharded)
@@ -24,4 +27,5 @@ from repro.core import (  # noqa: F401
     gossip,
     incremental,
     online,
+    stats,
 )

@@ -46,6 +46,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import engine as engine_lib
 from repro.core import gossip, mixers
+from repro.core import stats as stats_lib
 from repro.core.consensus import Graph
 
 
@@ -73,23 +74,25 @@ class DCELMState:
 # ---------------------------------------------------------------------------
 
 
-def local_stats(H: jax.Array, T: jax.Array, *, gram_fn=None):
+def local_stats(H: jax.Array, T: jax.Array):
     """P = H^T H and Q = H^T T for one node's local data.
 
-    gram_fn: optional kernel override for the Gram product (the Pallas
-    kernel in kernels/gram is dropped in here by the launch layer).
+    Thin wrapper over the statistics plane (`core/stats.py`) for
+    callers that already hold a materialized H; raw-input callers use
+    ``simulate_init_raw`` / ``stats.from_raw`` and never build H.
+    Accumulation follows the plane's dtype policy: f32 floor (bf16
+    features accumulate in f32), f64 preserved.
     """
-    P_ = gram_fn(H) if gram_fn is not None else H.T @ H
-    Q_ = H.T @ T
-    return P_, Q_
+    return stats_lib.hidden_moments(H, T)
 
 
 def init_node(P_: jax.Array, Q_: jax.Array, C: float, V: int):
-    """Omega_i and beta_i(0) from local stats (paper eq. 21)."""
-    L = P_.shape[0]
-    omega = jnp.linalg.inv(jnp.eye(L, dtype=P_.dtype) / (V * C) + P_)
-    beta0 = omega @ Q_
-    return omega, beta0
+    """Omega_i and beta_i(0) from local stats (paper eq. 21).
+
+    Delegates to the statistics plane's Cholesky factorization — the
+    only Omega producer in the codebase.
+    """
+    return stats_lib.finalize_moments(P_, Q_, C, V)
 
 
 def node_objective(beta: jax.Array, P_: jax.Array, Q_: jax.Array,
@@ -121,16 +124,42 @@ def gradient_sum(state: DCELMState, P_: jax.Array, Q_: jax.Array, C: float):
 
 
 def simulate_init(
-    H_nodes: jax.Array, T_nodes: jax.Array, C: float, *, gram_fn=None
+    H_nodes: jax.Array, T_nodes: jax.Array, C: float
 ) -> tuple[DCELMState, jax.Array, jax.Array]:
     """Initialize from stacked per-node data H:(V,Ni,L), T:(V,Ni,M).
 
     Returns (state, P:(V,L,L), Q:(V,L,M)).
     """
     V = H_nodes.shape[0]
-    P_, Q_ = jax.vmap(lambda h, t: local_stats(h, t, gram_fn=gram_fn))(
-        H_nodes, T_nodes
-    )
+    P_, Q_ = jax.vmap(local_stats)(H_nodes, T_nodes)
+    omegas, betas = jax.vmap(lambda p, q: init_node(p, q, C, V))(P_, Q_)
+    return DCELMState(betas=betas, omegas=omegas, k=jnp.zeros((), jnp.int32)), P_, Q_
+
+
+def simulate_init_raw(
+    X_nodes: jax.Array,
+    T_nodes: jax.Array,
+    feature_map,
+    C: float,
+    *,
+    use_kernel: bool | None = None,
+) -> tuple[DCELMState, jax.Array, jax.Array]:
+    """Initialize straight from raw inputs X:(V,Ni,D), T:(V,Ni,M).
+
+    Algorithm 1 steps 1-3 through the statistics plane: on fusable
+    feature maps the (Ni, L) hidden matrices are never materialized —
+    each node's tiles stream feature->moment fused (kernels/elm_stats).
+    Returns (state, P:(V,L,L), Q:(V,L,M)) like ``simulate_init``.
+    """
+    if T_nodes.ndim == 2:
+        T_nodes = T_nodes[..., None]
+    V = X_nodes.shape[0]
+    P_, Q_ = jax.vmap(
+        lambda x, t: stats_lib.raw_moments(
+            x, t, feature_map, use_kernel=use_kernel,
+            dtype=stats_lib.accum_dtype(x, t),
+        )
+    )(X_nodes, T_nodes)
     omegas, betas = jax.vmap(lambda p, q: init_node(p, q, C, V))(P_, Q_)
     return DCELMState(betas=betas, omegas=omegas, k=jnp.zeros((), jnp.int32)), P_, Q_
 
@@ -194,11 +223,8 @@ def simulate_train(
     """End-to-end DC-ELM (Algorithm 1) on stacked node data X:(V,Ni,D)."""
     from repro.core.features import make_random_features
 
-    if T_nodes.ndim == 2:
-        T_nodes = T_nodes[..., None]
     fmap = make_random_features(key, X_nodes.shape[-1], num_features, activation)
-    H_nodes = jax.vmap(fmap)(X_nodes)
-    state, _, _ = simulate_init(H_nodes, T_nodes, C)
+    state, _, _ = simulate_init_raw(X_nodes, T_nodes, fmap, C)
     if gamma is None:
         gamma = graph.default_gamma()
     final, traces = simulate_run(
@@ -299,9 +325,9 @@ def centralized_from_node_stats(P_: jax.Array, Q_: jax.Array, C: float):
 
     beta* = (I/C + sum_i P_i)^{-1} (sum_i Q_i).
     """
-    L = P_.shape[-1]
-    A = jnp.eye(L, dtype=P_.dtype) / C + jnp.sum(P_, axis=0)
-    return jnp.linalg.solve(A, jnp.sum(Q_, axis=0))
+    return stats_lib.ridge_solve_moments(
+        jnp.sum(P_, axis=0), jnp.sum(Q_, axis=0), C
+    )
 
 
 def consensus_error(betas: jax.Array) -> jax.Array:

@@ -18,16 +18,19 @@ from typing import Literal
 import jax
 import jax.numpy as jnp
 
+from repro.core import stats as stats_lib
 from repro.core.features import make_random_features
 
 
 def ridge_primal(H: jax.Array, T: jax.Array, C: float) -> jax.Array:
-    """beta = (I_L/C + H^T H)^{-1} H^T T. Cost O(N L^2 + L^3)."""
-    L = H.shape[-1]
-    P = H.T @ H
-    Q = H.T @ T
-    A = jnp.eye(L, dtype=H.dtype) / C + P
-    return jnp.linalg.solve(A, Q)
+    """beta = (I_L/C + H^T H)^{-1} H^T T. Cost O(N L^2 + L^3).
+
+    Moments and the SPD solve go through the statistics plane
+    (`core/stats.py`): f32-floor accumulation (f64 inputs stay f64),
+    Cholesky factorization.
+    """
+    P, Q = stats_lib.hidden_moments(H, T)
+    return stats_lib.ridge_solve_moments(P, Q, C)
 
 
 def ridge_dual(H: jax.Array, T: jax.Array, C: float) -> jax.Array:
@@ -35,7 +38,7 @@ def ridge_dual(H: jax.Array, T: jax.Array, C: float) -> jax.Array:
     N = H.shape[0]
     G = H @ H.T
     A = jnp.eye(N, dtype=H.dtype) / C + G
-    return H.T @ jnp.linalg.solve(A, T)
+    return H.T @ stats_lib.spd_solve(A, T.astype(A.dtype))
 
 
 def ridge_solve(
@@ -54,8 +57,7 @@ def ridge_solve(
 
 def solve_from_stats(P: jax.Array, Q: jax.Array, C: float) -> jax.Array:
     """beta from sufficient statistics P = H^T H, Q = H^T T (primal)."""
-    L = P.shape[0]
-    return jnp.linalg.solve(jnp.eye(L, dtype=P.dtype) / C + P, Q)
+    return stats_lib.ridge_solve_moments(P, Q, C)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -81,12 +83,22 @@ def train_centralized(
     activation: str = "sigmoid",
     mode: Literal["auto", "primal", "dual"] = "auto",
 ) -> ELM:
-    """End-to-end centralized ELM training (paper Sec. II-A)."""
+    """End-to-end centralized ELM training (paper Sec. II-A).
+
+    The primal branch runs through the statistics plane's fused
+    feature->moment pipeline, so the (N, L) hidden matrix is never
+    materialized; the dual branch (N < L) needs H H^T and builds H.
+    """
     if T.ndim == 1:
         T = T[:, None]
     fmap = make_random_features(key, X.shape[-1], num_features, activation)
-    H = fmap(X)
-    beta = ridge_solve(H, T, C, mode)
+    if mode == "auto":
+        mode = "primal" if num_features <= X.shape[0] else "dual"
+    if mode == "primal":
+        s = stats_lib.from_raw(X, T, fmap)
+        beta = stats_lib.ridge_solve_moments(s.P, s.Q, C)
+    else:
+        beta = ridge_dual(fmap(X), T, C)
     return ELM(feature_map=fmap, beta=beta)
 
 

@@ -26,8 +26,8 @@ from jax.sharding import PartitionSpec as P
 from repro.configs.base import ArchConfig
 from repro.core import engine as engine_lib
 from repro.core import mixers
+from repro.core import stats as stats_lib
 from repro.distributed import sharding as shd
-from repro.kernels import gram_ops
 from repro.models import Model
 
 
@@ -78,17 +78,11 @@ def make_elm_head_bundle(
 
     def node_stats(backbone_params, node_batch):
         h = model.features(backbone_params, node_batch)  # (b, S, d)
-        hf = h.reshape(-1, d)
-        labels = node_batch["labels"].reshape(-1)
-        mask = labels >= 0
-        hf = jnp.where(mask[:, None], hf, 0.0).astype(h.dtype)
-        dP = gram_ops.gram(hf, use_kernel=use_kernel)
-        qT = jax.ops.segment_sum(
-            hf.astype(jnp.float32),
-            jnp.maximum(labels, 0),
-            num_segments=vocab,
-        )  # (vocab, d)
-        return dP, qT.T, jnp.sum(mask.astype(jnp.float32))
+        s = stats_lib.classification_moments(
+            h.reshape(-1, d), node_batch["labels"].reshape(-1), vocab,
+            use_kernel=use_kernel,
+        )
+        return s.P, s.Q, s.count
 
     def accumulate(stats: ELMHeadStats, backbone_params, batch):
         dP, dQ, dc = jax.vmap(node_stats, in_axes=(None, 0))(
@@ -99,12 +93,10 @@ def make_elm_head_bundle(
         )
 
     def solve(stats: ELMHeadStats, C: float):
-        def per_node(Pm, Qm):
-            A = jnp.eye(d, dtype=jnp.float32) / (V * C) + Pm
-            omega = jnp.linalg.inv(A)
-            return omega, omega @ Qm
-
-        return jax.vmap(per_node)(stats.P, stats.Q)
+        # paper eq. 21 per node, via the statistics plane's Cholesky
+        return jax.vmap(
+            lambda Pm, Qm: stats_lib.finalize_moments(Pm, Qm, C, V)
+        )(stats.P, stats.Q)
 
     # one mixer for the bundle's lifetime: its _programs cache keys on
     # (rule, iters, specs), so repeated gossip_rounds calls compile once

@@ -161,13 +161,55 @@ class ConsensusEngine:
 
     # -- streaming (paper Algorithm 2) ------------------------------------
 
-    def stream_init(self, H_nodes, T_nodes) -> "StreamState":
-        """Per-node sufficient statistics + local ridge seed from stacked
-        warm-up data H:(V,Ni,L), T:(V,Ni,M). Requires a DCELMRule."""
+    def stream_init(
+        self,
+        H_nodes=None,
+        T_nodes=None,
+        *,
+        X_nodes=None,
+        feature_map=None,
+    ) -> "StreamState":
+        """Per-node sufficient statistics + local ridge seed.
+
+        Two entry shapes, both through the statistics plane
+        (`core/stats.py`, Cholesky Omega):
+
+        * materialized features: ``stream_init(H_nodes, T_nodes)`` with
+          H:(V,Ni,L), T:(V,Ni,M);
+        * raw inputs: ``stream_init(X_nodes=X, T_nodes=T,
+          feature_map=fmap)`` with X:(V,Ni,D) — on fusable maps the
+          hidden matrices are never materialized (fused kernel /
+          streaming scan).
+
+        Requires a DCELMRule.
+        """
         C, V = self._ridge_constants()
-        states = jax.vmap(lambda h, t: online.init_state(h, t, C, V))(
-            H_nodes, T_nodes
-        )
+        if X_nodes is not None:
+            if H_nodes is not None:
+                raise ValueError("pass either H_nodes or X_nodes, not both")
+            if feature_map is None:
+                raise ValueError("X_nodes requires feature_map=")
+            if T_nodes is None:
+                raise ValueError("X_nodes requires T_nodes= targets")
+            from repro.core import stats as stats_lib
+
+            if T_nodes.ndim == 2:
+                T_nodes = T_nodes[..., None]
+
+            def node(x, t):
+                P_, Q_ = stats_lib.raw_moments(
+                    x, t, feature_map,
+                    dtype=stats_lib.accum_dtype(x, t),
+                )
+                return online.OnlineNodeState(
+                    omega=stats_lib.omega_from_moments(P_, C, V), Q=Q_
+                )
+
+            states = jax.vmap(node)(X_nodes, T_nodes)
+        else:
+            states = jax.vmap(lambda h, t: online.init_state(h, t, C, V))(
+                H_nodes, T_nodes
+            )
         return StreamState(
             omegas=states.omega, Qs=states.Q, betas=online.reseed_betas(states)
         )

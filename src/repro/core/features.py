@@ -5,6 +5,11 @@ The ELM hidden layer is a *frozen random* map
 with g a nonlinear piecewise-continuous activation (paper Sec. II-A).
 All nodes share the same (W, b) (paper Algorithm 1, step 1).
 
+``ACTIVATIONS`` is the one activation registry in the codebase: the
+fused feature->moment Pallas kernel (kernels/elm_stats.py) applies the
+same callables inside its VMEM tiles that ``FeatureMap.__call__``
+applies on materialized arrays, so the two paths cannot drift.
+
 ``FeatureMap`` is also the integration point for the "beyond paper"
 deep-backbone features (paper Sec. V future work: unknown feature
 mappings): models/ provides a FeatureMap whose ``__call__`` runs a
@@ -21,13 +26,24 @@ import jax.numpy as jnp
 
 Activation = Callable[[jax.Array], jax.Array]
 
-_ACTIVATIONS: dict[str, Activation] = {
+# The shared activation registry (name -> elementwise g). "rbf" is not
+# listed here because it is not an affine-then-nonlinearity map — it has
+# its own FeatureMap class and kernel branch (see `rbf_squared_dists`).
+ACTIVATIONS: dict[str, Activation] = {
     "sigmoid": jax.nn.sigmoid,
     "tanh": jnp.tanh,
     "relu": jax.nn.relu,
     "sin": jnp.sin,
     "identity": lambda x: x,
 }
+
+# historical private alias (pre-stats-plane consumers imported this)
+_ACTIVATIONS = ACTIVATIONS
+
+
+def valid_activations() -> tuple[str, ...]:
+    """All activation names accepted by make_random_features."""
+    return tuple(ACTIVATIONS) + ("rbf",)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -37,12 +53,21 @@ class RandomFeatureMap:
     Attributes:
       weights: (D, L) input-to-hidden weights w_l (columns).
       bias: (L,) hidden biases b_l.
-      activation: name of g.
+      activation: name of g (a key of ``ACTIVATIONS``).
     """
 
     weights: jax.Array
     bias: jax.Array
     activation: str = "sigmoid"
+
+    def __post_init__(self):
+        if self.activation not in ACTIVATIONS:
+            raise ValueError(
+                f"unknown activation {self.activation!r}; "
+                f"valid: {sorted(ACTIVATIONS)} "
+                "(gaussian hidden nodes are RBFFeatureMap, not a "
+                "RandomFeatureMap activation)"
+            )
 
     @property
     def in_dim(self) -> int:
@@ -54,8 +79,26 @@ class RandomFeatureMap:
 
     def __call__(self, x: jax.Array) -> jax.Array:
         """x: (..., D) -> H: (..., L)."""
-        g = _ACTIVATIONS[self.activation]
+        g = ACTIVATIONS[self.activation]
         return g(x @ self.weights + self.bias)
+
+
+def rbf_squared_dists(
+    x: jax.Array, centers: jax.Array, centers_sq: jax.Array | None = None
+) -> jax.Array:
+    """||x - c||^2 for all centers via ||x||^2 - 2 x.c^T + ||c||^2.
+
+    One (..., L) result from a single (..., D) x (D, L) matmul — never
+    the (..., L, D) broadcast intermediate (an HBM blowup at large L*D).
+    Clamped at zero: the expansion can go slightly negative in floating
+    point when x is near a center. Shared by ``RBFFeatureMap.__call__``
+    and the fused kernel's oracle (kernels/elm_stats_ref.py).
+    """
+    if centers_sq is None:
+        centers_sq = jnp.sum(jnp.square(centers), axis=-1)
+    x_sq = jnp.sum(jnp.square(x), axis=-1, keepdims=True)
+    cross = x @ centers.T
+    return jnp.maximum(x_sq - 2.0 * cross + centers_sq, 0.0)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -74,8 +117,7 @@ class RBFFeatureMap:
         return self.centers.shape[0]
 
     def __call__(self, x: jax.Array) -> jax.Array:
-        d2 = jnp.sum(jnp.square(x[..., None, :] - self.centers), axis=-1)
-        return jnp.exp(-self.gamma * d2)
+        return jnp.exp(-self.gamma * rbf_squared_dists(x, self.centers))
 
 
 def make_random_features(
@@ -102,8 +144,10 @@ def make_random_features(
             kg, (num_features,), minval=0.05, maxval=1.0, dtype=dtype
         )
         return RBFFeatureMap(centers=centers, gamma=gamma)
-    if activation not in _ACTIVATIONS:
-        raise ValueError(f"unknown activation {activation!r}")
+    if activation not in ACTIVATIONS:
+        raise ValueError(
+            f"unknown activation {activation!r}; valid: {sorted(valid_activations())}"
+        )
     kw, kb = jax.random.split(key)
     w = jax.random.uniform(
         kw, (in_dim, num_features), minval=-scale, maxval=scale, dtype=dtype

@@ -21,12 +21,13 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
+from repro.core import stats as stats_lib
 from repro.utils import compat
 
 
 def solve(P_sum: jax.Array, Q_sum: jax.Array, C: float) -> jax.Array:
-    L = P_sum.shape[0]
-    return jnp.linalg.solve(jnp.eye(L, dtype=P_sum.dtype) / C + P_sum, Q_sum)
+    """Fusion-center ridge solve, via the statistics plane's Cholesky."""
+    return stats_lib.ridge_solve_moments(P_sum, Q_sum, C)
 
 
 def simulate(H_nodes: jax.Array, T_nodes: jax.Array, C: float) -> jax.Array:
@@ -44,8 +45,7 @@ def sharded_fn(mesh: jax.sharding.Mesh, reduce_axes, C: float):
     """
 
     def body(H, T):
-        P_ = H.T @ H
-        Q_ = H.T @ T
+        P_, Q_ = stats_lib.hidden_moments(H, T)
         P_ = lax.psum(P_, reduce_axes)
         Q_ = lax.psum(Q_, reduce_axes)
         return solve(P_, Q_, C)

@@ -29,6 +29,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core import stats as stats_lib
+
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
@@ -48,10 +50,11 @@ class OnlineNodeState:
 
 
 def init_state(H: jax.Array, T: jax.Array, C: float, V: int) -> OnlineNodeState:
-    L = H.shape[-1]
-    P_ = H.T @ H
-    omega = jnp.linalg.inv(jnp.eye(L, dtype=H.dtype) / (V * C) + P_)
-    return OnlineNodeState(omega=omega, Q=H.T @ T)
+    """Warm-up statistics via the statistics plane (Cholesky Omega)."""
+    P_, Q_ = stats_lib.hidden_moments(H, T)
+    return OnlineNodeState(
+        omega=stats_lib.omega_from_moments(P_, C, V), Q=Q_
+    )
 
 
 def woodbury_add(omega: jax.Array, dH: jax.Array) -> jax.Array:

@@ -1,9 +1,15 @@
 """Pallas TPU kernels for the compute hot-spots.
 
-  gram.py / gram_ops.py / gram_ref.py   P = H^T H, Q = H^T T — the
-                                        paper's per-node statistic (the
-                                        heaviest DC-ELM computation);
-                                        symmetric block-triangle variant
+  elm_stats.py / _ops.py / _ref.py      fused feature->moment pipeline
+                                        H = g(XW+b), P += H^T H,
+                                        Q += H^T T in one grid pass —
+                                        H never written to HBM; feeds
+                                        core/stats.py (the statistics
+                                        plane, every execution path)
+  gram.py / gram_ops.py / gram_ref.py   P = H^T H, Q = H^T T from a
+                                        *materialized* H (deep-backbone
+                                        features and other non-fusable
+                                        maps); symmetric block-triangle
   ssd_scan.py / ssd_ops.py / ssd_ref.py Mamba2 chunked SSD scan
   attn.py / attn_ops.py / attn_ref.py   causal/SWA GQA flash attention
   decode_attn.py                        flash-decode (one token vs a
@@ -14,4 +20,9 @@ validated against its pure-jnp oracle in interpret mode (tests/).
 ops.py wrappers dispatch kernel-on-TPU / oracle-elsewhere.
 """
 
-from repro.kernels import gram_ops, ssd_ops, attn_ops  # noqa: F401
+from repro.kernels import (  # noqa: F401
+    attn_ops,
+    elm_stats_ops,
+    gram_ops,
+    ssd_ops,
+)

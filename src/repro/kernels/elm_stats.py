@@ -1,0 +1,217 @@
+"""Pallas TPU kernel: fused feature -> moment pipeline for ELM statistics.
+
+Algorithm 1 steps 1-3 in ONE grid pass over the *raw* inputs: each
+(bn, D) tile of X streams through the MXU computing the hidden tile
+
+    H_tile = g(X_tile @ W_blk + b_blk)          (bn, bl), VMEM only
+
+and both f32 moments accumulate in the same pass
+
+    P[i, j] += H_i^T H_j        (L, L)
+    Q[i]    += H_i^T T_tile     (L, M)
+
+so the (N, L) hidden matrix is **never written to HBM** — the paper's
+"extremely large" N_i streams through a VMEM-resident working set. This
+replaces the two-pass pipeline (materialize H, then kernels/gram.py)
+for every raw-input entry point; `core/stats.py` is the consumer.
+
+Tiling mirrors gram.py: grid = (L/bl, L/bl, N/bn) with n innermost so
+the (bl, bl) f32 P block stays resident while N streams through. The Q
+block rides the same grid — its index map is constant in (j, n), so it
+stays resident for a whole row-block i and accumulates on the diagonal
+visit (symmetric mode) or at j == 0.
+
+Dtype policy: operands (X, W, H tiles) may be bf16 — the MXU matmuls
+run with f32 accumulation (`preferred_element_type`), the activation is
+applied in f32, and the H tile is cast back to the operand dtype before
+the gram matmul, matching what the unfused oracle computes on a
+materialized bf16 H. The cross moment promotes h to T's dtype instead
+(f32 targets are never quantized down to a bf16 feature dtype — same
+rule as `stats.hidden_moments`). P/Q are always f32 (ridge
+conditioning).
+
+Ragged N: padded rows cannot simply be zero-filled like gram.py's
+(g(0) = 0.5 for sigmoid!) — the kernel masks hidden rows past N to
+exact zeros, so padded tiles contribute nothing to either moment.
+
+Activations come from the shared registry `features.ACTIVATIONS`;
+"rbf" is the gaussian branch h = exp(-gamma * ||x - c||^2) computed via
+the ||x||^2 - 2 x.c^T + ||c||^2 expansion on the same (bn, bl) tile
+(pass W = centers^T and b = gamma).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _hidden_tile(x_ref, w_ref, b_ref, *, activation, rows_in_tile, out_dtype):
+    """g(X_tile @ W_blk + b_blk), rows past `rows_in_tile` masked to 0."""
+    from repro.core.features import ACTIVATIONS  # shared registry, no cycle
+
+    x = x_ref[...]
+    w = w_ref[...]
+    s = jax.lax.dot_general(
+        x, w,
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    b = b_ref[...].astype(jnp.float32)  # (1, bl): bias, or gamma for rbf
+    if activation == "rbf":
+        xf = x.astype(jnp.float32)
+        wf = w.astype(jnp.float32)
+        x_sq = jnp.sum(xf * xf, axis=1, keepdims=True)  # (bn, 1)
+        c_sq = jnp.sum(wf * wf, axis=0, keepdims=True)  # (1, bl)
+        d2 = jnp.maximum(x_sq - 2.0 * s + c_sq, 0.0)
+        h = jnp.exp(-b * d2)
+    else:
+        h = ACTIVATIONS[activation](s + b)
+    bn = h.shape[0]
+    row_ids = jax.lax.broadcasted_iota(jnp.int32, (bn, 1), 0)
+    h = jnp.where(row_ids < rows_in_tile, h, 0.0)
+    return h.astype(out_dtype)
+
+
+def _elm_stats_kernel(
+    x_ref, wi_ref, wj_ref, bi_ref, bj_ref, t_ref, p_ref, q_ref,
+    *, activation, num_rows, block_n, symmetric, operand_dtype,
+):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    n = pl.program_id(2)
+    rows_in_tile = num_rows - n * block_n  # clamped by the iota compare
+
+    @pl.when(n == 0)
+    def _init_p():
+        p_ref[...] = jnp.zeros_like(p_ref)
+
+    # Q's block is constant in (j, n): first visit for row-block i is
+    # (j=0, n=0) — init there even when the P compute below is skipped.
+    @pl.when((n == 0) & (j == 0))
+    def _init_q():
+        q_ref[...] = jnp.zeros_like(q_ref)
+
+    tile = functools.partial(
+        _hidden_tile, x_ref,
+        activation=activation, rows_in_tile=rows_in_tile,
+        out_dtype=operand_dtype,
+    )
+
+    def _accum():
+        h_i = tile(wi_ref, bi_ref)
+        if symmetric:
+            # on the diagonal the j-tile IS the i-tile — reuse it
+            h_j = jax.lax.cond(
+                i == j, lambda: h_i, lambda: tile(wj_ref, bj_ref)
+            )
+        else:
+            h_j = tile(wj_ref, bj_ref)
+        p_ref[...] += jax.lax.dot_general(
+            h_i, h_j,
+            dimension_numbers=(((0,), (0,)), ((), ())),  # H_i^T H_j
+            preferred_element_type=jnp.float32,
+        )
+
+        # Accumulate Q once per (i, n), reusing h_i: on the diagonal
+        # visit in symmetric mode (always computed), at j == 0
+        # otherwise. T may be wider than the operand dtype (f32 targets
+        # with bf16 features) — promote h rather than quantize T.
+        @pl.when(j == (i if symmetric else 0))
+        def _accum_q():
+            t = t_ref[...]
+            q_ref[...] += jax.lax.dot_general(
+                h_i.astype(t.dtype), t,
+                dimension_numbers=(((0,), (0,)), ((), ())),  # H_i^T T
+                preferred_element_type=jnp.float32,
+            )
+
+    if symmetric:
+        pl.when(i <= j)(_accum)
+    else:
+        _accum()
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "activation", "block_l", "block_n", "interpret", "symmetric"
+    ),
+)
+def elm_stats_pallas(
+    X: jax.Array,
+    W: jax.Array,
+    b: jax.Array,
+    T: jax.Array,
+    *,
+    activation: str = "sigmoid",
+    block_l: int = 256,
+    block_n: int = 512,
+    interpret: bool = False,
+    symmetric: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """(P, Q) = (H^T H, H^T T) with H = g(X W + b) fused in VMEM.
+
+    X: (N, D), W: (D, L), b: (L,), T: (N, M) -> P: (L, L) f32,
+    Q: (L, M) f32. For activation="rbf" pass W = centers^T (D, L) and
+    b = gamma (L,). symmetric=True computes only the upper block
+    triangle of P (~2x fewer MXU flops) and mirrors it.
+    """
+    N, D = X.shape
+    L = W.shape[1]
+    M = T.shape[1]
+    bl = min(block_l, L)
+    bn = min(block_n, N)
+    # pad to tile multiples; padded X *rows* are masked inside the
+    # kernel (g(0) != 0 in general), padded L/M/D extents are sliced or
+    # contribute exact zeros
+    pN, pL, pD, pM = (-N) % bn, (-L) % bl, (-D) % 128, (-M) % 128
+    if pN or pD:
+        X = jnp.pad(X, ((0, pN), (0, pD)))
+    if pL or pD:
+        W = jnp.pad(W, ((0, pD), (0, pL)))
+    b2 = jnp.pad(b, (0, pL))[None, :].astype(jnp.float32)  # (1, L2), 2D
+    if pN or pM:
+        T = jnp.pad(T, ((0, pN), (0, pM)))
+    # feature matmul runs at the feature dtype (bf16 operands, f32
+    # acc); the targets keep their own precision — the Q dot promotes
+    # h to T's dtype instead of quantizing f32 targets down to bf16
+    W = W.astype(X.dtype)
+    T = T.astype(jnp.promote_types(X.dtype, T.dtype))
+    N2, L2, M2 = X.shape[0], W.shape[1], T.shape[1]
+    grid = (L2 // bl, L2 // bl, N2 // bn)
+    kernel = functools.partial(
+        _elm_stats_kernel,
+        activation=activation, num_rows=N, block_n=bn,
+        symmetric=symmetric, operand_dtype=X.dtype,
+    )
+    P, Q = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, X.shape[1]), lambda i, j, n: (n, 0)),  # X
+            pl.BlockSpec((W.shape[0], bl), lambda i, j, n: (0, i)),  # W_i
+            pl.BlockSpec((W.shape[0], bl), lambda i, j, n: (0, j)),  # W_j
+            pl.BlockSpec((1, bl), lambda i, j, n: (0, i)),           # b_i
+            pl.BlockSpec((1, bl), lambda i, j, n: (0, j)),           # b_j
+            pl.BlockSpec((bn, M2), lambda i, j, n: (n, 0)),          # T
+        ],
+        out_specs=[
+            pl.BlockSpec((bl, bl), lambda i, j, n: (i, j)),
+            pl.BlockSpec((bl, M2), lambda i, j, n: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((L2, L2), jnp.float32),
+            jax.ShapeDtypeStruct((L2, M2), jnp.float32),
+        ],
+        interpret=interpret,
+    )(X, W, W, b2, b2, T)
+    P = P[:L, :L]
+    Q = Q[:L, :M]
+    if symmetric:
+        upper = jnp.triu(P)
+        P = upper + upper.T - jnp.diag(jnp.diag(upper))
+    return P, Q

@@ -1,0 +1,43 @@
+"""Dispatching wrapper for the fused feature->moment kernel.
+
+Backend policy (mirrors gram_ops):
+  * TPU              -> the Pallas kernel (H never touches HBM)
+  * use_kernel=True elsewhere -> the kernel in interpret mode
+    (correctness path for tests; slow)
+  * otherwise        -> ``elm_stats_scan``, the jitted lax.scan
+    streaming implementation — fused-by-construction on CPU/GPU (peak
+    memory is one chunk's working set, not the (N, L) hidden matrix)
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def fused_moments(
+    X, W, b, T, *, activation: str = "sigmoid",
+    use_kernel: bool | None = None, **kw,
+):
+    """(P, Q) f32 from raw inputs without materializing H.
+
+    For activation="rbf" pass W = centers^T and b = gamma.
+    """
+    use = _on_tpu() if use_kernel is None else use_kernel
+    if use:
+        from repro.kernels.elm_stats import elm_stats_pallas
+
+        return elm_stats_pallas(
+            X, W, b, T, activation=activation,
+            interpret=not _on_tpu(), **kw,
+        )
+    from repro.kernels.elm_stats_ref import elm_stats_scan
+
+    kw.pop("block_l", None)
+    chunk = kw.pop("block_n", None)
+    if chunk is not None:
+        kw["chunk"] = chunk
+    return elm_stats_scan(X, W, b, T, activation=activation, **kw)

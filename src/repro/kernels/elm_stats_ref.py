@@ -1,0 +1,75 @@
+"""Pure-jnp oracles for the fused feature->moment kernel.
+
+Two references:
+
+* ``elm_stats_reference`` — the semantic oracle: materialize H, then
+  the gram/cross oracles. What the fused kernel must match.
+* ``elm_stats_scan`` — the *streaming* jnp implementation: lax.scan
+  over (chunk, D) tiles accumulating f32 moments, so peak memory is the
+  chunk working set, not the (N, L) hidden matrix. This is the fused
+  path on backends without the Pallas kernel (CPU jit), and the
+  apples-to-apples "fused vs unfused" benchmark subject.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.gram_ref import cross_reference, gram_reference
+
+
+def hidden_reference(X: jax.Array, W: jax.Array, b: jax.Array,
+                     activation: str) -> jax.Array:
+    """H = g(X W + b); for "rbf", W = centers^T and b = gamma."""
+    from repro.core.features import ACTIVATIONS, rbf_squared_dists
+
+    if activation == "rbf":
+        return jnp.exp(-b * rbf_squared_dists(X, W.T))
+    return ACTIVATIONS[activation](X @ W + b)
+
+
+def elm_stats_reference(X, W, b, T, *, activation="sigmoid"):
+    """(P, Q) via materialized H — the unfused two-pass pipeline."""
+    H = hidden_reference(X, W, b, activation)
+    return gram_reference(H), cross_reference(H, T)
+
+
+@functools.partial(jax.jit, static_argnames=("activation", "chunk"))
+def elm_stats_scan(X, W, b, T, *, activation="sigmoid", chunk=2048):
+    """(P, Q) streamed over N in `chunk`-row tiles (H never full-size).
+
+    Ragged tails are zero-padded and the hidden rows masked to exact
+    zeros (g(0) != 0 in general), mirroring the Pallas kernel.
+    """
+    N, D = X.shape
+    L = W.shape[1]
+    M = T.shape[1]
+    chunk = min(chunk, N)
+    pN = (-N) % chunk
+    if pN:
+        X = jnp.pad(X, ((0, pN), (0, 0)))
+        T = jnp.pad(T, ((0, pN), (0, 0)))
+    K = X.shape[0] // chunk
+    Xc = X.reshape(K, chunk, D)
+    Tc = T.reshape(K, chunk, M)
+    starts = jnp.arange(K) * chunk
+    row_ids = jnp.arange(chunk)[:, None]
+
+    def step(carry, inp):
+        P, Q = carry
+        x, t, start = inp
+        h = hidden_reference(x, W, b, activation)
+        h = jnp.where(row_ids + start < N, h, 0.0).astype(x.dtype)
+        P = P + gram_reference(h)
+        Q = Q + cross_reference(h, t)
+        return (P, Q), None
+
+    zero = (
+        jnp.zeros((L, L), jnp.float32),
+        jnp.zeros((L, M), jnp.float32),
+    )
+    (P, Q), _ = jax.lax.scan(step, zero, (Xc, Tc, starts))
+    return P, Q

@@ -22,8 +22,8 @@ import numpy as np
 
 from repro.configs import get as get_config
 from repro.core import consensus, dc_elm, engine, fusion_elm
+from repro.core import stats as stats_lib
 from repro.data.lm import TokenStream
-from repro.kernels import gram_ops
 from repro.models import Model
 
 
@@ -53,9 +53,12 @@ def main(argv=None):
     stream = TokenStream(cfg.vocab_size, args.seed)
     rng = np.random.default_rng(args.seed)
 
+    # chunked accumulation through the statistics plane: each node's
+    # SufficientStats folds batch after batch, H chunks never persist
     P_ = np.zeros((V, d, d), np.float32)
     Q_ = np.zeros((V, d, vocab), np.float32)
     for i in range(V):
+        node = stats_lib.SufficientStats.zero(d, vocab)
         for _ in range(args.batches):
             toks = stream.sample(rng, args.batch, args.seq)
             batch = {
@@ -68,11 +71,10 @@ def main(argv=None):
                     jnp.dtype(cfg.dtype),
                 )
             h = feats(params, batch).astype(jnp.float32).reshape(-1, d)
-            labels = batch["labels"].reshape(-1)
-            P_[i] += np.asarray(gram_ops.gram(h))
-            Q_[i] += np.asarray(
-                jax.ops.segment_sum(h, labels, num_segments=vocab).T
-            )
+            node = node.merge(stats_lib.classification_moments(
+                h, batch["labels"].reshape(-1), vocab
+            ))
+        P_[i], Q_[i] = np.asarray(node.P), np.asarray(node.Q)
 
     P_, Q_ = jnp.asarray(P_), jnp.asarray(Q_)
     graph = consensus.build(args.graph, V)

@@ -34,7 +34,9 @@ def md_files():
 
 #: where backticked code paths may live; markdown links get no such
 #: leniency — a rendered link resolves relative to its file only
-CODE_ROOTS = ("", "src", "src/repro", "src/repro/core")
+CODE_ROOTS = (
+    "", "src", "src/repro", "src/repro/core", "src/repro/kernels",
+)
 
 
 def resolve(base: Path, target: str, *, code: bool = False) -> bool:
