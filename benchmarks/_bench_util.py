@@ -1,0 +1,110 @@
+"""Shared measurement helpers for the plane benchmarks.
+
+``stats_bench`` (feature->moment) and ``serving_bench`` (predict) time
+the same way on purpose — one warm-up call, block_until_ready-bracketed
+repeats, and best-effort peak-temp from the compiled program's memory
+analysis — so their BENCH_*.json numbers stay methodology-comparable
+and a timing tweak lands in both.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+
+
+def timeit_ms(fn, *args, repeats=3):
+    """Mean wall ms over `repeats` calls after one warm-up call."""
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / repeats * 1e3
+
+
+def temp_bytes(jitted, *args):
+    """Peak temporary allocation of the compiled program (best effort;
+    -1 when the backend has no memory analysis)."""
+    try:
+        m = jitted.lower(*args).compile().memory_analysis()
+        return int(m.temp_size_in_bytes) if m is not None else -1
+    except Exception:  # noqa: BLE001 — backend without memory analysis
+        return -1
+
+
+def fused_vs_unfused_sweep(
+    fast, rows, records, *,
+    unfused, fused, fused_name, problem, flops_fn, tag_prefix,
+    default_point,
+):
+    """The shared N-sweep + acceptance scaffold of both plane benches.
+
+    Times `unfused` and `fused` over an N sweep of `default_point`
+    (plus one f32 row), appends CSV `rows` and JSON `records` in the
+    schema tools/bench_gate.py matches on (identity = N/D/L/M/dtype),
+    and returns the acceptance record for the default point: fused
+    reported no slower than unfused.
+
+    problem(N, D, L, M, dtype) -> the positional args both paths take;
+    flops_fn(pt) -> useful flops for the derived gflops column.
+    """
+    sweep_N = [8192, 32768, 65536] if not fast else [4096, 16384]
+    points = [dict(default_point, N=n) for n in sweep_N]
+    if not any(p["N"] == default_point["N"] for p in points):
+        points.append(dict(default_point))
+    # a f32 row so the dtype effect is visible next to bf16
+    points.append(dict(default_point, N=sweep_N[-1], dtype="float32"))
+
+    acceptance = None
+    for pt in points:
+        args = problem(pt["N"], pt["D"], pt["L"], pt["M"], pt["dtype"])
+        reps = 2 if fast else 3
+        res = {}
+        for name, fn in [("unfused", unfused), ("fused", fused)]:
+            ms = timeit_ms(fn, *args, repeats=reps)
+            peak = temp_bytes(fn, *args)
+            res[name] = dict(wall_ms=ms, peak_temp_bytes=peak)
+            tag = f"{tag_prefix}/{name}_N{pt['N']}_L{pt['L']}_{pt['dtype']}"
+            flops = flops_fn(pt)
+            peak_s = (
+                f"peak_temp_MiB={peak / 2**20:.1f}" if peak >= 0 else
+                "peak_temp_MiB=n/a"
+            )
+            rows.append((
+                tag, ms * 1e3,
+                f"gflops={flops / (ms * 1e3) / 1e3:.2f};{peak_s}",
+            ))
+        rec = dict(
+            pt,
+            fused_impl=fused_name,
+            backend=jax.default_backend(),
+            **{f"{k}_{m}": v for k, r in res.items() for m, v in r.items()},
+        )
+        rec["fused_speedup"] = res["unfused"]["wall_ms"] / max(
+            res["fused"]["wall_ms"], 1e-9
+        )
+        records.append(rec)
+        is_default = (
+            pt["N"] == default_point["N"]
+            and pt["L"] == default_point["L"]
+            and pt["dtype"] == "bfloat16"
+        )
+        if is_default:
+            acceptance = dict(
+                point=pt,
+                fused_wall_ms=res["fused"]["wall_ms"],
+                unfused_wall_ms=res["unfused"]["wall_ms"],
+                fused_not_slower=(
+                    res["fused"]["wall_ms"] <= res["unfused"]["wall_ms"]
+                ),
+            )
+            rows.append((
+                f"{tag_prefix}/acceptance_default_point", 0.0,
+                f"fused_not_slower={acceptance['fused_not_slower']};"
+                f"fused_ms={acceptance['fused_wall_ms']:.0f};"
+                f"unfused_ms={acceptance['unfused_wall_ms']:.0f}",
+            ))
+    return acceptance

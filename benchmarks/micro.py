@@ -23,7 +23,6 @@ from repro.core import consensus, dc_elm, engine, gossip, incremental, online
 from repro.kernels.gram import gram_pallas
 from repro.kernels.gram_ref import gram_reference
 from repro.kernels.ssd_ref import ssd_reference
-from repro.kernels.attn_ref import attention_reference
 
 
 def _timeit_us(fn, *args, repeats=5):

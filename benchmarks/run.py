@@ -54,7 +54,7 @@ SUITES = {}
 
 
 def _register():
-    from benchmarks import micro, paper_figs, stats_bench
+    from benchmarks import micro, paper_figs, serving_bench, stats_bench
 
     SUITES.update({
         "fig3": paper_figs.fig3_centralized_sinc,
@@ -62,6 +62,7 @@ def _register():
         "fig7": paper_figs.fig7_mnist,
         "gram": micro.bench_gram,
         "stats": stats_bench.bench_stats,
+        "serving": serving_bench.bench_serving,
         "ssd": micro.bench_ssd,
         "attn": micro.bench_attention,
         "online": micro.bench_online_vs_direct,
@@ -101,7 +102,7 @@ def main() -> None:
                 kw = {"rounds": 1000}
             if args.fast and name == "compression":
                 kw = {"rounds": 600}
-            if args.fast and name == "stats":
+            if args.fast and name in ("stats", "serving"):
                 kw = {"fast": True}
             rows, _ = fn(**kw)
             for r in rows:

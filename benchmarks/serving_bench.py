@@ -1,0 +1,209 @@
+"""Serving-plane benchmark: the fused predict pipeline vs the unfused
+materialize-H-then-matmul path, plus the micro-batching server under a
+scripted request stream with hot-swap on and off.
+
+Writes a machine-readable ``BENCH_serving.json`` at the repo root —
+the inference-side twin of ``BENCH_stats.json``. The acceptance point
+is (N=65536, L=512, bf16): the fused predict must be reported no slower
+than the unfused H @ beta path.
+
+Paths under test (both jit-compiled, never interpret mode):
+  * unfused — H = g(XW + b) materialized at (N, L), then H @ beta (one
+    extra HBM round trip of H).
+  * fused   — on TPU the Pallas kernel (kernels/elm_predict.py, H lives
+    in VMEM tiles only); elsewhere the lax.scan streaming
+    implementation (kernels/elm_predict_ref.elm_predict_scan).
+
+Server rows: a deterministic mixed-size request stream drained through
+``serving.ELMServer`` — throughput (rows/s) and p50/p99 request latency
+with the beta store hot-swapping mid-traffic (a publish every few
+flushes, as ``stream_chunk(publish_to=...)`` would produce) vs frozen
+on one snapshot.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks._bench_util import fused_vs_unfused_sweep
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BENCH_JSON = os.path.join(REPO_ROOT, "BENCH_serving.json")
+
+# the acceptance point from the issue: N=65536, L=512, bf16
+DEFAULT_POINT = dict(N=65536, D=64, L=512, M=8, dtype="bfloat16")
+SCAN_CHUNK = 4096
+BUCKETS = (64, 256, 1024)
+
+
+def _problem(N, D, L, M, dtype):
+    dt = jnp.dtype(dtype)
+    ks = jax.random.split(jax.random.key(0), 4)
+    X = jax.random.normal(ks[0], (N, D)).astype(dt)
+    W = jax.random.normal(ks[1], (D, L)).astype(dt)
+    b = jax.random.normal(ks[2], (L,)).astype(jnp.float32)
+    beta = jax.random.normal(ks[3], (L, M)).astype(jnp.float32)
+    return X, W, b, beta
+
+
+def _paths():
+    from repro.kernels.elm_predict_ref import (
+        elm_predict_scan, predict_reference,
+    )
+
+    @jax.jit
+    def unfused(X, W, b, beta):
+        return predict_reference(X, W, b, beta, activation="sigmoid")
+
+    on_tpu = jax.default_backend() == "tpu"
+    if on_tpu:
+        from repro.kernels.elm_predict import elm_predict_pallas
+
+        def fused(X, W, b, beta):
+            return elm_predict_pallas(X, W, b, beta, activation="sigmoid")
+
+        fused = jax.jit(fused)
+        fused_name = "pallas"
+    else:
+
+        @jax.jit
+        def fused(X, W, b, beta):
+            return elm_predict_scan(
+                X, W, b, beta, activation="sigmoid", chunk=SCAN_CHUNK
+            )
+
+        fused_name = f"scan(chunk={SCAN_CHUNK})"
+    return unfused, fused, fused_name
+
+
+def _bench_kernel(fast, rows, records):
+    unfused, fused, fused_name = _paths()
+    acceptance = fused_vs_unfused_sweep(
+        fast, rows, records,
+        unfused=unfused, fused=fused, fused_name=fused_name,
+        problem=_problem,
+        flops_fn=lambda pt: 2 * pt["N"] * pt["L"] * (pt["D"] + pt["M"]),
+        tag_prefix="serving", default_point=DEFAULT_POINT,
+    )
+    return acceptance, fused_name
+
+
+def _request_sizes(num_requests, rng):
+    """Mixed traffic: mostly small queries, a tail of bulk scoring."""
+    sizes = rng.choice(
+        [1, 4, 16, 48, 200, 900], size=num_requests,
+        p=[0.25, 0.25, 0.2, 0.15, 0.1, 0.05],
+    )
+    return [int(s) for s in sizes]
+
+
+def _bench_server(fast, rows):
+    from repro.core.features import make_random_features
+    from repro.serving import BetaStore, ELMServer
+
+    D, L, M, V = DEFAULT_POINT["D"], DEFAULT_POINT["L"], DEFAULT_POINT["M"], 4
+    fmap = make_random_features(jax.random.key(1), D, L)
+    # pin f32: benchmarks.run enables x64 for the fidelity suites, and
+    # f64 betas would (correctly) push predict off the fused path
+    betas0 = jax.random.normal(
+        jax.random.key(2), (V, L, M), dtype=jnp.float32
+    )
+    num_requests = 60 if fast else 240
+    submits_per_flush = 8
+    publish_every = 3  # flushes between publishes on the hot-swap arm
+    rng = np.random.default_rng(0)
+    sizes = _request_sizes(num_requests, rng)
+    queries = [
+        rng.standard_normal((n, D)).astype(np.float32) for n in sizes
+    ]
+
+    # precomputed publish payloads (what stream_chunk(publish_to=...)
+    # would hand over) so the timed region measures the server's swap
+    # cost, not the noise generation standing in for training
+    num_pubs = num_requests // submits_per_flush // publish_every + 1
+    pub_betas = [
+        jax.block_until_ready(betas0 + 0.01 * jax.random.normal(
+            k, betas0.shape, dtype=betas0.dtype
+        ))
+        for k in jax.random.split(jax.random.key(3), num_pubs)
+    ]
+
+    out = {}
+    for arm in ("hotswap", "frozen"):
+        store = BetaStore(betas0)
+        srv = ELMServer(fmap, store, buckets=BUCKETS)
+        # warm the bucket programs out of the timed region (compile-once),
+        # then zero ALL counters so the published stats describe only
+        # the measured stream (not the warm-up's padded full buckets)
+        for b in BUCKETS:
+            srv.predict(np.zeros((b, D), np.float32))
+        for k in srv.metrics:
+            srv.metrics[k] = [] if k == "latencies_s" else 0
+        if arm == "frozen":
+            srv.freeze()
+        flushes = 0
+        t0 = time.perf_counter()
+        for i, q in enumerate(queries):
+            srv.submit(q)
+            if (i + 1) % submits_per_flush == 0:
+                srv.flush()
+                flushes += 1
+                if flushes % publish_every == 0:
+                    store.publish(pub_betas[flushes // publish_every - 1])
+        srv.flush()
+        wall_s = time.perf_counter() - t0
+        st = srv.stats()
+        total_rows = int(sum(sizes))
+        out[arm] = dict(
+            wall_ms=wall_s * 1e3,
+            rows_per_s=total_rows / wall_s,
+            p50_ms=st["p50_ms"], p99_ms=st["p99_ms"],
+            batches=st["batches"], swaps=st["swaps"],
+            padding_frac=st["padding_frac"],
+            served_version=srv.served_version,
+        )
+        rows.append((
+            f"serving/server_{arm}_req{num_requests}", wall_s * 1e6,
+            f"rows_per_s={out[arm]['rows_per_s']:.0f};"
+            f"p50_ms={st['p50_ms']:.1f};p99_ms={st['p99_ms']:.1f};"
+            f"swaps={st['swaps']};padding_frac={st['padding_frac']:.2f}",
+        ))
+    out["hotswap_overhead"] = out["frozen"]["rows_per_s"] / max(
+        out["hotswap"]["rows_per_s"], 1e-9
+    )
+    out["num_requests"] = num_requests
+    out["buckets"] = list(BUCKETS)
+    return out
+
+
+def bench_serving(fast: bool = False):
+    """fused-vs-unfused predict + server traffic; CSV rows + JSON.
+
+    Emits CSV rows and writes BENCH_serving.json at the repo root.
+    """
+    rows = []
+    records = []
+    acceptance, fused_name = _bench_kernel(fast, rows, records)
+    server = _bench_server(fast, rows)
+
+    payload = dict(
+        suite="serving",
+        backend=jax.default_backend(),
+        fused_impl=fused_name,
+        default_point=DEFAULT_POINT,
+        rows=records,
+        server=server,
+        acceptance=acceptance,
+    )
+    with open(BENCH_JSON, "w") as fh:
+        json.dump(payload, fh, indent=2)
+    rows.append((
+        "serving/json", 0.0, f"written={os.path.basename(BENCH_JSON)}"
+    ))
+    return rows, {"json": BENCH_JSON}

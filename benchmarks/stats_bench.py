@@ -20,10 +20,11 @@ from __future__ import annotations
 
 import json
 import os
-import time
 
 import jax
 import jax.numpy as jnp
+
+from benchmarks._bench_util import fused_vs_unfused_sweep
 
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 BENCH_JSON = os.path.join(REPO_ROOT, "BENCH_stats.json")
@@ -31,25 +32,6 @@ BENCH_JSON = os.path.join(REPO_ROOT, "BENCH_stats.json")
 # the acceptance point from the issue: N=65536, L=512, bf16
 DEFAULT_POINT = dict(N=65536, D=64, L=512, M=8, dtype="bfloat16")
 SCAN_CHUNK = 8192
-
-
-def _timeit_ms(fn, *args, repeats=3):
-    out = fn(*args)
-    jax.block_until_ready(out)
-    t0 = time.perf_counter()
-    for _ in range(repeats):
-        out = fn(*args)
-    jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / repeats * 1e3
-
-
-def _temp_bytes(jitted, *args):
-    """Peak temporary allocation of the compiled program (best effort)."""
-    try:
-        m = jitted.lower(*args).compile().memory_analysis()
-        return int(m.temp_size_in_bytes) if m is not None else -1
-    except Exception:  # noqa: BLE001 — backend without memory analysis
-        return -1
 
 
 def _problem(N, D, L, M, dtype):
@@ -102,64 +84,16 @@ def bench_stats(fast: bool = False):
     rows = []
     records = []
     unfused, fused, fused_name = _paths()
-    sweep_N = [8192, 32768, 65536] if not fast else [4096, 16384]
-    points = [
-        dict(DEFAULT_POINT, N=n) for n in sweep_N
-    ]
-    if not any(p["N"] == DEFAULT_POINT["N"] for p in points):
-        points.append(dict(DEFAULT_POINT))
-    # a f32 row so the dtype effect is visible next to bf16
-    points.append(dict(DEFAULT_POINT, N=sweep_N[-1], dtype="float32"))
-
-    acceptance = None
-    for pt in points:
-        X, W, b, T = _problem(pt["N"], pt["D"], pt["L"], pt["M"], pt["dtype"])
-        reps = 2 if fast else 3
-        res = {}
-        for name, fn in [("unfused", unfused), ("fused", fused)]:
-            ms = _timeit_ms(fn, X, W, b, T, repeats=reps)
-            peak = _temp_bytes(fn, X, W, b, T)
-            res[name] = dict(wall_ms=ms, peak_temp_bytes=peak)
-            tag = (f"stats/{name}_N{pt['N']}_L{pt['L']}_{pt['dtype']}")
-            flops = 2 * pt["N"] * pt["D"] * pt["L"] + 2 * pt["N"] * pt[
-                "L"
-            ] * (pt["L"] + pt["M"])
-            rows.append((
-                tag, ms * 1e3,
-                f"gflops={flops / (ms * 1e3) / 1e3:.2f};"
-                f"peak_temp_MiB={peak / 2**20:.1f}" if peak >= 0 else
-                f"gflops={flops / (ms * 1e3) / 1e3:.2f};peak_temp_MiB=n/a",
-            ))
-        rec = dict(
-            pt,
-            fused_impl=fused_name,
-            backend=jax.default_backend(),
-            **{f"{k}_{m}": v for k, r in res.items() for m, v in r.items()},
-        )
-        rec["fused_speedup"] = res["unfused"]["wall_ms"] / max(
-            res["fused"]["wall_ms"], 1e-9
-        )
-        records.append(rec)
-        is_default = (
-            pt["N"] == DEFAULT_POINT["N"]
-            and pt["L"] == DEFAULT_POINT["L"]
-            and pt["dtype"] == "bfloat16"
-        )
-        if is_default:
-            acceptance = dict(
-                point=pt,
-                fused_wall_ms=res["fused"]["wall_ms"],
-                unfused_wall_ms=res["unfused"]["wall_ms"],
-                fused_not_slower=(
-                    res["fused"]["wall_ms"] <= res["unfused"]["wall_ms"]
-                ),
-            )
-            rows.append((
-                "stats/acceptance_default_point", 0.0,
-                f"fused_not_slower={acceptance['fused_not_slower']};"
-                f"fused_ms={acceptance['fused_wall_ms']:.0f};"
-                f"unfused_ms={acceptance['unfused_wall_ms']:.0f}",
-            ))
+    acceptance = fused_vs_unfused_sweep(
+        fast, rows, records,
+        unfused=unfused, fused=fused, fused_name=fused_name,
+        problem=_problem,
+        flops_fn=lambda pt: (
+            2 * pt["N"] * pt["D"] * pt["L"]
+            + 2 * pt["N"] * pt["L"] * (pt["L"] + pt["M"])
+        ),
+        tag_prefix="stats", default_point=DEFAULT_POINT,
+    )
 
     payload = dict(
         suite="stats",

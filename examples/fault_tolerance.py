@@ -73,8 +73,8 @@ for k in [crash.start, crash.start + crash.duration, ROUNDS]:
 
 print("\n== 3. Fusion-center baseline under the same crash ==")
 down = crash.duration
-print(f"  DC-ELM rounds stalled by the crash:      0 "
-      f"(gossip loses only that node's links)")
+print("  DC-ELM rounds stalled by the crash:      0 "
+      "(gossip loses only that node's links)")
 print(f"  fusion all-reduce rounds stalled:        {down} "
       f"(barrier needs all {V} chips)")
 alive = [i for i in range(V) if i != crash.node]

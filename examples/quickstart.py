@@ -4,7 +4,6 @@ Run:  PYTHONPATH=src python examples/quickstart.py
 """
 
 import jax
-import jax.numpy as jnp
 
 from repro.core import consensus, dc_elm, elm
 from repro.data.sinc import make_sinc_dataset

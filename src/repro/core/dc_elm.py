@@ -41,7 +41,6 @@ from typing import Callable
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.core import engine as engine_lib
@@ -313,6 +312,34 @@ def sharded_run(
     eng = engine_lib.sharded_dc_elm(mesh, spec, C)
     final, _ = eng.run(betas, omegas, gamma, num_iters)
     return final
+
+
+# ---------------------------------------------------------------------------
+# Node-local prediction (the paper's serve-at-every-node property)
+# ---------------------------------------------------------------------------
+
+
+def node_predict(
+    fmap, betas: jax.Array, X: jax.Array, *,
+    use_kernel: bool | None = None,
+) -> jax.Array:
+    """(V, N, M): every node's local answer on shared query rows X.
+
+    The point of Algorithm 1/2 is that each node keeps a usable model
+    at every round — any node can answer a query with its own beta_i.
+    Queries go through the fused predict kernel exactly once
+    (kernels/elm_predict.py: Y = g(XW+b) @ beta with H resident only
+    in VMEM): the stacked betas fold into one (L, V*M) readout, so the
+    dominant N*D*L feature work is shared across all V node models
+    instead of being recomputed per node. The request-level front-end
+    with micro-batching and hot-swap is ``serving.ELMServer``.
+    """
+    from repro.kernels import elm_predict_ops
+
+    V, L, M = betas.shape
+    wide = jnp.moveaxis(betas, 0, 1).reshape(L, V * M)
+    Y = elm_predict_ops.predict_map(X, fmap, wide, use_kernel=use_kernel)
+    return jnp.moveaxis(Y.reshape(*Y.shape[:-1], V, M), -2, 0)
 
 
 # ---------------------------------------------------------------------------

@@ -68,7 +68,16 @@ class ELM:
     beta: jax.Array  # (L, M)
 
     def __call__(self, x: jax.Array) -> jax.Array:
-        return self.feature_map(x) @ self.beta
+        """f(x) = h(x) beta (paper eq. 2), through the fused predict path.
+
+        On fusable maps the (N, L) hidden matrix never materializes —
+        kernels/elm_predict.py streams g(XW+b) @ beta tile-by-tile
+        (Pallas on TPU, lax.scan elsewhere); deep-backbone adapters and
+        the f64 fidelity path fall back to h(x) @ beta.
+        """
+        from repro.kernels import elm_predict_ops
+
+        return elm_predict_ops.predict_map(x, self.feature_map, self.beta)
 
     predict = __call__
 

@@ -225,6 +225,7 @@ class ConsensusEngine:
         trace_fn=None,
         state_spec=None,
         aux_spec=None,
+        publish_to=None,
     ):
         """One Algorithm 2 event on every node, end-to-end.
 
@@ -242,6 +243,13 @@ class ConsensusEngine:
         ``self.wire_stats`` holds the exact bytes the rounds moved
         (and the mixer accumulates ``total_bytes_on_wire`` across
         events).
+
+        publish_to: optional ``serving.BetaStore`` (anything with a
+        ``publish(betas)`` method) — the post-consensus stacked betas
+        are published as a fresh versioned snapshot, so a live
+        ``serving.ELMServer`` hot-swaps onto the new model mid-traffic
+        while the next chunks keep streaming (the serve-while-train
+        loop; DESIGN.md §11).
 
         Returns (StreamState, traces or None).
         """
@@ -261,6 +269,8 @@ class ConsensusEngine:
             state_spec=state_spec,
             aux_spec=aux_spec,
         )
+        if publish_to is not None:
+            publish_to.publish(final)
         return (
             StreamState(omegas=ostate.omega, Qs=ostate.Q, betas=final),
             traces,

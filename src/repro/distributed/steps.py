@@ -18,7 +18,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ArchConfig
-from repro.core import dsgd, gossip
+from repro.core import dsgd
 from repro.distributed import sharding as shd
 from repro.models import Model
 from repro.optim.optimizers import Optimizer, apply_updates

@@ -6,6 +6,12 @@
                                         H never written to HBM; feeds
                                         core/stats.py (the statistics
                                         plane, every execution path)
+  elm_predict.py / _ops.py / _ref.py    fused predict pipeline
+                                        Y = g(XW+b) @ beta, the serving
+                                        twin — H stays in VMEM while the
+                                        output block accumulates; feeds
+                                        ELM.__call__, dc_elm.node_predict
+                                        and serving/elm_server.py
   gram.py / gram_ops.py / gram_ref.py   P = H^T H, Q = H^T T from a
                                         *materialized* H (deep-backbone
                                         features and other non-fusable
@@ -22,6 +28,7 @@ ops.py wrappers dispatch kernel-on-TPU / oracle-elsewhere.
 
 from repro.kernels import (  # noqa: F401
     attn_ops,
+    elm_predict_ops,
     elm_stats_ops,
     gram_ops,
     ssd_ops,

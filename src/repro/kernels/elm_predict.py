@@ -1,0 +1,145 @@
+"""Pallas TPU kernel: fused predict pipeline Y = g(X W + b) @ beta.
+
+The serving-side twin of kernels/elm_stats.py: the paper's output map
+(eq. 2)
+
+    f(x) = sum_l beta_l g(w_l, b_l, x)  =  H beta,  H = g(X W + b)
+
+in ONE grid pass over the *raw* inputs. Each (bn, D) tile of X streams
+through the MXU computing the hidden tile
+
+    H_tile = g(X_tile @ W_blk + b_blk)          (bn, bl), VMEM only
+
+and the f32 output block accumulates in the same pass
+
+    Y[i] += H_tile @ beta_blk                   (bn, M)
+
+so the (N, L) hidden matrix is **never written to HBM** — a query batch
+costs one HBM read of X and one HBM write of Y, the rest lives in VMEM.
+This replaces the two-pass path (materialize H, then H @ beta) on every
+prediction entry point; `kernels/elm_predict_ops.py` is the dispatching
+wrapper and `serving/elm_server.py` the request-level consumer.
+
+Tiling: grid = (N/bn, L/bl) with l innermost so the (bn, M) f32 output
+block stays resident while the hidden dimension streams through. The
+same ``hidden_tile`` body as the stats kernel supplies H (shared
+ACTIVATIONS registry; "rbf" via the ||x||^2 - 2 x.c^T + ||c||^2
+expansion with W = centers^T and b = gamma).
+
+Dtype policy: operands (X, W, H tiles) may be bf16 — the MXU matmuls
+run with f32 accumulation (`preferred_element_type`), the activation is
+applied in f32, and the H tile is cast back to the operand dtype before
+the output matmul, matching the unfused oracle on a materialized bf16
+H. beta may be wider than the features (f32 readout over bf16
+features): the output dot promotes h to beta's dtype rather than
+quantizing beta down — the same rule as elm_stats' cross moment. Y
+accumulates in f32; the wrapper casts to the oracle's result dtype.
+
+Ragged N: padded rows cannot simply be zero-filled (g(0) != 0 for
+sigmoid), so hidden rows past N are masked to exact zeros — the padded
+Y rows are then exact zeros too, and are sliced off. Padded L columns
+are harmless by construction: beta's padded rows are zero, so the
+g(0)-valued padded hidden columns contribute nothing.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.elm_stats import hidden_tile
+
+
+def _elm_predict_kernel(
+    x_ref, w_ref, b_ref, beta_ref, y_ref,
+    *, activation, num_rows, block_n, operand_dtype,
+):
+    i = pl.program_id(0)
+    l = pl.program_id(1)
+
+    @pl.when(l == 0)
+    def _init_y():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    # rows past N are masked to exact zeros inside hidden_tile (only
+    # the last row-block can be ragged; the iota compare clamps the rest)
+    h = hidden_tile(
+        x_ref, w_ref, b_ref,
+        activation=activation,
+        rows_in_tile=num_rows - i * block_n,
+        out_dtype=operand_dtype,
+    )
+    beta = beta_ref[...]
+    y_ref[...] += jax.lax.dot_general(
+        h.astype(beta.dtype), beta,
+        dimension_numbers=(((1,), (0,)), ((), ())),  # H @ beta
+        preferred_element_type=jnp.float32,
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("activation", "block_l", "block_n", "interpret"),
+)
+def elm_predict_pallas(
+    X: jax.Array,
+    W: jax.Array,
+    b: jax.Array,
+    beta: jax.Array,
+    *,
+    activation: str = "sigmoid",
+    block_l: int = 256,
+    block_n: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """Y = g(X W + b) @ beta with H fused in VMEM.
+
+    X: (N, D), W: (D, L), b: (L,), beta: (L, M) -> Y: (N, M) f32.
+    For activation="rbf" pass W = centers^T (D, L) and b = gamma (L,).
+    """
+    N, D = X.shape
+    L = W.shape[1]
+    M = beta.shape[1]
+    bl = min(block_l, L)
+    bn = min(block_n, N)
+    # pad to tile multiples; padded X *rows* are masked inside the
+    # kernel (g(0) != 0 in general), padded L rows of beta are zero so
+    # the padded hidden columns contribute exact zeros, padded D/M
+    # extents contribute zeros or are sliced
+    pN, pL, pD, pM = (-N) % bn, (-L) % bl, (-D) % 128, (-M) % 128
+    if pN or pD:
+        X = jnp.pad(X, ((0, pN), (0, pD)))
+    if pL or pD:
+        W = jnp.pad(W, ((0, pD), (0, pL)))
+    b2 = jnp.pad(b, (0, pL))[None, :].astype(jnp.float32)  # (1, L2), 2D
+    if pL or pM:
+        beta = jnp.pad(beta, ((0, pL), (0, pM)))
+    # the feature matmul runs at the feature dtype (bf16 operands, f32
+    # acc); the readout keeps its own precision — the output dot
+    # promotes h to beta's dtype instead of quantizing beta down
+    W = W.astype(X.dtype)
+    beta = beta.astype(jnp.promote_types(X.dtype, beta.dtype))
+    N2, L2, M2 = X.shape[0], W.shape[1], beta.shape[1]
+    grid = (N2 // bn, L2 // bl)
+    kernel = functools.partial(
+        _elm_predict_kernel,
+        activation=activation, num_rows=N, block_n=bn,
+        operand_dtype=X.dtype,
+    )
+    Y = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, X.shape[1]), lambda i, l: (i, 0)),   # X
+            pl.BlockSpec((W.shape[0], bl), lambda i, l: (0, l)),   # W
+            pl.BlockSpec((1, bl), lambda i, l: (0, l)),            # b
+            pl.BlockSpec((bl, M2), lambda i, l: (l, 0)),           # beta
+        ],
+        out_specs=pl.BlockSpec((bn, M2), lambda i, l: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((N2, M2), jnp.float32),
+        interpret=interpret,
+    )(X, W, b2, beta)
+    return Y[:N, :M]

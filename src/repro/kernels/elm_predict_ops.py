@@ -1,0 +1,89 @@
+"""Dispatching wrapper for the fused predict kernel.
+
+Backend policy (mirrors elm_stats_ops):
+  * TPU              -> the Pallas kernel (H never touches HBM)
+  * use_kernel=True elsewhere -> the kernel in interpret mode
+    (correctness path for tests; slow)
+  * otherwise        -> ``elm_predict_scan``, the jitted lax.scan
+    streaming implementation — fused-by-construction on CPU/GPU (peak
+    memory is one chunk's working set, not the (N, L) hidden matrix)
+
+``predict_map`` is the FeatureMap-level entry point every prediction
+consumer routes through (``ELM.__call__``, ``dc_elm.node_predict``,
+``serving.elm_server``): fusable affine/RBF maps take the fused path
+when the result dtype is f32-or-narrower; f64 fidelity runs and
+non-fusable maps (frozen deep backbones) materialize H for the call.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def fused_predict(
+    X, W, b, beta, *, activation: str = "sigmoid",
+    use_kernel: bool | None = None, **kw,
+):
+    """Y = g(X W + b) @ beta without materializing H.
+
+    For activation="rbf" pass W = centers^T and b = gamma. Returns the
+    oracle's result dtype (the promoted X/W/beta chain) with f32
+    accumulation inside.
+    """
+    from repro.kernels.elm_predict_ref import predict_dtype
+
+    out_dtype = predict_dtype(X, W, beta)
+    use = _on_tpu() if use_kernel is None else use_kernel
+    if use:
+        from repro.kernels.elm_predict import elm_predict_pallas
+
+        Y = elm_predict_pallas(
+            X, W, b, beta, activation=activation,
+            interpret=not _on_tpu(), **kw,
+        )
+        return Y.astype(out_dtype)
+    from repro.kernels.elm_predict_ref import elm_predict_scan
+
+    kw.pop("block_l", None)
+    chunk = kw.pop("block_n", None)
+    if chunk is not None:
+        kw["chunk"] = chunk
+    return elm_predict_scan(
+        X, W, b, beta, activation=activation, **kw
+    ).astype(out_dtype)
+
+
+def predict_map(
+    x, feature_map, beta, *, use_kernel: bool | None = None, **kw,
+):
+    """f(x) = h(x) @ beta for any FeatureMap, fused where fusable.
+
+    x: (..., D) with arbitrary leading dims (flattened to rows for the
+    kernel and restored). feature_map=None means x already *is* the
+    (materialized) feature matrix — the serving path for deep-backbone
+    heads, where the hidden layer cannot be refused into the kernel.
+    """
+    from repro.core.stats import fusable_params
+
+    if feature_map is None:
+        return x @ beta
+    params = fusable_params(feature_map)
+    if params is None or jnp.result_type(x, beta) == jnp.float64:
+        # non-fusable map (deep backbone) or the f64 fidelity path:
+        # materialize H for this call only
+        return feature_map(x) @ beta
+    W, b, activation = params
+    lead = x.shape[:-1]
+    rows = x.reshape(-1, x.shape[-1])
+    if rows.shape[0] == 0:  # the tiled paths cannot grid over N = 0
+        return feature_map(x) @ beta
+    Y = fused_predict(
+        rows, W, b, beta, activation=activation, use_kernel=use_kernel,
+        **kw,
+    )
+    return Y.reshape(*lead, beta.shape[-1])

@@ -1,0 +1,78 @@
+"""Pure-jnp oracles for the fused predict kernel.
+
+Two references:
+
+* ``predict_reference`` — the semantic oracle: materialize H, then
+  H @ beta. What the fused kernel must match (and the "unfused" subject
+  of benchmarks/serving_bench.py).
+* ``elm_predict_scan`` — the *streaming* jnp implementation: lax.scan
+  over (chunk, D) row tiles, each producing its (chunk, M) output
+  slice, so peak memory is the chunk working set, not the (N, L)
+  hidden matrix. This is the fused path on backends without the Pallas
+  kernel (CPU jit).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.elm_stats_ref import hidden_reference
+
+
+def predict_dtype(X, W, beta) -> jnp.dtype:
+    """The oracle's result dtype: the promoted operand chain."""
+    return jnp.promote_types(jnp.promote_types(X.dtype, W.dtype), beta.dtype)
+
+
+def predict_reference(X, W, b, beta, *, activation="sigmoid"):
+    """Y via materialized H — the unfused two-pass pipeline."""
+    H = hidden_reference(X, W, b, activation)
+    op = jnp.promote_types(H.dtype, beta.dtype)
+    return jax.lax.dot_general(
+        H.astype(op), beta.astype(op),
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ).astype(predict_dtype(X, W, beta))
+
+
+@functools.partial(jax.jit, static_argnames=("activation", "chunk"))
+def elm_predict_scan(X, W, b, beta, *, activation="sigmoid", chunk=4096):
+    """Y streamed over N in `chunk`-row tiles (H never full-size).
+
+    Ragged tails are zero-padded; the padded rows produce g(0)-valued
+    hidden rows whose outputs are simply sliced off (unlike the moment
+    kernel, predict needs no masking for correctness — no cross-row
+    reduction — but the result rows past N are discarded all the same).
+    """
+    N, D = X.shape
+    M = beta.shape[1]
+    if N == 0:  # nothing to scan over
+        op = jnp.promote_types(
+            jnp.promote_types(X.dtype, W.dtype), beta.dtype
+        )
+        return jnp.zeros((0, M), op)
+    chunk = min(chunk, N)
+    pN = (-N) % chunk
+    if pN:
+        X = jnp.pad(X, ((0, pN), (0, 0)))
+    K = X.shape[0] // chunk
+    Xc = X.reshape(K, chunk, D)
+    op = jnp.promote_types(
+        jnp.promote_types(X.dtype, W.dtype), beta.dtype
+    )
+    beta_op = beta.astype(op)
+
+    def step(_, x):
+        h = hidden_reference(x, W, b, activation).astype(op)
+        y = jax.lax.dot_general(
+            h, beta_op,
+            dimension_numbers=(((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        return None, y.astype(op)
+
+    _, Yc = jax.lax.scan(step, None, Xc)
+    return Yc.reshape(K * chunk, M)[:N]

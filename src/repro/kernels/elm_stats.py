@@ -49,8 +49,13 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _hidden_tile(x_ref, w_ref, b_ref, *, activation, rows_in_tile, out_dtype):
-    """g(X_tile @ W_blk + b_blk), rows past `rows_in_tile` masked to 0."""
+def hidden_tile(x_ref, w_ref, b_ref, *, activation, rows_in_tile, out_dtype):
+    """g(X_tile @ W_blk + b_blk), rows past `rows_in_tile` masked to 0.
+
+    The one in-kernel hidden-layer implementation, shared by the fused
+    moment kernel here and the fused predict kernel
+    (kernels/elm_predict.py) so the two planes cannot drift.
+    """
     from repro.core.features import ACTIVATIONS  # shared registry, no cycle
 
     x = x_ref[...]
@@ -96,7 +101,7 @@ def _elm_stats_kernel(
         q_ref[...] = jnp.zeros_like(q_ref)
 
     tile = functools.partial(
-        _hidden_tile, x_ref,
+        hidden_tile, x_ref,
         activation=activation, rows_in_tile=rows_in_tile,
         out_dtype=operand_dtype,
     )

@@ -13,7 +13,6 @@ import time
 import traceback
 
 import jax
-import jax.numpy as jnp
 
 from repro.analysis.roofline import roofline_from_compiled
 from repro.configs import INPUT_SHAPES, get as get_config

@@ -5,7 +5,9 @@ Freezes a backbone, streams each node's local token shard through it,
 accumulates per-node ELM statistics (gram kernel), solves the local
 ridge systems, and runs the paper's gossip iterations until the vocab
 readouts agree across nodes. Compares against the fusion-center solution
-(exact) to report consensus quality.
+(exact) to report consensus quality, then serves a held-out eval stream
+through the ELM serving plane (``serving.ELMServer``) — each eval batch
+is a request answered by a node replica's consensus readout.
 
 Example (CPU smoke):
   PYTHONPATH=src python -m repro.launch.elm_head --arch gemma2-2b \
@@ -27,6 +29,19 @@ from repro.data.lm import TokenStream
 from repro.models import Model
 
 
+def _make_batch(cfg, toks, batch_size):
+    batch = {
+        "tokens": jnp.asarray(toks[:, :-1], jnp.int32),
+        "labels": jnp.asarray(toks[:, 1:], jnp.int32),
+    }
+    if cfg.family == "vlm":
+        batch["image_embeds"] = jnp.zeros(
+            (batch_size, cfg.frontend_tokens, cfg.d_model),
+            jnp.dtype(cfg.dtype),
+        )
+    return batch
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(description="DC-ELM head trainer")
     ap.add_argument("--arch", required=True)
@@ -39,6 +54,10 @@ def main(argv=None):
     ap.add_argument("--C", type=float, default=16.0)
     ap.add_argument("--graph", default="ring")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument(
+        "--eval-batches", type=int, default=2,
+        help="held-out batches served through the ELM serving plane",
+    )
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -61,15 +80,7 @@ def main(argv=None):
         node = stats_lib.SufficientStats.zero(d, vocab)
         for _ in range(args.batches):
             toks = stream.sample(rng, args.batch, args.seq)
-            batch = {
-                "tokens": jnp.asarray(toks[:, :-1], jnp.int32),
-                "labels": jnp.asarray(toks[:, 1:], jnp.int32),
-            }
-            if cfg.family == "vlm":
-                batch["image_embeds"] = jnp.zeros(
-                    (args.batch, cfg.frontend_tokens, cfg.d_model),
-                    jnp.dtype(cfg.dtype),
-                )
+            batch = _make_batch(cfg, toks, args.batch)
             h = feats(params, batch).astype(jnp.float32).reshape(-1, d)
             node = node.merge(stats_lib.classification_moments(
                 h, batch["labels"].reshape(-1), vocab
@@ -97,6 +108,38 @@ def main(argv=None):
     print(f"distance to centralized: {d0:.4f} -> {d1:.4f} ({args.iters} iters)")
     print(f"consensus disagreement:  {cons:.5f}")
     print(f"fusion-center check:     {fusion_err:.2e} (exact by construction)")
+
+    # -- held-out eval, served through the ELM serving plane ---------------
+    # Each eval batch's feature rows become one request; node replicas
+    # answer round-robin with their consensus readout (feature_map=None:
+    # the backbone already materialized h, the bucketed program runs the
+    # readout contraction). Versioned store + micro-batching are the same
+    # machinery as the online serve-while-train loop (DESIGN.md §11).
+    from repro import serving
+
+    # tokens are sampled (batch, seq+1) wide, so tokens[:, :-1] leaves
+    # batch * seq feature rows per eval request — one bucket fits one
+    # request exactly
+    rows = args.batch * args.seq
+    srv = serving.ELMServer(
+        None, serving.BetaStore(final_betas), buckets=(rows,)
+    )
+    correct = total = 0
+    for _ in range(max(args.eval_batches, 0)):
+        toks = stream.sample(rng, args.batch, args.seq)
+        batch = _make_batch(cfg, toks, args.batch)
+        h = feats(params, batch).astype(jnp.float32).reshape(-1, d)
+        logits = srv.predict(np.asarray(h))
+        labels = np.asarray(batch["labels"]).reshape(-1)
+        correct += int((logits.argmax(-1) == labels).sum())
+        total += labels.size
+    if total:
+        st = srv.stats()
+        print(
+            f"served eval:             top-1 {correct / total:.4f} over "
+            f"{total} tokens ({st['batches']} bucketed batches, "
+            f"p50 {st['p50_ms']:.1f} ms)"
+        )
     return d1
 
 

@@ -13,8 +13,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import INPUT_SHAPES, ArchConfig, InputShape
-from repro.distributed import sharding as shd
-from repro.distributed.steps import TrainState
 from repro.models import Model
 
 

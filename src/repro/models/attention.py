@@ -20,7 +20,6 @@ eliminated in the Pallas kernel by grid skipping).
 from __future__ import annotations
 
 import dataclasses
-import functools
 
 import jax
 import jax.numpy as jnp

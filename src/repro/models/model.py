@@ -8,7 +8,6 @@ FSDP, dry-run) can shard them freely.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -20,7 +19,6 @@ from repro.models import ssm as ssm_lib
 from repro.models import transformer as tfm
 from repro.models.layers import (
     chunked_cross_entropy,
-    cross_entropy,
     embed,
     rms_norm,
     softcap,
@@ -313,7 +311,7 @@ class Model:
                 params["shared"], h, pos, sk[si], sv[si], cfg, windowed=False
             )
             sk, sv = sk.at[si].set(ck), sv.at[si].set(cvv)
-            seg = lambda x: x[start:end]
+            seg = lambda x: x[start:end]  # noqa: E731
             h, (c_, s_) = lax.scan(
                 seg_body, h,
                 (

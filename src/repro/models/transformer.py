@@ -13,7 +13,6 @@ Decode paths mirror each stack with KV / SSM caches.
 
 from __future__ import annotations
 
-import dataclasses
 import functools
 from typing import Any
 
@@ -26,14 +25,12 @@ from repro.models import attention as attn
 from repro.models import moe as moe_lib
 from repro.models import ssm as ssm_lib
 from repro.models.layers import (
-    cross_entropy,
     embed,
     glu_mlp,
     init_embedding,
     init_glu_mlp,
     init_rms_norm,
     rms_norm,
-    softcap,
     unembed,
 )
 

@@ -1,3 +1,20 @@
+from repro.serving.elm_server import (
+    BetaSnapshot,
+    BetaStore,
+    ELMServer,
+    PredictRequest,
+    PredictResponse,
+    latency_percentiles,
+)
 from repro.serving.engine import ContinuousBatchingEngine, Request
 
-__all__ = ["ContinuousBatchingEngine", "Request"]
+__all__ = [
+    "BetaSnapshot",
+    "BetaStore",
+    "ContinuousBatchingEngine",
+    "ELMServer",
+    "PredictRequest",
+    "PredictResponse",
+    "Request",
+    "latency_percentiles",
+]

@@ -1,0 +1,422 @@
+"""ELM serving plane: micro-batching request server with hot-swap beta.
+
+The paper's whole premise is that every node holds a *usable* model at
+every consensus round — Algorithm 2 keeps learning chunk-by-chunk while
+the per-node estimates beta_i stay valid predictors. This module is the
+query side of that loop:
+
+* ``BetaStore`` — a versioned, thread-safe publication point for beta
+  snapshots. ``ConsensusEngine.stream_chunk(..., publish_to=store)``
+  publishes the post-consensus stacked betas after every streaming
+  event; readers get an immutable ``BetaSnapshot`` (version + arrays)
+  with one atomic reference read, so a publish can never be observed
+  half-applied.
+
+* ``ELMServer`` — a micro-batching front-end over the fused predict
+  kernel (kernels/elm_predict.py). Requests of varying row counts are
+  packed FIFO into a small set of padded batch shapes (``buckets``) so
+  every launch hits a compile-once jitted program; each packed batch is
+  answered by one node replica's beta (round-robin across the V node
+  models, or pinned per request — the paper's "any node answers
+  locally"). Oversized requests are split into max-bucket chunks and
+  reassembled.
+
+Hot-swap protocol (bounded staleness):
+
+1. ``flush()`` re-reads the store **at most once, at flush start**; all
+   batches in one flush share that snapshot. Per-request atomicity is
+   therefore structural: a request (even a split oversized one) is
+   answered by exactly one version, never a mix.
+2. The cached snapshot is refreshed whenever the store has advanced by
+   more than ``max_staleness`` versions (0 = always serve the latest
+   published beta at flush time). Every response carries the version
+   that produced it, and the serve-time guarantee is
+   ``store.version_at_flush - response.version <= max_staleness``.
+3. ``freeze()`` pins the current snapshot (publishes keep landing in
+   the store but are not picked up) — the ablation arm of
+   ``benchmarks/serving_bench.py``; ``thaw()`` resumes hot-swapping.
+
+The server itself is a single-dispatcher object (submit/flush from one
+thread); the store is safe to publish into from another thread — the
+serve-while-train loop in ``examples/elm_serving.py`` runs training
+events and query traffic against the same store.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from collections import deque
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Versioned beta publication
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class BetaSnapshot:
+    """An immutable published model: stacked per-node betas + version."""
+
+    version: int
+    betas: jax.Array  # (V, L, M)
+
+    @property
+    def num_nodes(self) -> int:
+        return self.betas.shape[0]
+
+
+class BetaStore:
+    """Atomic versioned publication point for consensus beta snapshots.
+
+    ``publish`` bumps the version and swaps in a new immutable
+    ``BetaSnapshot`` under a lock; ``snapshot`` is a single reference
+    read (atomic in CPython), so readers never block publishers and can
+    never observe a half-written update.
+    """
+
+    def __init__(self, betas=None):
+        self._lock = threading.Lock()
+        self._snap: BetaSnapshot | None = None
+        if betas is not None:
+            self.publish(betas)
+
+    @staticmethod
+    def _stack(betas) -> jax.Array:
+        b = jnp.asarray(betas)
+        if b.ndim == 2:  # single-model serving: V = 1
+            b = b[None]
+        if b.ndim != 3:
+            raise ValueError(
+                f"betas must be (L, M) or stacked (V, L, M), got {b.shape}"
+            )
+        return b
+
+    def publish(self, betas) -> int:
+        """Publish a new snapshot; returns its version (1-based)."""
+        b = self._stack(betas)
+        with self._lock:
+            version = (self._snap.version if self._snap else 0) + 1
+            self._snap = BetaSnapshot(version=version, betas=b)
+            return version
+
+    def snapshot(self) -> BetaSnapshot:
+        snap = self._snap
+        if snap is None:
+            raise RuntimeError("BetaStore has no published betas yet")
+        return snap
+
+    @property
+    def version(self) -> int:
+        snap = self._snap
+        return 0 if snap is None else snap.version
+
+
+# ---------------------------------------------------------------------------
+# Requests / responses
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class PredictRequest:
+    uid: int
+    x: np.ndarray  # (n, D) query rows
+    node: int  # which node replica answers
+    v_submit: int  # store version when the request was accepted
+    t_submit: float
+
+
+@dataclasses.dataclass(frozen=True)
+class PredictResponse:
+    uid: int
+    y: np.ndarray  # (n, M)
+    version: int  # beta snapshot that produced y (whole response)
+    node: int
+    latency_s: float
+
+
+def latency_percentiles(latencies_s) -> dict:
+    """{p50, p99, mean} in milliseconds from a latency list."""
+    if not len(latencies_s):
+        return {"p50_ms": 0.0, "p99_ms": 0.0, "mean_ms": 0.0}
+    arr = np.asarray(latencies_s, np.float64) * 1e3
+    return {
+        "p50_ms": float(np.percentile(arr, 50)),
+        "p99_ms": float(np.percentile(arr, 99)),
+        "mean_ms": float(np.mean(arr)),
+    }
+
+
+# ---------------------------------------------------------------------------
+# The server
+# ---------------------------------------------------------------------------
+
+
+class ELMServer:
+    """Bucketed micro-batching ELM inference over a hot-swappable store.
+
+    feature_map: a fusable map (RandomFeatureMap / RBFFeatureMap — the
+      fused predict kernel runs g and the readout in one pass), any
+      callable FeatureMap (materialized per batch), or None when
+      requests already carry feature rows (deep-backbone heads).
+    store: a ``BetaStore`` (hot-swap path) or a bare betas array
+      (wrapped in a private store; still versioned).
+    buckets: ascending padded row counts; each gets one compiled
+      program. Requests longer than the largest bucket are split.
+    max_staleness: how many published versions the served snapshot may
+      trail the store by at flush time (0 = always re-read).
+    """
+
+    #: p50/p99 are computed over a sliding window of this many requests
+    LATENCY_WINDOW = 10_000
+
+    def __init__(
+        self,
+        feature_map,
+        store,
+        *,
+        buckets: tuple = (16, 64, 256, 1024),
+        max_staleness: int = 0,
+        use_kernel: bool | None = None,
+        sample_fn: Callable | None = None,
+        row_dtype=np.float32,
+    ):
+        if not buckets or list(buckets) != sorted(set(buckets)):
+            raise ValueError(f"buckets must be ascending unique, got {buckets}")
+        self.feature_map = feature_map
+        self.store = store if isinstance(store, BetaStore) else BetaStore(store)
+        self.buckets = tuple(int(b) for b in buckets)
+        self.max_staleness = int(max_staleness)
+        self.use_kernel = use_kernel
+        self.sample_fn = sample_fn  # optional post-map (e.g. argmax)
+        self.row_dtype = np.dtype(row_dtype)  # every batch packs to this
+        self._row_dim = getattr(feature_map, "in_dim", None)  # else 1st req
+        self._snap: BetaSnapshot | None = None
+        self._frozen = False
+        self._queue: deque[PredictRequest] = deque()
+        self._leftover: list[PredictResponse] = []  # unclaimed by predict()
+        self._uid = 0
+        self._rr_node = 0
+        self._fns: dict[int, Callable] = {}  # bucket rows -> compiled fn
+        self._parts: dict[int, list] = {}  # uid -> chunks of a split req
+        self.metrics = {
+            "requests": 0, "responses": 0, "batches": 0,
+            "rows": 0, "padded_rows": 0, "swaps": 0, "latencies_s": [],
+        }
+
+    # ------------------------------------------------------------------ api
+
+    def submit(self, x, *, node: int | None = None) -> int:
+        """Queue one request of shape (n, D) (or (D,)); returns its uid.
+
+        Rows are coerced to the server's ``row_dtype`` (one packed batch
+        = one dtype, by contract) and D must match the feature map's
+        input width (or the first request's, when the map doesn't say).
+        node pins the answering replica; default round-robin across the
+        store's V node models. Oversized requests are split into
+        max-bucket chunks here and reassembled at flush.
+        """
+        x = np.asarray(x, dtype=self.row_dtype)
+        if x.ndim == 1:
+            x = x[None]
+        if x.ndim != 2 or x.shape[0] == 0:
+            raise ValueError(f"request must be (n>0, D) rows, got {x.shape}")
+        if self._row_dim is None:
+            self._row_dim = x.shape[1]
+        elif x.shape[1] != self._row_dim:
+            raise ValueError(
+                f"request width {x.shape[1]} != serving width "
+                f"{self._row_dim}"
+            )
+        uid = self._uid
+        self._uid += 1
+        if node is None:
+            node = self._rr_node
+            self._rr_node = (self._rr_node + 1) % max(
+                1, self.store.snapshot().num_nodes
+            )
+        self.metrics["requests"] += 1
+        self.metrics["rows"] += x.shape[0]
+        cap = self.buckets[-1]
+        chunks = [x[s:s + cap] for s in range(0, x.shape[0], cap)]
+        if len(chunks) > 1:
+            self._parts[uid] = [None] * len(chunks)
+        now = time.perf_counter()
+        for part, chunk in enumerate(chunks):
+            self._queue.append(PredictRequest(
+                uid=uid if len(chunks) == 1 else (uid, part),
+                x=chunk, node=node,
+                v_submit=self.store.version, t_submit=now,
+            ))
+        return uid
+
+    def flush(self) -> list[PredictResponse]:
+        """Serve everything pending; returns responses in uid order.
+
+        One store read for the whole flush (hot-swap point); FIFO
+        packing per node into the smallest bucket that fits. Includes
+        any responses a ``predict()`` call served but did not claim.
+        """
+        self._refresh_snapshot()
+        responses = self._leftover
+        self._leftover = []
+        by_node: dict[int, list[PredictRequest]] = {}
+        while self._queue:
+            r = self._queue.popleft()
+            by_node.setdefault(r.node, []).append(r)
+        served: list[PredictResponse] = []
+        for node, reqs in by_node.items():
+            for batch in self._pack(reqs):
+                served.extend(self._launch(node, batch))
+        served = self._reassemble(served)
+        self.metrics["responses"] += len(served)
+        lat = self.metrics["latencies_s"]
+        lat.extend(r.latency_s for r in served)
+        if len(lat) > self.LATENCY_WINDOW:  # long-running servers: bound it
+            del lat[: len(lat) - self.LATENCY_WINDOW]
+        return sorted(responses + served, key=lambda r: r.uid)
+
+    def predict(self, x, *, node: int | None = None) -> np.ndarray:
+        """Synchronous single-request convenience: submit + flush.
+
+        Other requests pending at call time are served by the same
+        flush; their responses are retained and returned by the next
+        ``flush()`` rather than dropped.
+        """
+        uid = self.submit(x, node=node)
+        mine = None
+        for r in self.flush():
+            if r.uid == uid:
+                mine = r
+            else:
+                self._leftover.append(r)
+        assert mine is not None
+        return mine.y
+
+    def freeze(self):
+        """Pin the current snapshot; publishes are no longer picked up."""
+        self._refresh_snapshot()
+        self._frozen = True
+
+    def thaw(self):
+        self._frozen = False
+
+    @property
+    def served_version(self) -> int:
+        return 0 if self._snap is None else self._snap.version
+
+    def stats(self) -> dict:
+        """Aggregate serving metrics incl. p50/p99 latency + padding."""
+        m = dict(self.metrics)
+        lat = m.pop("latencies_s")
+        m.update(latency_percentiles(lat))
+        total = m["rows"] + m["padded_rows"]
+        m["padding_frac"] = m["padded_rows"] / total if total else 0.0
+        return m
+
+    # ------------------------------------------------------------- internals
+
+    def _refresh_snapshot(self):
+        latest = self.store.version
+        if self._snap is None:
+            self._snap = self.store.snapshot()
+            return
+        if self._frozen:
+            return
+        if latest - self._snap.version > self.max_staleness:
+            self._snap = self.store.snapshot()
+            self.metrics["swaps"] += 1
+
+    def _pack(self, reqs: list) -> list[list]:
+        """FIFO-pack requests into batches of <= max-bucket total rows."""
+        batches, cur, rows = [], [], 0
+        cap = self.buckets[-1]
+        for r in reqs:
+            if cur and rows + r.x.shape[0] > cap:
+                batches.append(cur)
+                cur, rows = [], 0
+            cur.append(r)
+            rows += r.x.shape[0]
+        if cur:
+            batches.append(cur)
+        return batches
+
+    def _bucket_for(self, rows: int) -> int:
+        for b in self.buckets:
+            if rows <= b:
+                return b
+        raise AssertionError("packing exceeded the largest bucket")
+
+    def _compiled(self, bucket: int) -> Callable:
+        fn = self._fns.get(bucket)
+        if fn is None:
+            fmap, use_kernel, sample = (
+                self.feature_map, self.use_kernel, self.sample_fn,
+            )
+
+            def run(xpad, beta):
+                from repro.kernels import elm_predict_ops
+
+                y = elm_predict_ops.predict_map(
+                    xpad, fmap, beta, use_kernel=use_kernel
+                )
+                return sample(y) if sample is not None else y
+
+            fn = self._fns[bucket] = jax.jit(run)
+        return fn
+
+    def _launch(self, node: int, batch: list) -> list[PredictResponse]:
+        snap = self._snap
+        rows = sum(r.x.shape[0] for r in batch)
+        bucket = self._bucket_for(rows)
+        X = np.zeros((bucket, batch[0].x.shape[1]), batch[0].x.dtype)
+        off = 0
+        for r in batch:
+            X[off:off + r.x.shape[0]] = r.x
+            off += r.x.shape[0]
+        beta = snap.betas[node % snap.num_nodes]
+        Y = np.asarray(self._compiled(bucket)(jnp.asarray(X), beta))
+        self.metrics["batches"] += 1
+        self.metrics["padded_rows"] += bucket - rows
+        now = time.perf_counter()
+        out, off = [], 0
+        for r in batch:
+            n = r.x.shape[0]
+            out.append(PredictResponse(
+                uid=r.uid, y=Y[off:off + n], version=snap.version,
+                node=node % snap.num_nodes, latency_s=now - r.t_submit,
+            ))
+            off += n
+        return out
+
+    def _reassemble(self, responses: list) -> list[PredictResponse]:
+        """Merge split-request chunk responses back into whole ones."""
+        whole, pending = [], {}
+        for r in responses:
+            if isinstance(r.uid, tuple):
+                uid, part = r.uid
+                self._parts[uid][part] = r
+                pending[uid] = True
+            else:
+                whole.append(r)
+        for uid in pending:
+            parts = self._parts.pop(uid)
+            assert all(p is not None for p in parts)
+            versions = {p.version for p in parts}
+            # structural guarantee: one snapshot per flush, split chunks
+            # are always flushed together
+            assert len(versions) == 1, "split request straddled versions"
+            whole.append(PredictResponse(
+                uid=uid,
+                y=np.concatenate([p.y for p in parts], axis=0),
+                version=parts[0].version,
+                node=parts[0].node,
+                latency_s=max(p.latency_s for p in parts),
+            ))
+        return whole

@@ -7,7 +7,7 @@ import pytest
 
 from repro.core import elm
 from repro.core.features import make_random_features
-from repro.data.sinc import make_sinc_dataset, sinc
+from repro.data.sinc import make_sinc_dataset
 
 
 def test_primal_dual_agree():

@@ -1,0 +1,367 @@
+"""Serving plane: fused predict kernel parity, bucket padding,
+hot-swap atomicity, and bounded staleness under a scripted stream."""
+
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import dc_elm, engine
+from repro.core import consensus
+from repro.core.elm import ELM
+from repro.core.features import make_random_features
+from repro.kernels.elm_predict import elm_predict_pallas
+from repro.kernels.elm_predict_ops import fused_predict
+from repro.kernels.elm_predict_ref import (
+    elm_predict_scan,
+    predict_reference,
+)
+from repro.serving import BetaStore, ELMServer
+from tests.conftest import run_py
+
+
+def _relerr(a, b):
+    a = jnp.asarray(a, jnp.float32)
+    b = jnp.asarray(b, jnp.float32)
+    return float(jnp.max(jnp.abs(a - b)) / (1 + jnp.max(jnp.abs(b))))
+
+
+def _problem(N, D, L, M, dtype, activation, seed=0):
+    ks = jax.random.split(jax.random.key(seed), 4)
+    X = jax.random.normal(ks[0], (N, D)).astype(dtype)
+    W = jax.random.normal(ks[1], (D, L)).astype(dtype)
+    if activation == "rbf":
+        b = jax.random.uniform(ks[2], (L,), minval=0.05, maxval=1.0)
+    else:
+        b = jax.random.normal(ks[2], (L,))
+    beta = jax.random.normal(ks[3], (L, M)).astype(jnp.float32)
+    return X, W, b, beta
+
+
+# ---------------------------------------------------------------------------
+# Kernel parity
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "activation", ["sigmoid", "tanh", "relu", "sin", "identity", "rbf"]
+)
+def test_kernel_parity_activations(activation):
+    """Pallas (interpret) and scan match the materialized-H oracle."""
+    X, W, b, beta = _problem(300, 7, 130, 3, jnp.float32, activation)
+    ref = predict_reference(X, W, b, beta, activation=activation)
+    pal = elm_predict_pallas(
+        X, W, b, beta, activation=activation, interpret=True,
+        block_l=64, block_n=128,
+    )
+    scan = elm_predict_scan(X, W, b, beta, activation=activation, chunk=90)
+    assert _relerr(pal, ref) < 2e-5
+    assert _relerr(scan, ref) < 2e-5
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "shape",
+    [(128, 8, 64, 1), (130, 7, 65, 3), (513, 9, 256, 8), (31, 3, 140, 2)],
+)
+def test_kernel_parity_dtypes_ragged(shape, dtype):
+    """Ragged N/L/D tails and bf16 operands match the oracle.
+
+    The ragged-N mask matters because g(0) != 0 for sigmoid — without
+    it the padded rows would leak into nothing here (predict has no
+    cross-row reduction) but the padded L columns WOULD leak without
+    zero beta padding; both are covered by exactness below.
+    """
+    N, D, L, M = shape
+    X, W, b, beta = _problem(N, D, L, M, dtype, "sigmoid")
+    ref = predict_reference(X, W, b, beta, activation="sigmoid")
+    pal = elm_predict_pallas(
+        X, W, b, beta, activation="sigmoid", interpret=True,
+        block_l=64, block_n=128,
+    )
+    tol = 1e-2 if dtype == jnp.bfloat16 else 2e-5
+    assert pal.shape == (N, M)
+    assert _relerr(pal, ref) < tol
+    assert _relerr(
+        elm_predict_scan(X, W, b, beta, activation="sigmoid", chunk=100),
+        ref,
+    ) < tol
+
+
+def test_fused_predict_dispatch_and_dtype():
+    """The ops wrapper returns the oracle's promoted result dtype."""
+    X, W, b, beta = _problem(64, 4, 32, 2, jnp.bfloat16, "sigmoid")
+    ref = predict_reference(X, W, b, beta, activation="sigmoid")
+    for use_kernel in (False, True):
+        out = fused_predict(
+            X, W, b, beta, use_kernel=use_kernel, block_l=16, block_n=32
+        )
+        assert out.dtype == ref.dtype
+        assert _relerr(out, ref) < 1e-2
+    allb = fused_predict(X, W, b, beta.astype(jnp.bfloat16))
+    assert allb.dtype == jnp.bfloat16
+
+
+def test_elm_call_matches_materialized():
+    """ELM.__call__ (fused path) == h(x) @ beta, incl. leading dims."""
+    fmap = make_random_features(jax.random.key(1), 5, 40, "sigmoid")
+    beta = jax.random.normal(jax.random.key(2), (40, 3))
+    elm = ELM(feature_map=fmap, beta=beta)
+    for shape in [(11, 5), (4, 7, 5), (5,)]:
+        x = jax.random.normal(jax.random.key(3), shape)
+        ref = fmap(x) @ beta
+        out = elm(x)
+        assert out.shape == ref.shape
+        assert _relerr(out, ref) < 2e-6
+    # rbf maps fuse through the squared-distance expansion
+    rbf = make_random_features(jax.random.key(4), 5, 40, "rbf")
+    elm = ELM(feature_map=rbf, beta=beta)
+    x = jax.random.normal(jax.random.key(5), (23, 5))
+    assert _relerr(elm(x), rbf(x) @ beta) < 2e-6
+
+
+def test_predict_map_f64_fidelity_preserved():
+    """The f64 fidelity path must not be squeezed through f32 fusion."""
+    code = """
+import jax
+jax.config.update("jax_enable_x64", True)
+import jax.numpy as jnp
+from repro.core.features import make_random_features
+from repro.kernels.elm_predict_ops import predict_map
+
+fmap = make_random_features(jax.random.key(1), 3, 20)
+x = jax.random.normal(jax.random.key(2), (9, 3), dtype=jnp.float64)
+beta = jax.random.normal(jax.random.key(3), (20, 2), dtype=jnp.float64)
+out = predict_map(x, fmap, beta)
+assert out.dtype == jnp.float64, out.dtype
+ref = fmap(x) @ beta
+assert float(jnp.max(jnp.abs(out - ref))) < 1e-12
+print("OK")
+"""
+    r = run_py(code)
+    assert r.returncode == 0, r.stderr
+    assert "OK" in r.stdout
+
+
+def test_node_predict_matches_per_node():
+    """node_predict == each node's fmap(X) @ beta_i."""
+    fmap = make_random_features(jax.random.key(1), 2, 30)
+    betas = jax.random.normal(jax.random.key(2), (4, 30, 2))
+    X = jax.random.normal(jax.random.key(3), (17, 2))
+    out = dc_elm.node_predict(fmap, betas, X)
+    ref = jnp.stack([fmap(X) @ betas[i] for i in range(4)])
+    assert out.shape == (4, 17, 2)
+    assert _relerr(out, ref) < 2e-6
+
+
+# ---------------------------------------------------------------------------
+# Micro-batching server
+# ---------------------------------------------------------------------------
+
+
+def _server(V=3, D=2, L=24, M=2, buckets=(4, 16, 64), seed=0, **kw):
+    fmap = make_random_features(jax.random.key(seed), D, L)
+    betas = jax.random.normal(jax.random.key(seed + 1), (V, L, M))
+    store = BetaStore(betas)
+    return ELMServer(fmap, store, buckets=buckets, **kw), fmap, store
+
+
+@pytest.mark.parametrize("n", [1, 3, 4, 5, 15, 16, 17, 63, 64, 65, 200])
+def test_bucket_padding_boundary_sizes(n):
+    """Exact parity at and around every bucket boundary, incl. splits."""
+    srv, fmap, store = _server()
+    rng = np.random.default_rng(n)
+    x = rng.standard_normal((n, 2)).astype(np.float32)
+    y = srv.predict(x, node=1)
+    assert y.shape == (n, 2)
+    ref = np.asarray(fmap(jnp.asarray(x)) @ store.snapshot().betas[1])
+    np.testing.assert_allclose(y, ref, rtol=2e-5, atol=2e-5)
+
+
+def test_packing_multiple_requests_one_batch():
+    """Small requests pack into one padded launch, answers stay exact."""
+    srv, fmap, store = _server()
+    rng = np.random.default_rng(0)
+    qs = {}
+    for k in (3, 5, 2, 4):
+        q = rng.standard_normal((k, 2)).astype(np.float32)
+        qs[srv.submit(q, node=0)] = q
+    out = {r.uid: r for r in srv.flush()}
+    assert srv.metrics["batches"] == 1  # 14 rows -> one 16-bucket launch
+    for uid, q in qs.items():
+        ref = np.asarray(fmap(jnp.asarray(q)) @ store.snapshot().betas[0])
+        np.testing.assert_allclose(out[uid].y, ref, rtol=2e-5, atol=2e-5)
+
+
+def test_oversized_request_split_and_reassembled():
+    srv, fmap, store = _server(buckets=(4, 8))
+    rng = np.random.default_rng(1)
+    x = rng.standard_normal((21, 2)).astype(np.float32)  # 3 chunks of <=8
+    uid = srv.submit(x, node=2)
+    (resp,) = srv.flush()
+    assert resp.uid == uid and resp.y.shape == (21, 2)
+    ref = np.asarray(fmap(jnp.asarray(x)) @ store.snapshot().betas[2])
+    np.testing.assert_allclose(resp.y, ref, rtol=2e-5, atol=2e-5)
+
+
+def test_round_robin_across_node_replicas():
+    srv, fmap, store = _server(V=3)
+    x = np.ones((2, 2), np.float32)
+    nodes = []
+    for _ in range(6):
+        srv.submit(x)
+        nodes.append(srv.flush()[0].node)
+    assert nodes == [0, 1, 2, 0, 1, 2]
+
+
+def test_hot_swap_atomicity_never_mixes_versions():
+    """Every response equals exactly one published beta's output —
+    never a blend — even with publishes interleaved mid-traffic."""
+    srv, fmap, store = _server(V=1, buckets=(4, 8))
+    rng = np.random.default_rng(2)
+    # distinguishable versions: beta scaled by 1, 10, 100
+    base = np.asarray(store.snapshot().betas[0])
+    refs = {}
+    x = rng.standard_normal((21, 2)).astype(np.float32)  # splits into 3
+    for scale in (10.0, 100.0):
+        srv.submit(x, node=0)
+        version = store.publish(jnp.asarray(base * scale)[None])
+        refs[version] = np.asarray(fmap(jnp.asarray(x))) @ (base * scale)
+        (resp,) = srv.flush()
+        # served from exactly one version (the latest at flush time)
+        assert resp.version == version
+        np.testing.assert_allclose(
+            resp.y, refs[version], rtol=2e-5, atol=2e-5
+        )
+
+
+def test_bounded_staleness_scripted_stream():
+    """latest_at_flush - served_version <= max_staleness, and with the
+    bound at 0 the server always serves the newest published beta."""
+    for max_staleness in (0, 2):
+        srv, fmap, store = _server(V=1, max_staleness=max_staleness)
+        x = np.ones((2, 2), np.float32)
+        served = []
+        for step in range(6):
+            store.publish(store.snapshot().betas * 1.5)
+            srv.submit(x, node=0)
+            latest = store.version
+            (resp,) = srv.flush()
+            served.append(resp.version)
+            assert latest - resp.version <= max_staleness
+        # versions never regress
+        assert served == sorted(served)
+        if max_staleness == 0:
+            assert served[-1] == store.version
+
+
+def test_freeze_pins_snapshot_until_thaw():
+    srv, fmap, store = _server(V=1)
+    x = np.ones((3, 2), np.float32)
+    srv.predict(x, node=0)
+    srv.freeze()
+    v_frozen = srv.served_version
+    store.publish(store.snapshot().betas * 2.0)
+    store.publish(store.snapshot().betas * 2.0)
+    srv.submit(x, node=0)
+    (resp,) = srv.flush()
+    assert resp.version == v_frozen and store.version == v_frozen + 2
+    srv.thaw()
+    srv.submit(x, node=0)
+    (resp,) = srv.flush()
+    assert resp.version == store.version
+
+
+def test_beta_store_concurrent_publishes_are_ordered():
+    """Version numbers stay dense/unique under concurrent publishers."""
+    store = BetaStore(jnp.zeros((1, 4, 1)))
+    versions = []
+    lock = threading.Lock()
+
+    def pub():
+        for _ in range(20):
+            v = store.publish(jnp.ones((1, 4, 1)))
+            with lock:
+                versions.append(v)
+
+    threads = [threading.Thread(target=pub) for _ in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert sorted(versions) == list(range(2, 82))
+    assert store.version == 81
+
+
+def test_server_input_validation():
+    srv, _, _ = _server()
+    with pytest.raises(ValueError, match="buckets"):
+        ELMServer(None, BetaStore(jnp.zeros((1, 4, 1))), buckets=(8, 4))
+    with pytest.raises(ValueError, match="rows"):
+        srv.submit(np.zeros((0, 2), np.float32))
+    with pytest.raises(ValueError, match="betas"):
+        BetaStore(jnp.zeros((4,)))
+    with pytest.raises(RuntimeError, match="no published"):
+        BetaStore().snapshot()
+
+
+def test_serve_while_train_stream_chunk_publishes():
+    """stream_chunk(publish_to=store) hot-swaps a live server and the
+    served test error falls as Algorithm 2 keeps learning."""
+    from repro.data.sinc import make_sinc_dataset, sinc
+
+    V, L, C = 4, 60, 2.0**6
+    fmap = make_random_features(jax.random.key(1), 1, L)
+    eng = engine.simulated_dc_elm(consensus.paper_fig2(), C)
+    X, Y, X_test, Y_test = make_sinc_dataset(
+        jax.random.key(0), num_nodes=V, per_node=80, num_test=400
+    )
+    state = eng.stream_init(X_nodes=X, T_nodes=Y, feature_map=fmap)
+    store = BetaStore()
+    state, _ = eng.stream_chunk(
+        state, gamma=1 / 2.1, num_iters=150, publish_to=store
+    )
+    assert store.version == 1
+    srv = ELMServer(fmap, store, buckets=(64, 512))
+    mses, versions = [], []
+    key = jax.random.key(7)
+    for _ in range(3):
+        key, k1, k2 = jax.random.split(key, 3)
+        Xn = jax.random.uniform(k1, (V, 40, 1), minval=-10, maxval=10)
+        Yn = sinc(Xn) + jax.random.uniform(
+            k2, (V, 40, 1), minval=-0.2, maxval=0.2
+        )
+        state, _ = eng.stream_chunk(
+            state, added=(jax.vmap(fmap)(Xn), Yn), gamma=1 / 2.1,
+            num_iters=150, publish_to=store,
+        )
+        pred = srv.predict(np.asarray(X_test, np.float32))
+        versions.append(srv.served_version)
+        mses.append(float(np.mean((pred - np.asarray(Y_test)) ** 2)))
+    assert versions == [2, 3, 4]  # hot-swapped onto every publish
+    assert mses[-1] < mses[0] * 1.5 and mses[-1] < 5e-3
+
+
+def test_predict_retains_other_pending_responses():
+    """predict() must not drop responses of other queued requests."""
+    srv, fmap, store = _server()
+    rng = np.random.default_rng(3)
+    q = rng.standard_normal((3, 2)).astype(np.float32)
+    uid_a = srv.submit(q, node=0)
+    y = srv.predict(np.ones((2, 2), np.float32), node=1)
+    assert y.shape == (2, 2)
+    later = srv.flush()  # a's response was retained, not dropped
+    assert [r.uid for r in later] == [uid_a]
+    ref = np.asarray(fmap(jnp.asarray(q)) @ store.snapshot().betas[0])
+    np.testing.assert_allclose(later[0].y, ref, rtol=2e-5, atol=2e-5)
+
+
+def test_submit_enforces_row_width_and_coerces_dtype():
+    srv, fmap, store = _server()  # fmap.in_dim == 2
+    with pytest.raises(ValueError, match="width"):
+        srv.submit(np.zeros((3, 5), np.float32))
+    # f64 rows are coerced to the serving dtype, not silently packed
+    y = srv.predict(np.zeros((2, 2), np.float64), node=0)
+    assert y.dtype == np.float32

@@ -12,7 +12,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import consensus, dc_elm, engine, gossip, online
+from repro.core import consensus, dc_elm, engine, online
 from tests.conftest import run_py
 
 

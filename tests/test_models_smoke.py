@@ -8,7 +8,7 @@ import jax
 import jax.numpy as jnp
 import pytest
 
-from repro.configs import INPUT_SHAPES, registry
+from repro.configs import registry
 from repro.data.lm import make_lm_batches
 from repro.models import Model
 from repro.optim import adamw

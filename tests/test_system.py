@@ -5,11 +5,10 @@ the rest of the suite keeps the real single-device backend.
 """
 
 import json
-import os
 
 import pytest
 
-from tests.conftest import REPO, run_py
+from tests.conftest import run_py
 
 
 def test_sinc_experiment_end_to_end():

@@ -1,0 +1,168 @@
+#!/usr/bin/env python3
+"""Benchmark regression gate (stdlib only; CI's bench-gate job).
+
+Compares freshly produced ``BENCH_*.json`` files against the committed
+baselines. The benches write to the repo root, so CI copies the
+checked-out baselines aside *before* running them:
+
+    mkdir .bench-baseline && cp BENCH_*.json .bench-baseline/
+    python -m benchmarks.run --suite stats,serving --fast
+    python tools/bench_gate.py --baseline .bench-baseline
+
+Matching is by identity key (N, D, L, M, dtype) over each suite's
+``rows`` records — the --fast sweeps intersect the committed full
+sweeps at the acceptance point by construction, and only intersecting
+points are compared. Tolerances are generous (CI runners are noisy
+shared machines; the committed numbers may come from different
+hardware): the gate exists to catch the 4x wall-time or 1.5x peak-temp
+cliffs of a genuine fusion/megakernel regression, not 10% jitter.
+Backend mismatches (a TPU baseline checked against a CPU runner) skip
+wall/temp comparison but still enforce each suite's own acceptance
+invariant (fused_not_slower) on the fresh run.
+
+Exit code 0 = within tolerance, 1 = regression (each printed).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+KEY_FIELDS = ("N", "D", "L", "M", "dtype")
+
+
+def _key(rec: dict):
+    return tuple(rec.get(k) for k in KEY_FIELDS)
+
+
+def _wall_metrics(rec: dict):
+    return {k: v for k, v in rec.items() if k.endswith("wall_ms")}
+
+
+def _temp_metrics(rec: dict):
+    return {k: v for k, v in rec.items() if k.endswith("peak_temp_bytes")}
+
+
+def compare_suite(
+    base: dict, fresh: dict, name: str, wall_tol: float, mem_tol: float
+) -> tuple[list[str], list[str]]:
+    """Returns (failures, notes) for one suite's payload pair."""
+    failures, notes = [], []
+
+    comparable = base.get("backend") == fresh.get("backend")
+    if not comparable:
+        notes.append(
+            f"{name}: backend {base.get('backend')} (baseline) != "
+            f"{fresh.get('backend')} (fresh) — skipping wall/temp deltas"
+        )
+
+    fresh_rows = {_key(r): r for r in fresh.get("rows", [])}
+    matched = 0
+    for brow in base.get("rows", []):
+        frow = fresh_rows.get(_key(brow))
+        if frow is None or not comparable:
+            continue
+        matched += 1
+        tag = f"{name}{_key(brow)}"
+        for metric, bval in _wall_metrics(brow).items():
+            fval = frow.get(metric)
+            if fval is None or bval <= 0:
+                continue
+            if fval > wall_tol * bval:
+                failures.append(
+                    f"{tag}.{metric}: {fval:.1f} ms vs baseline "
+                    f"{bval:.1f} ms (> {wall_tol:.1f}x)"
+                )
+        for metric, bval in _temp_metrics(brow).items():
+            fval = frow.get(metric, -1)
+            if bval is None or fval is None or bval <= 0 or fval < 0:
+                continue
+            if fval > mem_tol * bval:
+                failures.append(
+                    f"{tag}.{metric}: {fval} B vs baseline {bval} B "
+                    f"(> {mem_tol:.1f}x)"
+                )
+    notes.append(f"{name}: {matched} intersecting point(s) compared")
+
+    # the suite's own acceptance invariant must hold on the fresh run
+    # regardless of hardware: fused must not regress past the unfused
+    # path by more than the noise allowance
+    acc = fresh.get("acceptance")
+    if acc is not None:
+        fused = acc.get("fused_wall_ms")
+        unfused = acc.get("unfused_wall_ms")
+        if fused is not None and unfused is not None:
+            slack = 1.25  # runner noise allowance on a same-machine ratio
+            if fused > slack * unfused:
+                failures.append(
+                    f"{name}.acceptance: fused {fused:.1f} ms vs unfused "
+                    f"{unfused:.1f} ms (> {slack:.2f}x on the same run)"
+                )
+    return failures, notes
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--baseline", required=True,
+        help="directory holding the committed BENCH_*.json copies",
+    )
+    ap.add_argument(
+        "--fresh", default=str(REPO),
+        help="directory holding the freshly written BENCH_*.json",
+    )
+    ap.add_argument("--wall-tol", type=float, default=4.0)
+    ap.add_argument("--mem-tol", type=float, default=1.5)
+    args = ap.parse_args()
+
+    baseline_dir = Path(args.baseline)
+    fresh_dir = Path(args.fresh)
+    baselines = sorted(baseline_dir.glob("BENCH_*.json"))
+    if not baselines:
+        print(f"no BENCH_*.json baselines under {baseline_dir}")
+        return 1
+
+    # union of both sides: a fresh suite without a committed baseline
+    # still gets its own acceptance invariant enforced (a suite whose
+    # baseline was deleted must not silently skip the gate)
+    names = sorted(
+        {p.name for p in baselines}
+        | {p.name for p in fresh_dir.glob("BENCH_*.json")}
+    )
+    failures, notes = [], []
+    for name in names:
+        bpath = baseline_dir / name
+        fpath = fresh_dir / name
+        if not fpath.exists():
+            failures.append(f"{name}: fresh run missing ({fpath})")
+            continue
+        fresh = json.loads(fpath.read_text())
+        if bpath.exists():
+            base = json.loads(bpath.read_text())
+        else:
+            base = {"rows": [], "backend": None}
+            notes.append(
+                f"{Path(name).stem}: no committed baseline — acceptance "
+                "invariant only"
+            )
+        f, n = compare_suite(
+            base, fresh, Path(name).stem, args.wall_tol, args.mem_tol
+        )
+        failures.extend(f)
+        notes.extend(n)
+
+    for n in notes:
+        print(f"note: {n}")
+    if failures:
+        print("\nBENCH REGRESSION:")
+        print("\n".join(f"  {f}" for f in failures))
+        return 1
+    print(f"bench gate OK ({len(names)} suite file(s))")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

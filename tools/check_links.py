@@ -36,6 +36,7 @@ def md_files():
 #: leniency — a rendered link resolves relative to its file only
 CODE_ROOTS = (
     "", "src", "src/repro", "src/repro/core", "src/repro/kernels",
+    "src/repro/serving", "src/repro/launch",
 )
 
 

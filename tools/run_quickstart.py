@@ -1,9 +1,10 @@
 #!/usr/bin/env python3
-"""Run the README quickstart verbatim (CI's docs job).
+"""Run every README ```python block verbatim (CI's docs job).
 
-Extracts the first ```python fenced block from README.md and executes
-it with ``src/`` on the import path — if the quickstart drifts from the
-code, this fails, not a new user.
+Extracts each ```python fenced block from README.md — the 60-second
+quickstart and the serving how-to — and executes them in order, each
+in a fresh namespace, with ``src/`` on the import path. If a snippet
+drifts from the code, this fails, not a new user.
 """
 
 from __future__ import annotations
@@ -17,17 +18,20 @@ REPO = Path(__file__).resolve().parent.parent
 
 def main() -> int:
     text = (REPO / "README.md").read_text(encoding="utf-8")
-    m = re.search(r"```python\n(.*?)```", text, re.DOTALL)
-    if not m:
-        print("README.md has no ```python quickstart block")
+    blocks = re.findall(r"```python\n(.*?)```", text, re.DOTALL)
+    if not blocks:
+        print("README.md has no ```python blocks")
         return 1
-    snippet = m.group(1)
     sys.path.insert(0, str(REPO / "src"))
-    print("--- running README quickstart ---")
-    print(snippet)
-    print("---------------------------------")
-    exec(compile(snippet, "README.md:quickstart", "exec"), {})
-    print("quickstart OK")
+    for i, snippet in enumerate(blocks, 1):
+        print(f"--- running README python block {i}/{len(blocks)} ---")
+        print(snippet)
+        print("---------------------------------")
+        exec(  # noqa: S102 — executing our own documented snippets is the point
+            compile(snippet, f"README.md:python-block-{i}", "exec"), {}
+        )
+        print(f"block {i} OK")
+    print(f"quickstart OK ({len(blocks)} block(s))")
     return 0
 
 
