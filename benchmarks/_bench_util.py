@@ -2,27 +2,24 @@
 
 ``stats_bench`` (feature->moment) and ``serving_bench`` (predict) time
 the same way on purpose — one warm-up call, block_until_ready-bracketed
-repeats, and best-effort peak-temp from the compiled program's memory
-analysis — so their BENCH_*.json numbers stay methodology-comparable
-and a timing tweak lands in both.
+repeats interleaved between the unfused and fused subjects (so
+machine-speed drift cancels out of the reported ratio), and best-effort
+peak-temp from the compiled program's memory analysis — so their
+BENCH_*.json numbers stay methodology-comparable and a timing tweak
+lands in both. The timing harness itself lives in
+``repro.kernels.autotune`` (re-exported here) so the autotuner's sweep
+measurements and the committed bench numbers are produced by the exact
+same code path.
 """
 
 from __future__ import annotations
 
-import time
-
 import jax
 
-
-def timeit_ms(fn, *args, repeats=3):
-    """Mean wall ms over `repeats` calls after one warm-up call."""
-    out = fn(*args)
-    jax.block_until_ready(out)
-    t0 = time.perf_counter()
-    for _ in range(repeats):
-        out = fn(*args)
-    jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / repeats * 1e3
+from repro.kernels.autotune import (  # noqa: F401  (shared harness)
+    paired_timeit_ms,
+    timeit_ms,
+)
 
 
 def temp_bytes(jitted, *args):
@@ -37,17 +34,25 @@ def temp_bytes(jitted, *args):
 
 def fused_vs_unfused_sweep(
     fast, rows, records, *,
-    unfused, fused, fused_name, problem, flops_fn, tag_prefix,
+    unfused, fused_factory, problem, flops_fn, tag_prefix,
     default_point,
 ):
     """The shared N-sweep + acceptance scaffold of both plane benches.
 
-    Times `unfused` and `fused` over an N sweep of `default_point`
-    (plus one f32 row), appends CSV `rows` and JSON `records` in the
-    schema tools/bench_gate.py matches on (identity = N/D/L/M/dtype),
-    and returns the acceptance record for the default point: fused
-    reported no slower than unfused.
+    Times `unfused` and the factory-built fused path over an N sweep of
+    `default_point` (plus one f32 row), appends CSV `rows` and JSON
+    `records` in the schema tools/bench_gate.py matches on (identity =
+    N/D/L/M/dtype), and returns the acceptance record for the default
+    point: fused reported no slower than unfused.
 
+    fused_factory(pt) -> (fn, fused_name, degenerate): the fused
+    callable for one point — per-point so a tuned block config
+    (kernels/autotune.py) can differ across the sweep; fused_name
+    records which config ran. `degenerate` marks a config whose fused
+    program is *identical* to the unfused subject (scan chunk >= N):
+    there is only one executable, so it is timed once and the speedup
+    is 1.0 by identity — not a coin flip between two timings of the
+    same program.
     problem(N, D, L, M, dtype) -> the positional args both paths take;
     flops_fn(pt) -> useful flops for the derived gflops column.
     """
@@ -61,10 +66,21 @@ def fused_vs_unfused_sweep(
     acceptance = None
     for pt in points:
         args = problem(pt["N"], pt["D"], pt["L"], pt["M"], pt["dtype"])
-        reps = 2 if fast else 3
+        reps = 2 if fast else 5
+        fused, fused_name, degenerate = fused_factory(pt)
+        if degenerate:
+            # one executable: chunk >= N makes the fused scan the
+            # unfused program; time it once, the ratio is 1 by identity
+            u_ms = f_ms = timeit_ms(fused, *args, repeats=2 * reps)
+        else:
+            # interleaved timing: the ratio survives machine-speed drift
+            u_ms, f_ms = paired_timeit_ms(
+                [unfused, fused], *args, repeats=reps
+            )
         res = {}
-        for name, fn in [("unfused", unfused), ("fused", fused)]:
-            ms = timeit_ms(fn, *args, repeats=reps)
+        for name, fn, ms in [
+            ("unfused", unfused, u_ms), ("fused", fused, f_ms),
+        ]:
             peak = temp_bytes(fn, *args)
             res[name] = dict(wall_ms=ms, peak_temp_bytes=peak)
             tag = f"{tag_prefix}/{name}_N{pt['N']}_L{pt['L']}_{pt['dtype']}"
@@ -108,3 +124,44 @@ def fused_vs_unfused_sweep(
                 f"unfused_ms={acceptance['unfused_wall_ms']:.0f}",
             ))
     return acceptance
+
+
+def tuned_fused_factory(op, *, tune=False, fast=False):
+    """A fused_factory consulting (or regenerating) the tuned cache.
+
+    tune=False: per-point config from ``autotune.lookup`` (the committed
+    TUNED_kernels.json), falling back to the hard-coded defaults on a
+    miss — exactly what the dispatch wrappers do at tuning="cached".
+    tune=True: run the sweep-and-cache ``autotune.tune`` for the point
+    first (force=True: re-measure even over an existing entry), so a
+    ``--tune`` bench run refreshes TUNED_kernels.json as it goes.
+    """
+    from repro.kernels import autotune
+
+    backend = jax.default_backend()
+    impl = "pallas" if backend == "tpu" else "scan"
+
+    def factory(pt):
+        dims = dict(
+            N=pt["N"], D=pt["D"], L=pt["L"], M=pt["M"], dtype=pt["dtype"],
+        )
+        if tune:
+            cfg = autotune.tune(
+                op, **dims, impl=impl, repeats=2 if fast else 3, force=True,
+            )
+            tag = "tuned"
+        else:
+            cfg = autotune.lookup(op, **dims, impl=impl)
+            tag = "cached" if cfg is not None else "default"
+            if cfg is None:
+                cfg = dict(autotune.DEFAULTS[(op, impl)])
+        point = autotune.TunePoint(op=op, impl=impl, backend=backend, **dims)
+        fn = autotune.candidate_fn(point, cfg)
+        # scan chunk >= N: the streaming path degenerates to the exact
+        # unfused program (see elm_stats_scan / elm_predict_scan)
+        degenerate = impl == "scan" and cfg.get("chunk", 0) >= pt["N"]
+        cfg_s = ",".join(f"{k}={v}" for k, v in sorted(cfg.items()))
+        name = f"{impl}({cfg_s};{tag}" + (";=unfused)" if degenerate else ")")
+        return fn, name, degenerate
+
+    return factory

@@ -64,10 +64,12 @@ def bench_stats_profile():
     utilization the statistics plane sustains on the full Algorithm 1
     steps 1-3, not just the moment contraction. Includes an
     interpret-mode correctness row for the Pallas kernel, mirroring
-    bench_gram's.
+    bench_gram's, and a tuned-vs-default comparison row showing what
+    the autotuned cache (kernels/autotune.py) buys over the hard-coded
+    block config at each point.
     """
     from repro.core import features, stats
-    from repro.kernels import elm_stats_ops
+    from repro.kernels import autotune, elm_stats_ops
     from repro.kernels.elm_stats import elm_stats_pallas
 
     rows = list(bench_gram()[0])  # the gram numbers, for side-by-side
@@ -91,6 +93,33 @@ def bench_stats_profile():
             f"kernels/elm_stats_{impl}_N{N}_L{L}", us,
             f"gflops={flops/us/1e3:.2f};fused=feature+gram+cross",
         ))
+        # tuned-vs-default: the cache's config (nearest-N fallback
+        # included) against the hard-coded default at the same point
+        point = autotune.TunePoint(
+            op="stats", impl=impl, N=N, D=D, L=L, M=M,
+            dtype="float32", backend=jax.default_backend(),
+        )
+        default_cfg = {
+            k: min(v, N if k != "block_l" else L)
+            for k, v in autotune.DEFAULTS[("stats", impl)].items()
+        }
+        tuned_cfg = autotune.lookup("stats", N, D, L, M, "float32", impl=impl)
+        if tuned_cfg is None or tuned_cfg == default_cfg:
+            rows.append((
+                f"kernels/elm_stats_tuned_N{N}_L{L}", 0.0,
+                "tuned=default (cache miss or same config)",
+            ))
+        else:
+            us_d = _timeit_us(autotune.candidate_fn(point, default_cfg),
+                              X, W, b, T)
+            us_t = _timeit_us(autotune.candidate_fn(point, tuned_cfg),
+                              X, W, b, T)
+            cfg_s = ",".join(f"{k}={v}" for k, v in sorted(tuned_cfg.items()))
+            rows.append((
+                f"kernels/elm_stats_tuned_N{N}_L{L}", us_t,
+                f"tuned({cfg_s})_speedup={us_d / max(us_t, 1e-9):.2f}x"
+                f";default_us={us_d:.0f}",
+            ))
     # interpret-mode kernel correctness row (vs the statistics plane)
     fmap = features.make_random_features(jax.random.key(1), D, 64)
     X = jax.random.normal(jax.random.key(2), (256, D))

@@ -4,6 +4,12 @@ the dry-run sweep. Prints ``name,us_per_call,derived`` CSV.
 
 Usage:
   PYTHONPATH=src python -m benchmarks.run [--suite fig3,fig4,...] [--fast]
+      [--tune]
+
+``--tune`` makes the stats/serving suites re-run the kernel autotuner
+(kernels/autotune.py) at every swept point before benching it,
+refreshing TUNED_kernels.json — the nightly CI job runs
+``--tune --fast`` and uploads the fresh cache as an artifact.
 """
 
 from __future__ import annotations
@@ -79,6 +85,11 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--suite", default=None, help="comma-separated subset")
     ap.add_argument("--fast", action="store_true")
+    ap.add_argument(
+        "--tune", action="store_true",
+        help="re-run the kernel autotuner at each stats/serving sweep "
+        "point (refreshes TUNED_kernels.json) before benching",
+    )
     args = ap.parse_args()
     # The fidelity reproductions invert ill-conditioned Gram matrices
     # (C up to 2^14); the paper's MATLAB runs were f64 — match it.
@@ -102,8 +113,8 @@ def main() -> None:
                 kw = {"rounds": 1000}
             if args.fast and name == "compression":
                 kw = {"rounds": 600}
-            if args.fast and name in ("stats", "serving"):
-                kw = {"fast": True}
+            if name in ("stats", "serving"):
+                kw = {"fast": args.fast, "tune": args.tune}
             rows, _ = fn(**kw)
             for r in rows:
                 print(f"{r[0]},{r[1]:.1f},{r[2]}")

@@ -1,6 +1,7 @@
 """Serving-plane benchmark: the fused predict pipeline vs the unfused
 materialize-H-then-matmul path, plus the micro-batching server under a
-scripted request stream with hot-swap on and off.
+scripted request stream with hot-swap on and off, plus the
+continuous-batching server under bursty arrivals.
 
 Writes a machine-readable ``BENCH_serving.json`` at the repo root —
 the inference-side twin of ``BENCH_stats.json``. The acceptance point
@@ -12,13 +13,22 @@ Paths under test (both jit-compiled, never interpret mode):
     extra HBM round trip of H).
   * fused   — on TPU the Pallas kernel (kernels/elm_predict.py, H lives
     in VMEM tiles only); elsewhere the lax.scan streaming
-    implementation (kernels/elm_predict_ref.elm_predict_scan).
+    implementation (kernels/elm_predict_ref.elm_predict_scan). The
+    block/chunk config comes from the tuned cache per point
+    (``tune=True`` refreshes TUNED_kernels.json first).
 
 Server rows: a deterministic mixed-size request stream drained through
 ``serving.ELMServer`` — throughput (rows/s) and p50/p99 request latency
-with the beta store hot-swapping mid-traffic (a publish every few
-flushes, as ``stream_chunk(publish_to=...)`` would produce) vs frozen
-on one snapshot.
+with the beta store hot-swapping mid-traffic vs frozen on one snapshot.
+
+Bursty rows: the same requests arriving in *bursts* on a virtual clock,
+served by tick-flushed FIFO (``ELMServer``, flush every ``tick_ms``)
+vs ``ContinuousELMServer`` stepping at every arrival. Virtual time
+advances by each launch's *measured* wall time plus the scripted
+inter-arrival gaps, so the latency distributions mix real compute cost
+with realistic queueing delay; the continuous row also checks bitwise
+response parity against FIFO on the pinned stream, and an int8-beta
+arm records the quantized-serving bytes/error tradeoff.
 """
 
 from __future__ import annotations
@@ -31,15 +41,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks._bench_util import fused_vs_unfused_sweep
+from benchmarks._bench_util import fused_vs_unfused_sweep, tuned_fused_factory
 
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 BENCH_JSON = os.path.join(REPO_ROOT, "BENCH_serving.json")
 
 # the acceptance point from the issue: N=65536, L=512, bf16
 DEFAULT_POINT = dict(N=65536, D=64, L=512, M=8, dtype="bfloat16")
-SCAN_CHUNK = 4096
 BUCKETS = (64, 256, 1024)
+SLOTS = 256  # continuous-batching in-flight batch (and FIFO bucket) rows
+TICK_MS = 20.0  # the FIFO arm's flush cadence under bursty arrivals
 
 
 def _problem(N, D, L, M, dtype):
@@ -52,46 +63,26 @@ def _problem(N, D, L, M, dtype):
     return X, W, b, beta
 
 
-def _paths():
-    from repro.kernels.elm_predict_ref import (
-        elm_predict_scan, predict_reference,
-    )
+def _unfused():
+    from repro.kernels.elm_predict_ref import predict_reference
 
     @jax.jit
     def unfused(X, W, b, beta):
         return predict_reference(X, W, b, beta, activation="sigmoid")
 
-    on_tpu = jax.default_backend() == "tpu"
-    if on_tpu:
-        from repro.kernels.elm_predict import elm_predict_pallas
-
-        def fused(X, W, b, beta):
-            return elm_predict_pallas(X, W, b, beta, activation="sigmoid")
-
-        fused = jax.jit(fused)
-        fused_name = "pallas"
-    else:
-
-        @jax.jit
-        def fused(X, W, b, beta):
-            return elm_predict_scan(
-                X, W, b, beta, activation="sigmoid", chunk=SCAN_CHUNK
-            )
-
-        fused_name = f"scan(chunk={SCAN_CHUNK})"
-    return unfused, fused, fused_name
+    return unfused
 
 
-def _bench_kernel(fast, rows, records):
-    unfused, fused, fused_name = _paths()
+def _bench_kernel(fast, rows, records, tune):
     acceptance = fused_vs_unfused_sweep(
         fast, rows, records,
-        unfused=unfused, fused=fused, fused_name=fused_name,
+        unfused=_unfused(),
+        fused_factory=tuned_fused_factory("predict", tune=tune, fast=fast),
         problem=_problem,
         flops_fn=lambda pt: 2 * pt["N"] * pt["L"] * (pt["D"] + pt["M"]),
         tag_prefix="serving", default_point=DEFAULT_POINT,
     )
-    return acceptance, fused_name
+    return acceptance
 
 
 def _request_sizes(num_requests, rng):
@@ -182,23 +173,179 @@ def _bench_server(fast, rows):
     return out
 
 
-def bench_serving(fast: bool = False):
+def _bursty_stream(fast, D):
+    """Bursts of small requests on a virtual-ms arrival timeline."""
+    rng = np.random.default_rng(7)
+    num_bursts = 8 if fast else 24
+    per_burst = 6
+    gap_ms = 25.0
+    arrivals = []  # (arrive_vt_ms, x, node)
+    for bi in range(num_bursts):
+        t = bi * gap_ms + float(rng.uniform(0.0, 3.0))
+        for j in range(per_burst):
+            n = int(rng.choice([1, 4, 16, 48], p=[0.3, 0.3, 0.25, 0.15]))
+            x = rng.standard_normal((n, D)).astype(np.float32)
+            arrivals.append((t + 0.1 * j, x, (bi * per_burst + j) % 4))
+    return arrivals
+
+
+def _drain_fifo(srv, arrivals, tick_ms):
+    """Tick-flushed FIFO on virtual time; {uid: (latency_ms, y)}."""
+    vt = 0.0
+    submit_vt, done = {}, {}
+
+    def flush_at(t):
+        nonlocal vt
+        vt = max(vt, t)
+        t0 = time.perf_counter()
+        served = srv.flush()
+        vt += (time.perf_counter() - t0) * 1e3
+        for r in served:
+            done[r.uid] = (vt - submit_vt[r.uid], r.y)
+
+    pending = 0
+    for at, x, node in arrivals:
+        # any tick boundaries before this arrival flush the queue
+        while pending:
+            tick = (vt // tick_ms + 1) * tick_ms
+            if tick > at:
+                break
+            flush_at(tick)
+            pending = 0
+        vt = max(vt, at)
+        uid = srv.submit(x, node=node)
+        submit_vt[uid] = at
+        pending += 1
+    if pending:
+        flush_at((vt // tick_ms + 1) * tick_ms)
+    return done
+
+
+def _drain_continuous(srv, arrivals):
+    """Step-at-arrival continuous serving; {uid: (latency_ms, y)}."""
+    vt = 0.0
+    submit_vt, done = {}, {}
+
+    def step(**kw):
+        nonlocal vt
+        t0 = time.perf_counter()
+        served = srv.step(**kw)
+        vt += (time.perf_counter() - t0) * 1e3
+        for r in served:
+            done[r.uid] = (vt - submit_vt[r.uid], r.y)
+
+    for at, x, node in arrivals:
+        vt = max(vt, at)
+        uid = srv.submit(x, node=node)
+        submit_vt[uid] = at
+        step()
+    while srv._pending:
+        step(force=True)
+    return done
+
+
+def _bench_bursty(fast, rows):
+    from repro.core.features import make_random_features
+    from repro.serving import BetaStore, ContinuousELMServer, ELMServer
+
+    D, L, M, V = DEFAULT_POINT["D"], DEFAULT_POINT["L"], DEFAULT_POINT["M"], 4
+    fmap = make_random_features(jax.random.key(1), D, L)
+    betas0 = jax.random.normal(
+        jax.random.key(2), (V, L, M), dtype=jnp.float32
+    )
+    arrivals = _bursty_stream(fast, D)
+
+    def warmed(srv):
+        srv.predict(np.zeros((SLOTS, D), np.float32))
+        for k in srv.metrics:
+            srv.metrics[k] = [] if k == "latencies_s" else 0
+        # the warm-up call quantized one node's beta into the int8
+        # cache; drop it so the drain's beta_bytes counts every node
+        srv._beta_q.clear()
+        return srv
+
+    fifo = warmed(ELMServer(fmap, BetaStore(betas0), buckets=(SLOTS,)))
+    fifo_done = _drain_fifo(fifo, arrivals, TICK_MS)
+    cont = warmed(ContinuousELMServer(fmap, BetaStore(betas0), slots=SLOTS))
+    cont_done = _drain_continuous(cont, arrivals)
+
+    assert set(fifo_done) == set(cont_done)
+    bitwise = all(
+        np.array_equal(fifo_done[u][1], cont_done[u][1]) for u in fifo_done
+    )
+    out = {"tick_ms": TICK_MS, "slots": SLOTS, "num_requests": len(arrivals)}
+    for arm, done, srv in (("fifo", fifo_done, fifo),
+                           ("continuous", cont_done, cont)):
+        lats = np.asarray([lat for lat, _ in done.values()])
+        out[arm] = dict(
+            p50_ms=float(np.percentile(lats, 50)),
+            p99_ms=float(np.percentile(lats, 99)),
+            mean_ms=float(np.mean(lats)),
+            batches=srv.metrics["batches"],
+        )
+        rows.append((
+            f"serving/bursty_{arm}_req{len(arrivals)}",
+            out[arm]["mean_ms"] * 1e3,
+            f"p50_ms={out[arm]['p50_ms']:.2f};"
+            f"p99_ms={out[arm]['p99_ms']:.2f};"
+            f"batches={out[arm]['batches']}",
+        ))
+    out["p99_improvement"] = out["fifo"]["p99_ms"] / max(
+        out["continuous"]["p99_ms"], 1e-9
+    )
+    out["bitwise_match"] = bitwise
+
+    # int8-beta arm: the bytes/error tradeoff on the same stream
+    q = warmed(ContinuousELMServer(
+        fmap, BetaStore(betas0), slots=SLOTS, beta_mode="int8",
+    ))
+    t0 = time.perf_counter()
+    q_done = _drain_continuous(q, arrivals)
+    wall_ms = (time.perf_counter() - t0) * 1e3
+    err = max(
+        float(np.max(np.abs(q_done[u][1] - cont_done[u][1]))
+              / (np.max(np.abs(cont_done[u][1])) + 1e-9))
+        for u in cont_done
+    )
+    out["int8"] = dict(
+        max_rel_err=err,
+        beta_bytes=q.metrics["beta_bytes"],
+        wall_ms=wall_ms,
+    )
+    rows.append((
+        f"serving/bursty_int8_req{len(arrivals)}", wall_ms * 1e3,
+        f"max_rel_err={err:.4f};beta_bytes={q.metrics['beta_bytes']}",
+    ))
+    return out
+
+
+def bench_serving(fast: bool = False, tune: bool = False):
     """fused-vs-unfused predict + server traffic; CSV rows + JSON.
 
-    Emits CSV rows and writes BENCH_serving.json at the repo root.
+    Emits CSV rows and writes BENCH_serving.json at the repo root. With
+    ``tune=True`` each swept point is re-tuned (sweep-and-cache into
+    TUNED_kernels.json) before it is benched.
     """
     rows = []
     records = []
-    acceptance, fused_name = _bench_kernel(fast, rows, records)
+    acceptance = _bench_kernel(fast, rows, records, tune)
     server = _bench_server(fast, rows)
+    bursty = _bench_bursty(fast, rows)
+    if acceptance is not None:
+        acceptance = dict(
+            acceptance,
+            continuous_bitwise_match=bursty["bitwise_match"],
+            continuous_p99_improved=bursty["p99_improvement"] > 1.0,
+        )
 
     payload = dict(
         suite="serving",
         backend=jax.default_backend(),
-        fused_impl=fused_name,
         default_point=DEFAULT_POINT,
+        tuned=tune,
         rows=records,
         server=server,
+        bursty=bursty,
         acceptance=acceptance,
     )
     with open(BENCH_JSON, "w") as fh:

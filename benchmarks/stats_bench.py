@@ -5,15 +5,21 @@ Measures wall time and peak temporary memory across an N sweep and
 writes a machine-readable ``BENCH_stats.json`` at the repo root — the
 bench trajectory for the paper's compute hot spot (Algorithm 1 steps
 1-3). The acceptance point is (N=65536, L=512, bf16): the fused path
-must be reported no slower than the unfused matmul path.
+must be reported no slower than the unfused matmul path — and with the
+tuned cache (kernels/autotune.py) the same must hold at *every* swept
+row (tools/bench_gate.py enforces it on the committed JSON).
 
 Paths under test (both jit-compiled, never interpret mode):
-  * unfused — H = g(XW + b) materialized at (N, L), then the gram /
-    cross oracles (two extra HBM round trips of H).
+  * unfused — H = g(XW + b) materialized at (N, L) in the operand
+    dtype (the fused paths' H-tile policy, so both subjects compute
+    identical moments), then the gram / cross oracles (two extra HBM
+    round trips of H).
   * fused   — on TPU the Pallas kernel (kernels/elm_stats.py, H lives
     in VMEM tiles only); elsewhere the lax.scan streaming
     implementation (kernels/elm_stats_ref.elm_stats_scan), whose peak
-    temp is one chunk's working set.
+    temp is one chunk's working set. The block/chunk config comes from
+    the tuned cache per point (``tune=True`` re-measures and refreshes
+    TUNED_kernels.json first).
 """
 
 from __future__ import annotations
@@ -24,14 +30,13 @@ import os
 import jax
 import jax.numpy as jnp
 
-from benchmarks._bench_util import fused_vs_unfused_sweep
+from benchmarks._bench_util import fused_vs_unfused_sweep, tuned_fused_factory
 
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 BENCH_JSON = os.path.join(REPO_ROOT, "BENCH_stats.json")
 
 # the acceptance point from the issue: N=65536, L=512, bf16
 DEFAULT_POINT = dict(N=65536, D=64, L=512, M=8, dtype="bfloat16")
-SCAN_CHUNK = 8192
 
 
 def _problem(N, D, L, M, dtype):
@@ -44,49 +49,35 @@ def _problem(N, D, L, M, dtype):
     return X, W, b, T
 
 
-def _paths():
-    from repro.kernels.elm_stats_ref import (
-        elm_stats_scan, hidden_reference,
-    )
+def _unfused():
+    from repro.kernels.elm_stats_ref import hidden_reference
     from repro.kernels.gram_ref import cross_reference, gram_reference
 
     @jax.jit
     def unfused(X, W, b, T):
-        H = hidden_reference(X, W, b, "sigmoid")
+        # materialize H in the operand dtype — the same H-tile dtype
+        # policy as the fused kernel/scan (elm_stats.py docstring), so
+        # both subjects compute the *same* moments and the comparison
+        # is fused-vs-unfused, not bf16-vs-f32 arithmetic
+        H = hidden_reference(X, W, b, "sigmoid").astype(X.dtype)
         return gram_reference(H), cross_reference(H, T)
 
-    on_tpu = jax.default_backend() == "tpu"
-    if on_tpu:
-        from repro.kernels.elm_stats import elm_stats_pallas
-
-        def fused(X, W, b, T):
-            return elm_stats_pallas(X, W, b, T, activation="sigmoid")
-
-        fused = jax.jit(fused)
-        fused_name = "pallas"
-    else:
-
-        @jax.jit
-        def fused(X, W, b, T):
-            return elm_stats_scan(
-                X, W, b, T, activation="sigmoid", chunk=SCAN_CHUNK
-            )
-
-        fused_name = f"scan(chunk={SCAN_CHUNK})"
-    return unfused, fused, fused_name
+    return unfused
 
 
-def bench_stats(fast: bool = False):
+def bench_stats(fast: bool = False, tune: bool = False):
     """fused-vs-unfused wall time + peak memory, N sweep + acceptance.
 
-    Emits CSV rows and writes BENCH_stats.json at the repo root.
+    Emits CSV rows and writes BENCH_stats.json at the repo root. With
+    ``tune=True`` each swept point is re-tuned (sweep-and-cache into
+    TUNED_kernels.json) before it is benched.
     """
     rows = []
     records = []
-    unfused, fused, fused_name = _paths()
     acceptance = fused_vs_unfused_sweep(
         fast, rows, records,
-        unfused=unfused, fused=fused, fused_name=fused_name,
+        unfused=_unfused(),
+        fused_factory=tuned_fused_factory("stats", tune=tune, fast=fast),
         problem=_problem,
         flops_fn=lambda pt: (
             2 * pt["N"] * pt["D"] * pt["L"]
@@ -98,8 +89,8 @@ def bench_stats(fast: bool = False):
     payload = dict(
         suite="stats",
         backend=jax.default_backend(),
-        fused_impl=fused_name,
         default_point=DEFAULT_POINT,
+        tuned=tune,
         rows=records,
         acceptance=acceptance,
     )

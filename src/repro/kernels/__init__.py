@@ -20,6 +20,11 @@
   attn.py / attn_ops.py / attn_ref.py   causal/SWA GQA flash attention
   decode_attn.py                        flash-decode (one token vs a
                                         long KV cache, serving hot path)
+  autotune.py                           measured block/chunk autotuner:
+                                        roofline-pruned candidate sweep
+                                        cached to TUNED_kernels.json;
+                                        the elm_* ops wrappers consult
+                                        it by default (tuning="cached")
 
 Each kernel is a pl.pallas_call with explicit BlockSpec VMEM tiling,
 validated against its pure-jnp oracle in interpret mode (tests/).
@@ -28,6 +33,7 @@ ops.py wrappers dispatch kernel-on-TPU / oracle-elsewhere.
 
 from repro.kernels import (  # noqa: F401
     attn_ops,
+    autotune,
     elm_predict_ops,
     elm_stats_ops,
     gram_ops,

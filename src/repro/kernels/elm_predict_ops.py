@@ -8,6 +8,20 @@ Backend policy (mirrors elm_stats_ops):
     streaming implementation — fused-by-construction on CPU/GPU (peak
     memory is one chunk's working set, not the (N, L) hidden matrix)
 
+Block-knob mapping (Pallas grid -> scan fallback): ``block_n`` maps to
+the scan's ``chunk`` (rows resident per streaming step); ``block_l``
+has no scan equivalent (the scan computes all L hidden columns per
+chunk) and a non-None value raises instead of being silently dropped.
+Passing both ``block_n`` and ``chunk`` to the scan path is a conflict
+and raises. The shared mapper is ``elm_stats_ops.scan_kwargs``.
+
+Tuning policy (kernels/autotune.py): ``tuning="cached"`` (default)
+consults the measured-winner cache (TUNED_kernels.json) for this
+problem point and backend — explicit block kwargs always win, and a
+cache miss keeps the hard-coded defaults, so cold-start behavior is
+unchanged. ``tuning="off"`` never consults; ``tuning={...}`` applies
+an explicit config dict.
+
 ``predict_map`` is the FeatureMap-level entry point every prediction
 consumer routes through (``ELM.__call__``, ``dc_elm.node_predict``,
 ``serving.elm_server``): fusable affine/RBF maps take the fused path
@@ -20,6 +34,9 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import autotune
+from repro.kernels.elm_stats_ops import scan_kwargs
+
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
@@ -27,21 +44,33 @@ def _on_tpu() -> bool:
 
 def fused_predict(
     X, W, b, beta, *, activation: str = "sigmoid",
-    use_kernel: bool | None = None, **kw,
+    use_kernel: bool | None = None, tuning="cached", **kw,
 ):
     """Y = g(X W + b) @ beta without materializing H.
 
     For activation="rbf" pass W = centers^T and b = gamma. Returns the
     oracle's result dtype (the promoted X/W/beta chain) with f32
-    accumulation inside.
+    accumulation inside. ``tuning`` selects the block-knob policy (see
+    module docstring).
     """
     from repro.kernels.elm_predict_ref import predict_dtype
 
     out_dtype = predict_dtype(X, W, beta)
     use = _on_tpu() if use_kernel is None else use_kernel
+    kw = autotune.resolve_config(
+        kw, tuning, op="predict", impl="pallas" if use else "scan",
+        N=X.shape[0], D=X.shape[1], L=W.shape[1], M=beta.shape[1],
+        dtype=X.dtype,
+    )
     if use:
         from repro.kernels.elm_predict import elm_predict_pallas
 
+        if kw.get("chunk") is not None:
+            raise ValueError(
+                "chunk is the scan-fallback knob; the Pallas kernel "
+                "takes block_n/block_l"
+            )
+        kw.pop("chunk", None)
         Y = elm_predict_pallas(
             X, W, b, beta, activation=activation,
             interpret=not _on_tpu(), **kw,
@@ -49,17 +78,14 @@ def fused_predict(
         return Y.astype(out_dtype)
     from repro.kernels.elm_predict_ref import elm_predict_scan
 
-    kw.pop("block_l", None)
-    chunk = kw.pop("block_n", None)
-    if chunk is not None:
-        kw["chunk"] = chunk
     return elm_predict_scan(
-        X, W, b, beta, activation=activation, **kw
+        X, W, b, beta, activation=activation, **scan_kwargs(kw)
     ).astype(out_dtype)
 
 
 def predict_map(
-    x, feature_map, beta, *, use_kernel: bool | None = None, **kw,
+    x, feature_map, beta, *, use_kernel: bool | None = None,
+    tuning="cached", **kw,
 ):
     """f(x) = h(x) @ beta for any FeatureMap, fused where fusable.
 
@@ -84,6 +110,6 @@ def predict_map(
         return feature_map(x) @ beta
     Y = fused_predict(
         rows, W, b, beta, activation=activation, use_kernel=use_kernel,
-        **kw,
+        tuning=tuning, **kw,
     )
     return Y.reshape(*lead, beta.shape[-1])

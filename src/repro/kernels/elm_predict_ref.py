@@ -55,15 +55,24 @@ def elm_predict_scan(X, W, b, beta, *, activation="sigmoid", chunk=4096):
         )
         return jnp.zeros((0, M), op)
     chunk = min(chunk, N)
+    op = jnp.promote_types(
+        jnp.promote_types(X.dtype, W.dtype), beta.dtype
+    )
+    beta_op = beta.astype(op)
+    if chunk == N:
+        # single-chunk point: one fused jit, no scan machinery —
+        # bitwise-identical to the one-step scan
+        h = hidden_reference(X, W, b, activation).astype(op)
+        return jax.lax.dot_general(
+            h, beta_op,
+            dimension_numbers=(((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ).astype(op)
     pN = (-N) % chunk
     if pN:
         X = jnp.pad(X, ((0, pN), (0, 0)))
     K = X.shape[0] // chunk
     Xc = X.reshape(K, chunk, D)
-    op = jnp.promote_types(
-        jnp.promote_types(X.dtype, W.dtype), beta.dtype
-    )
-    beta_op = beta.astype(op)
 
     def step(_, x):
         h = hidden_reference(x, W, b, activation).astype(op)

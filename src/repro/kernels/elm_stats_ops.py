@@ -7,37 +7,92 @@ Backend policy (mirrors gram_ops):
   * otherwise        -> ``elm_stats_scan``, the jitted lax.scan
     streaming implementation — fused-by-construction on CPU/GPU (peak
     memory is one chunk's working set, not the (N, L) hidden matrix)
+
+Block-knob mapping (Pallas grid -> scan fallback):
+  * ``block_n`` (rows per grid tile) maps to the scan's ``chunk`` —
+    both are "rows resident per streaming step", and with
+    chunk == block_n the two paths accumulate in the same f32 order
+    (bitwise-pinned in tests/test_stats.py). Passing both ``block_n``
+    and ``chunk`` to the scan path is a conflict and raises.
+  * ``block_l`` (hidden columns per grid tile) has NO scan equivalent:
+    the scan computes all L hidden columns per chunk in one matmul.
+    Passing a non-None ``block_l`` to the scan path raises instead of
+    being silently dropped.
+
+Tuning policy (kernels/autotune.py): ``tuning="cached"`` (default)
+consults the measured-winner cache (TUNED_kernels.json) for this
+problem point and backend — explicit block kwargs always win, and a
+cache miss keeps the hard-coded defaults, so cold-start behavior is
+unchanged. ``tuning="off"`` never consults; ``tuning={...}`` applies
+an explicit config dict.
 """
 
 from __future__ import annotations
 
 import jax
 
+from repro.kernels import autotune
+
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
+def scan_kwargs(kw: dict) -> dict:
+    """Map Pallas block kwargs onto the scan fallback's ``chunk``.
+
+    block_n -> chunk (same streaming role); block_l has no scan
+    meaning and raises; both block_n and chunk is a conflict.
+    """
+    kw = dict(kw)
+    if kw.get("block_l") is not None:
+        raise ValueError(
+            "block_l is a Pallas grid knob with no scan-fallback "
+            "equivalent (the scan computes all L hidden columns per "
+            "chunk); pass chunk= (or block_n=, which maps to chunk) "
+            "instead, or drop block_l"
+        )
+    kw.pop("block_l", None)
+    block_n = kw.pop("block_n", None)
+    if block_n is not None:
+        if kw.get("chunk") is not None:
+            raise ValueError(
+                f"both block_n={block_n} and chunk={kw['chunk']} were "
+                "passed to the scan fallback; block_n maps to chunk — "
+                "pass exactly one"
+            )
+        kw["chunk"] = block_n
+    return kw
+
+
 def fused_moments(
     X, W, b, T, *, activation: str = "sigmoid",
-    use_kernel: bool | None = None, **kw,
+    use_kernel: bool | None = None, tuning="cached", **kw,
 ):
     """(P, Q) f32 from raw inputs without materializing H.
 
-    For activation="rbf" pass W = centers^T and b = gamma.
+    For activation="rbf" pass W = centers^T and b = gamma. ``tuning``
+    selects the block-knob policy (see module docstring).
     """
     use = _on_tpu() if use_kernel is None else use_kernel
+    kw = autotune.resolve_config(
+        kw, tuning, op="stats", impl="pallas" if use else "scan",
+        N=X.shape[0], D=X.shape[1], L=W.shape[1], M=T.shape[1],
+        dtype=X.dtype,
+    )
     if use:
         from repro.kernels.elm_stats import elm_stats_pallas
 
+        if kw.get("chunk") is not None:
+            raise ValueError(
+                "chunk is the scan-fallback knob; the Pallas kernel "
+                "takes block_n/block_l"
+            )
+        kw.pop("chunk", None)
         return elm_stats_pallas(
             X, W, b, T, activation=activation,
             interpret=not _on_tpu(), **kw,
         )
     from repro.kernels.elm_stats_ref import elm_stats_scan
 
-    kw.pop("block_l", None)
-    chunk = kw.pop("block_n", None)
-    if chunk is not None:
-        kw["chunk"] = chunk
-    return elm_stats_scan(X, W, b, T, activation=activation, **kw)
+    return elm_stats_scan(X, W, b, T, activation=activation, **scan_kwargs(kw))

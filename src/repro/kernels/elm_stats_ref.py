@@ -48,6 +48,12 @@ def elm_stats_scan(X, W, b, T, *, activation="sigmoid", chunk=2048):
     L = W.shape[1]
     M = T.shape[1]
     chunk = min(chunk, N)
+    if chunk == N:
+        # single-chunk point: the whole pipeline is one fused jit with
+        # no scan machinery — bitwise-identical to the one-step scan
+        # (f32 accumulators start at zero; 0 + x is exact)
+        h = hidden_reference(X, W, b, activation).astype(X.dtype)
+        return gram_reference(h), cross_reference(h, T)
     pN = (-N) % chunk
     if pN:
         X = jnp.pad(X, ((0, pN), (0, 0)))
@@ -62,7 +68,9 @@ def elm_stats_scan(X, W, b, T, *, activation="sigmoid", chunk=2048):
         P, Q = carry
         x, t, start = inp
         h = hidden_reference(x, W, b, activation)
-        h = jnp.where(row_ids + start < N, h, 0.0).astype(x.dtype)
+        if pN:  # only the padded tail needs masking (g(0) != 0)
+            h = jnp.where(row_ids + start < N, h, 0.0)
+        h = h.astype(x.dtype)
         P = P + gram_reference(h)
         Q = Q + cross_reference(h, t)
         return (P, Q), None

@@ -1,6 +1,7 @@
 from repro.serving.elm_server import (
     BetaSnapshot,
     BetaStore,
+    ContinuousELMServer,
     ELMServer,
     PredictRequest,
     PredictResponse,
@@ -12,6 +13,7 @@ __all__ = [
     "BetaSnapshot",
     "BetaStore",
     "ContinuousBatchingEngine",
+    "ContinuousELMServer",
     "ELMServer",
     "PredictRequest",
     "PredictResponse",

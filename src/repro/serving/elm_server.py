@@ -36,6 +36,27 @@ Hot-swap protocol (bounded staleness):
    the store but are not picked up) — the ablation arm of
    ``benchmarks/serving_bench.py``; ``thaw()`` resumes hot-swapping.
 
+* ``ContinuousELMServer`` — the continuous-batching mode (the idiom of
+  ``examples/continuous_batching.py``, adapted to row-parallel ELM
+  inference). Instead of FIFO buckets flushed on a tick, the server
+  keeps one in-flight padded batch of ``slots`` rows per answering
+  node: every ``step()`` admits pending rows into free slots (rows
+  freed by completed requests are refilled mid-flight, and a request
+  larger than the free slots is admitted *partially*, its remaining
+  rows flowing into the next step), launches the compile-once fused
+  predict on the padded batch, and completes whatever requests have
+  all their rows served. Scheduling is deadline-aware: each request
+  may carry a deadline, the packer orders pending rows by slack
+  (earliest deadline first, FIFO among deadline-free requests), and a
+  step whose head request would miss its deadline launches immediately
+  even when the batch-fill gate (``min_fill``) says to wait.
+
+Both servers share the int8-beta serving arm: ``beta_mode="int8"``
+round-trips each served beta through the compression plane's per-tile
+stochastic int8 quantizer (core/compression.int8_roundtrip, keyed
+deterministically by snapshot version and node) — the bytes/latency
+tradeoff row of benchmarks/serving_bench.py.
+
 The server itself is a single-dispatcher object (submit/flush from one
 thread); the store is safe to publish into from another thread — the
 serve-while-train loop in ``examples/elm_serving.py`` runs training
@@ -171,10 +192,16 @@ class ELMServer:
       program. Requests longer than the largest bucket are split.
     max_staleness: how many published versions the served snapshot may
       trail the store by at flush time (0 = always re-read).
+    beta_mode: "fp32" serves the published beta as-is; "int8"
+      round-trips it through the compression plane's per-tile
+      stochastic quantizer (deterministic in version and node) — the
+      bytes/latency tradeoff arm.
     """
 
     #: p50/p99 are computed over a sliding window of this many requests
     LATENCY_WINDOW = 10_000
+
+    BETA_MODES = ("fp32", "int8")
 
     def __init__(
         self,
@@ -186,9 +213,16 @@ class ELMServer:
         use_kernel: bool | None = None,
         sample_fn: Callable | None = None,
         row_dtype=np.float32,
+        beta_mode: str = "fp32",
+        int8_tile: int = 128,
     ):
         if not buckets or list(buckets) != sorted(set(buckets)):
             raise ValueError(f"buckets must be ascending unique, got {buckets}")
+        if beta_mode not in self.BETA_MODES:
+            raise ValueError(
+                f"beta_mode must be one of {self.BETA_MODES}, got "
+                f"{beta_mode!r}"
+            )
         self.feature_map = feature_map
         self.store = store if isinstance(store, BetaStore) else BetaStore(store)
         self.buckets = tuple(int(b) for b in buckets)
@@ -196,6 +230,8 @@ class ELMServer:
         self.use_kernel = use_kernel
         self.sample_fn = sample_fn  # optional post-map (e.g. argmax)
         self.row_dtype = np.dtype(row_dtype)  # every batch packs to this
+        self.beta_mode = beta_mode
+        self.int8_tile = int(int8_tile)
         self._row_dim = getattr(feature_map, "in_dim", None)  # else 1st req
         self._snap: BetaSnapshot | None = None
         self._frozen = False
@@ -205,23 +241,17 @@ class ELMServer:
         self._rr_node = 0
         self._fns: dict[int, Callable] = {}  # bucket rows -> compiled fn
         self._parts: dict[int, list] = {}  # uid -> chunks of a split req
+        self._beta_q: dict[tuple, jax.Array] = {}  # (version, node) -> deq
         self.metrics = {
             "requests": 0, "responses": 0, "batches": 0,
-            "rows": 0, "padded_rows": 0, "swaps": 0, "latencies_s": [],
+            "rows": 0, "padded_rows": 0, "swaps": 0,
+            "beta_bytes": 0, "latencies_s": [],
         }
 
     # ------------------------------------------------------------------ api
 
-    def submit(self, x, *, node: int | None = None) -> int:
-        """Queue one request of shape (n, D) (or (D,)); returns its uid.
-
-        Rows are coerced to the server's ``row_dtype`` (one packed batch
-        = one dtype, by contract) and D must match the feature map's
-        input width (or the first request's, when the map doesn't say).
-        node pins the answering replica; default round-robin across the
-        store's V node models. Oversized requests are split into
-        max-bucket chunks here and reassembled at flush.
-        """
+    def _coerce_rows(self, x) -> np.ndarray:
+        """Validate one request's rows: (n>0, D) at the serving dtype."""
         x = np.asarray(x, dtype=self.row_dtype)
         if x.ndim == 1:
             x = x[None]
@@ -234,13 +264,31 @@ class ELMServer:
                 f"request width {x.shape[1]} != serving width "
                 f"{self._row_dim}"
             )
+        return x
+
+    def _next_node(self, node: int | None) -> int:
+        if node is not None:
+            return node
+        node = self._rr_node
+        self._rr_node = (self._rr_node + 1) % max(
+            1, self.store.snapshot().num_nodes
+        )
+        return node
+
+    def submit(self, x, *, node: int | None = None) -> int:
+        """Queue one request of shape (n, D) (or (D,)); returns its uid.
+
+        Rows are coerced to the server's ``row_dtype`` (one packed batch
+        = one dtype, by contract) and D must match the feature map's
+        input width (or the first request's, when the map doesn't say).
+        node pins the answering replica; default round-robin across the
+        store's V node models. Oversized requests are split into
+        max-bucket chunks here and reassembled at flush.
+        """
+        x = self._coerce_rows(x)
         uid = self._uid
         self._uid += 1
-        if node is None:
-            node = self._rr_node
-            self._rr_node = (self._rr_node + 1) % max(
-                1, self.store.snapshot().num_nodes
-            )
+        node = self._next_node(node)
         self.metrics["requests"] += 1
         self.metrics["rows"] += x.shape[0]
         cap = self.buckets[-1]
@@ -275,12 +323,15 @@ class ELMServer:
             for batch in self._pack(reqs):
                 served.extend(self._launch(node, batch))
         served = self._reassemble(served)
+        self._record_served(served)
+        return sorted(responses + served, key=lambda r: r.uid)
+
+    def _record_served(self, served: list) -> None:
         self.metrics["responses"] += len(served)
         lat = self.metrics["latencies_s"]
         lat.extend(r.latency_s for r in served)
         if len(lat) > self.LATENCY_WINDOW:  # long-running servers: bound it
             del lat[: len(lat) - self.LATENCY_WINDOW]
-        return sorted(responses + served, key=lambda r: r.uid)
 
     def predict(self, x, *, node: int | None = None) -> np.ndarray:
         """Synchronous single-request convenience: submit + flush.
@@ -371,6 +422,37 @@ class ELMServer:
             fn = self._fns[bucket] = jax.jit(run)
         return fn
 
+    def _beta_for(self, snap: BetaSnapshot, node: int) -> jax.Array:
+        """The served beta for one node: published, or its int8
+        round-trip (deterministic in version and node; cached per
+        snapshot so repeated launches pay quantization once)."""
+        idx = node % snap.num_nodes
+        if self.beta_mode == "fp32":
+            return snap.betas[idx]
+        key = (snap.version, idx)
+        deq = self._beta_q.get(key)
+        if deq is None:
+            from repro.core.compression import (
+                CompressionSpec, int8_roundtrip,
+            )
+
+            beta = snap.betas[idx].astype(jnp.float32)
+            flat = int8_roundtrip(
+                beta.reshape(-1), self.int8_tile,
+                jax.random.fold_in(jax.random.key(snap.version), idx),
+            )
+            deq = flat.reshape(beta.shape)
+            # hold only the live snapshot's quantized betas
+            self._beta_q = {
+                k: v for k, v in self._beta_q.items()
+                if k[0] == snap.version
+            }
+            self._beta_q[key] = deq
+            self.metrics["beta_bytes"] += CompressionSpec(
+                mode="int8", tile=self.int8_tile
+            ).message_bytes(int(beta.size))
+        return deq
+
     def _launch(self, node: int, batch: list) -> list[PredictResponse]:
         snap = self._snap
         rows = sum(r.x.shape[0] for r in batch)
@@ -380,7 +462,7 @@ class ELMServer:
         for r in batch:
             X[off:off + r.x.shape[0]] = r.x
             off += r.x.shape[0]
-        beta = snap.betas[node % snap.num_nodes]
+        beta = self._beta_for(snap, node)
         Y = np.asarray(self._compiled(bucket)(jnp.asarray(X), beta))
         self.metrics["batches"] += 1
         self.metrics["padded_rows"] += bucket - rows
@@ -420,3 +502,209 @@ class ELMServer:
                 latency_s=max(p.latency_s for p in parts),
             ))
         return whole
+
+
+# ---------------------------------------------------------------------------
+# Continuous batching
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class _Pending:
+    """One admitted-but-unfinished request in the continuous server."""
+
+    uid: int
+    x: np.ndarray
+    node: int
+    deadline: float | None
+    t_submit: float
+    served: list = dataclasses.field(default_factory=list)
+    offset: int = 0  # rows already served (mid-flight when 0 < offset < n)
+    version: int | None = None  # pinned at the request's first launch
+
+    @property
+    def remaining(self) -> int:
+        return self.x.shape[0] - self.offset
+
+    @property
+    def slack_key(self) -> tuple:
+        """EDF order: earliest deadline first, FIFO among deadline-free."""
+        return (
+            self.deadline if self.deadline is not None else float("inf"),
+            self.uid,
+        )
+
+
+class ContinuousELMServer(ELMServer):
+    """Continuous-batching ELM inference: admit every step, refill
+    freed slots mid-flight, schedule by deadline slack.
+
+    Where ``ELMServer`` packs FIFO into padded buckets and serves only
+    on ``flush()``, this server keeps one in-flight padded batch of
+    ``slots`` rows per answering node and advances it with ``step()``:
+
+    1. **Admission.** Pending requests are ordered by slack (earliest
+       deadline first; deadline-free requests FIFO behind them) and
+       their rows admitted into free slots. A request larger than the
+       free slots is admitted *partially* — its remaining rows flow
+       into the next step's batch, occupying slots freed by requests
+       that completed (the mid-flight refill of
+       ``examples/continuous_batching.py``, at row granularity).
+    2. **Launch gate.** A step launches when ``force=True``, when any
+       request is already mid-flight (never stall started work), when
+       at least ``min_fill * slots`` rows are ready, or when the head
+       request's slack has run out (``deadline - now <=
+       deadline_slack_s``) — the deadline-aware force flush. An
+       ungated step with too few rows returns [] and waits for more
+       traffic. ``min_fill=0`` (default) always launches.
+    3. **Completion.** Requests whose rows are all served complete
+       immediately; their slots are free for the next step.
+
+    Hot-swap protocol: the snapshot is re-read (same bounded-staleness
+    rule as ``ELMServer``) only at steps where *no* request is
+    mid-flight, and each request pins the version of its first launch —
+    so a request is answered by exactly one beta version even when its
+    rows span steps and publishes land in between.
+
+    ``flush()`` force-steps until drained (same contract as
+    ``ELMServer.flush``: responses in uid order, leftovers included),
+    so ``predict()`` works unchanged. ``clock`` injects a time source
+    for deterministic deadline tests.
+    """
+
+    def __init__(
+        self,
+        feature_map,
+        store,
+        *,
+        slots: int = 256,
+        min_fill: float = 0.0,
+        deadline_slack_s: float = 0.0,
+        clock: Callable[[], float] = time.perf_counter,
+        **kw,
+    ):
+        super().__init__(feature_map, store, buckets=(int(slots),), **kw)
+        if not 0.0 <= float(min_fill) <= 1.0:
+            raise ValueError(f"min_fill must be in [0, 1], got {min_fill}")
+        self.slots = int(slots)
+        self.min_fill = float(min_fill)
+        self.deadline_slack_s = float(deadline_slack_s)
+        self.clock = clock
+        self._pending: list[_Pending] = []
+        self.metrics["steps"] = 0
+        self.metrics["deadline_flushes"] = 0
+
+    # ------------------------------------------------------------------ api
+
+    def submit(self, x, *, node: int | None = None,
+               deadline: float | None = None) -> int:
+        """Queue one request; rows are admitted continuously by step().
+
+        deadline: absolute time (on the server's ``clock``) by which
+        the request should be served; orders admission (EDF) and
+        force-launches partial batches about to miss. None = FIFO
+        behind all deadlined requests.
+        """
+        x = self._coerce_rows(x)
+        uid = self._uid
+        self._uid += 1
+        node = self._next_node(node)
+        self.metrics["requests"] += 1
+        self.metrics["rows"] += x.shape[0]
+        self._pending.append(_Pending(
+            uid=uid, x=x, node=node,
+            deadline=None if deadline is None else float(deadline),
+            t_submit=self.clock(),
+        ))
+        return uid
+
+    def step(self, *, force: bool = False) -> list[PredictResponse]:
+        """One admission + launch cycle; returns completed responses."""
+        if not self._pending:
+            return []
+        now = self.clock()
+        mid_flight = any(p.offset > 0 for p in self._pending)
+        if not mid_flight:
+            # refresh only between requests: every row of a request is
+            # served by the version pinned at its first launch
+            self._refresh_snapshot()
+        self._pending.sort(key=lambda p: p.slack_key)
+        head = self._pending[0]
+        ready = sum(p.remaining for p in self._pending)
+        head_would_miss = (
+            head.deadline is not None
+            and head.deadline - now <= self.deadline_slack_s
+        )
+        launch = (
+            force
+            or mid_flight
+            or ready >= self.min_fill * self.slots
+            or head_would_miss
+        )
+        if not launch:
+            return []
+        if head_would_miss and ready < self.min_fill * self.slots:
+            self.metrics["deadline_flushes"] += 1
+        # admit rows (EDF order) into per-node batches of <= slots rows
+        batches: dict[int, list[tuple[_Pending, int, int]]] = {}
+        fill: dict[int, int] = {}
+        for p in self._pending:
+            free = self.slots - fill.get(p.node, 0)
+            take = min(free, p.remaining)
+            if take <= 0:
+                continue
+            batches.setdefault(p.node, []).append((p, p.offset, take))
+            fill[p.node] = fill.get(p.node, 0) + take
+            p.offset += take
+        snap = self._snap
+        for node, parts in batches.items():
+            X = np.zeros((self.slots, parts[0][0].x.shape[1]),
+                         self.row_dtype)
+            off = 0
+            for p, start, take in parts:
+                X[off:off + take] = p.x[start:start + take]
+                off += take
+            Y = np.asarray(self._compiled(self.slots)(
+                jnp.asarray(X), self._beta_for(snap, node)
+            ))
+            self.metrics["batches"] += 1
+            self.metrics["padded_rows"] += self.slots - off
+            off = 0
+            for p, _, take in parts:
+                if p.version is None:
+                    p.version = snap.version
+                p.served.append(Y[off:off + take])
+                off += take
+        self.metrics["steps"] += 1
+        done_at = self.clock()
+        completed = []
+        still = []
+        for p in self._pending:
+            if p.remaining == 0:
+                completed.append(PredictResponse(
+                    uid=p.uid,
+                    y=np.concatenate(p.served, axis=0),
+                    version=p.version,
+                    node=p.node % snap.num_nodes,
+                    latency_s=done_at - p.t_submit,
+                ))
+            else:
+                still.append(p)
+        self._pending = still
+        completed.sort(key=lambda r: r.uid)
+        self._record_served(completed)
+        return completed
+
+    def flush(self) -> list[PredictResponse]:
+        """Force-step until drained; responses in uid order (plus any
+        leftovers a ``predict()`` call served but did not claim)."""
+        responses = self._leftover
+        self._leftover = []
+        while self._pending:
+            responses.extend(self.step(force=True))
+        return sorted(responses, key=lambda r: r.uid)
+
+    def stats(self) -> dict:
+        m = super().stats()
+        m["pending_rows"] = sum(p.remaining for p in self._pending)
+        return m

@@ -1,0 +1,267 @@
+"""Continuous-batching server: bitwise scheduler parity with FIFO
+bucketing, deadline ordering under a scripted clock, mid-flight slot
+refill, hot-swap atomicity across admissions, and the int8-beta arm."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.features import make_random_features
+from repro.serving import BetaStore, ContinuousELMServer, ELMServer
+
+D, L, M, V = 6, 32, 4, 3
+SLOTS = 16
+
+
+@pytest.fixture
+def fmap():
+    return make_random_features(jax.random.key(0), D, L)
+
+
+@pytest.fixture
+def betas():
+    rng = np.random.default_rng(1)
+    return jnp.asarray(rng.standard_normal((V, L, M)), jnp.float32)
+
+
+def _stream(sizes, seed=2):
+    rng = np.random.default_rng(seed)
+    return [rng.standard_normal((n, D)).astype(np.float32) for n in sizes]
+
+
+class Clock:
+    """A scripted time source for deterministic deadline tests."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+# ---------------------------------------------------------------------------
+# Scheduler parity
+# ---------------------------------------------------------------------------
+
+
+def test_bitwise_parity_with_fifo_bucketing(fmap, betas):
+    """Same pinned stream through continuous and FIFO at the same
+    compiled padded shape -> bitwise-identical responses, including a
+    request larger than the slot count (partial admission)."""
+    store = BetaStore(betas)
+    reqs = _stream([3, 7, 16, 1, 40, 5, 2, 12])
+    ref = ELMServer(fmap, store, buckets=(SLOTS,))
+    for i, x in enumerate(reqs):
+        ref.submit(x, node=i % V)
+    ref_out = {r.uid: r for r in ref.flush()}
+
+    cont = ContinuousELMServer(fmap, store, slots=SLOTS)
+    for i, x in enumerate(reqs):
+        cont.submit(x, node=i % V)
+    out = {r.uid: r for r in cont.flush()}
+
+    assert set(out) == set(ref_out)
+    for uid in out:
+        assert np.array_equal(out[uid].y, ref_out[uid].y)
+        assert out[uid].version == ref_out[uid].version
+        assert out[uid].node == ref_out[uid].node
+
+
+def test_parity_under_interleaved_steps(fmap, betas):
+    """Stepping between submits (different batch compositions) still
+    matches the all-at-once FIFO flush bitwise."""
+    store = BetaStore(betas)
+    reqs = _stream([5, 9, 2, 14, 4, 30], seed=5)
+    ref = ELMServer(fmap, store, buckets=(SLOTS,))
+    for i, x in enumerate(reqs):
+        ref.submit(x, node=i % V)
+    ref_out = {r.uid: r.y for r in ref.flush()}
+
+    cont = ContinuousELMServer(fmap, store, slots=SLOTS)
+    got = {}
+    for i, x in enumerate(reqs):
+        cont.submit(x, node=i % V)
+        for r in cont.step():
+            got[r.uid] = r.y
+    for r in cont.flush():
+        got[r.uid] = r.y
+    assert set(got) == set(ref_out)
+    for uid in got:
+        assert np.array_equal(got[uid], ref_out[uid])
+
+
+def test_predict_roundtrip(fmap, betas):
+    srv = ContinuousELMServer(fmap, BetaStore(betas), slots=8)
+    x = _stream([5])[0]
+    y = srv.predict(x, node=1)
+    ref = np.asarray(fmap(jnp.asarray(x)) @ betas[1])
+    np.testing.assert_allclose(y, ref, rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Deadline scheduling (scripted clock)
+# ---------------------------------------------------------------------------
+
+
+def test_edf_admission_order(fmap, betas):
+    """Earlier deadlines are admitted first; deadline-free go FIFO
+    behind all deadlined requests."""
+    clock = Clock()
+    srv = ContinuousELMServer(
+        fmap, BetaStore(betas), slots=4, min_fill=1.0, clock=clock
+    )
+    xs = _stream([2, 2, 1])
+    u_late = srv.submit(xs[0], node=0, deadline=10.0)
+    u_soon = srv.submit(xs[1], node=0, deadline=1.0)
+    u_none = srv.submit(xs[2], node=0)
+    done = srv.step()  # 5 rows ready >= 4: launches; EDF fills 4 slots
+    assert sorted(r.uid for r in done) == sorted([u_soon, u_late])
+    done = srv.step(force=True)
+    assert [r.uid for r in done] == [u_none]
+
+
+def test_min_fill_gate_waits_then_deadline_forces(fmap, betas):
+    clock = Clock()
+    srv = ContinuousELMServer(
+        fmap, BetaStore(betas), slots=8, min_fill=1.0,
+        deadline_slack_s=0.5, clock=clock,
+    )
+    uid = srv.submit(_stream([2])[0], node=0, deadline=5.0)
+    clock.t = 0.0
+    assert srv.step() == []  # 2/8 rows, slack 4.5s: wait
+    assert srv.metrics["batches"] == 0
+    clock.t = 4.8  # slack 0.2 <= 0.5: the head would miss -> force
+    done = srv.step()
+    assert [r.uid for r in done] == [uid]
+    assert srv.metrics["deadline_flushes"] == 1
+
+
+def test_deadline_free_traffic_respects_min_fill(fmap, betas):
+    clock = Clock()
+    srv = ContinuousELMServer(
+        fmap, BetaStore(betas), slots=8, min_fill=0.5, clock=clock,
+    )
+    srv.submit(_stream([3])[0], node=0)
+    assert srv.step() == []  # 3 < 4 = min_fill * slots
+    srv.submit(_stream([2], seed=3)[0], node=0)
+    done = srv.step()  # 5 >= 4: launches
+    assert len(done) == 2
+
+
+def test_latency_measured_on_injected_clock(fmap, betas):
+    clock = Clock()
+    srv = ContinuousELMServer(fmap, BetaStore(betas), slots=4, clock=clock)
+    uid = srv.submit(_stream([2])[0], node=0)
+    clock.t = 1.5
+    (r,) = srv.step()
+    assert r.uid == uid
+    assert r.latency_s == pytest.approx(1.5)
+
+
+# ---------------------------------------------------------------------------
+# Mid-flight slot refill
+# ---------------------------------------------------------------------------
+
+
+def test_mid_flight_refill(fmap, betas):
+    """A request larger than slots spans steps; freed slots take new
+    requests alongside its remaining rows."""
+    srv = ContinuousELMServer(fmap, BetaStore(betas), slots=4)
+    big_x = _stream([10])[0]
+    big = srv.submit(big_x, node=0)
+    assert srv.step() == []  # rows 0-3 in flight
+    assert srv.stats()["pending_rows"] == 6
+    small = srv.submit(_stream([1], seed=7)[0], node=0)
+    assert srv.step() == []  # rows 4-7 (big is EDF-first: lower uid)
+    done = srv.step()  # rows 8-9 + the small request share the batch
+    assert sorted(r.uid for r in done) == sorted([big, small])
+    assert srv.metrics["steps"] == 3
+    big_y = next(r for r in done if r.uid == big).y
+    ref = np.asarray(fmap(jnp.asarray(big_x)) @ betas[0])
+    np.testing.assert_allclose(big_y, ref, rtol=1e-4, atol=1e-5)
+    assert srv.stats()["pending_rows"] == 0
+
+
+def test_started_request_never_stalls(fmap, betas):
+    """The launch gate ignores min_fill while any request is mid-flight."""
+    srv = ContinuousELMServer(
+        fmap, BetaStore(betas), slots=4, min_fill=1.0
+    )
+    uid = srv.submit(_stream([6])[0], node=0)
+    assert srv.step(force=True) == []  # 4 rows launched, 2 remain
+    # remaining 2 rows < min_fill * 4, but the request is mid-flight
+    done = srv.step()
+    assert [r.uid for r in done] == [uid]
+
+
+# ---------------------------------------------------------------------------
+# Hot-swap atomicity across admissions
+# ---------------------------------------------------------------------------
+
+
+def test_version_pinned_across_straddling_publish(fmap, betas):
+    """A publish landing between the steps of one request does not
+    split it across versions; the next request sees the new beta."""
+    store = BetaStore(betas)
+    srv = ContinuousELMServer(fmap, store, slots=4)
+    x = _stream([10])[0]
+    uid = srv.submit(x, node=0)
+    srv.step()  # first 4 rows under v1
+    v2 = store.publish(betas * 2.0)
+    (r,) = srv.flush()
+    assert r.uid == uid and r.version == v2 - 1
+    # every row was served by v1's beta
+    ref = np.asarray(fmap(jnp.asarray(x)) @ betas[0])
+    np.testing.assert_allclose(r.y, ref, rtol=1e-4, atol=1e-5)
+    # a fresh request is served by v2
+    uid2 = srv.submit(x, node=0)
+    (r2,) = srv.flush()
+    assert r2.uid == uid2 and r2.version == v2
+    ref2 = np.asarray(fmap(jnp.asarray(x)) @ (betas[0] * 2.0))
+    np.testing.assert_allclose(r2.y, ref2, rtol=1e-4, atol=1e-5)
+
+
+def test_no_refresh_while_any_request_mid_flight(fmap, betas):
+    """Even a *new* request admitted next to a mid-flight one is served
+    from the pinned snapshot (one snapshot per in-flight batch)."""
+    store = BetaStore(betas)
+    srv = ContinuousELMServer(fmap, store, slots=4)
+    big = srv.submit(_stream([6])[0], node=0)
+    srv.step()  # big mid-flight under v1
+    store.publish(betas * 3.0)
+    small = srv.submit(_stream([2], seed=9)[0], node=0)
+    done = srv.flush()
+    versions = {r.uid: r.version for r in done}
+    assert versions[big] == 1
+    assert versions[small] == 1  # admitted mid-flight: pinned snapshot
+    # drained now: the next request picks up the publish
+    u3 = srv.submit(_stream([1], seed=11)[0], node=0)
+    (r3,) = srv.flush()
+    assert r3.uid == u3 and r3.version == 2
+    assert srv.metrics["swaps"] == 1
+
+
+# ---------------------------------------------------------------------------
+# int8-beta serving arm
+# ---------------------------------------------------------------------------
+
+
+def test_int8_arm_close_and_accounted(fmap, betas):
+    store = BetaStore(betas)
+    x = _stream([8])[0]
+    y_fp = ELMServer(fmap, store, buckets=(8,)).predict(x, node=1)
+    srv = ContinuousELMServer(
+        fmap, store, slots=8, beta_mode="int8", int8_tile=32
+    )
+    y_q = srv.predict(x, node=1)
+    rel = np.max(np.abs(y_q - y_fp)) / (np.max(np.abs(y_fp)) + 1e-9)
+    assert 0.0 < rel < 0.05  # quantized: differs, but closely
+    assert srv.metrics["beta_bytes"] > 0
+    # per-(version, node) quantization is cached: a second request for
+    # the same node adds no bytes
+    before = srv.metrics["beta_bytes"]
+    srv.predict(x, node=1)
+    assert srv.metrics["beta_bytes"] == before
+    with pytest.raises(ValueError, match="beta_mode"):
+        ELMServer(fmap, store, beta_mode="int4")

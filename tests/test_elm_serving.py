@@ -94,10 +94,13 @@ def test_fused_predict_dispatch_and_dtype():
     """The ops wrapper returns the oracle's promoted result dtype."""
     X, W, b, beta = _problem(64, 4, 32, 2, jnp.bfloat16, "sigmoid")
     ref = predict_reference(X, W, b, beta, activation="sigmoid")
-    for use_kernel in (False, True):
-        out = fused_predict(
-            X, W, b, beta, use_kernel=use_kernel, block_l=16, block_n=32
-        )
+    # block_l is a Pallas-only knob (the scan path raises on it);
+    # block_n maps onto the scan's chunk, so both paths take it
+    for use_kernel, kw in [
+        (False, dict(block_n=32)),
+        (True, dict(block_l=16, block_n=32)),
+    ]:
+        out = fused_predict(X, W, b, beta, use_kernel=use_kernel, **kw)
         assert out.dtype == ref.dtype
         assert _relerr(out, ref) < 1e-2
     allb = fused_predict(X, W, b, beta.astype(jnp.bfloat16))

@@ -20,6 +20,23 @@ Backend mismatches (a TPU baseline checked against a CPU runner) skip
 wall/temp comparison but still enforce each suite's own acceptance
 invariant (fused_not_slower) on the fresh run.
 
+Two additional checks:
+
+* **Committed-row invariant** (hard fail): every row of the *committed*
+  baselines must report ``fused_speedup >= 1.0``. The ratio is a
+  same-machine measurement, so it is hardware-independent and must hold
+  at commit time at every swept point, not just the acceptance point —
+  this is what makes "fused is never slower" a property of the repo
+  rather than of one lucky shape. (Fresh CI rows are *not* held to it:
+  a noisy shared runner may flip a close ratio.)
+* **Tuned-cache drift** (warn only): when both the baseline and fresh
+  directories hold a ``TUNED_kernels.json`` (the nightly --tune job
+  produces a fresh one), entries whose committed winner wall time
+  drifts more than ``--drift-tol`` (1.5x) from the fresh measurement
+  are printed as warnings — the signal that the committed cache was
+  tuned on different hardware or a different jax and should be
+  regenerated, without failing CI over it.
+
 Exit code 0 = within tolerance, 1 = regression (each printed).
 """
 
@@ -104,11 +121,62 @@ def compare_suite(
     return failures, notes
 
 
+def committed_row_failures(base: dict, name: str) -> list[str]:
+    """fused_speedup >= 1.0 must hold at EVERY committed row.
+
+    The speedup is a same-run, same-machine ratio, so unlike wall
+    times it is comparable across hardware — a committed row below
+    1.0 means the repo ships a point where the fused path loses.
+    """
+    failures = []
+    for rec in base.get("rows", []):
+        sp = rec.get("fused_speedup")
+        if sp is not None and sp < 1.0:
+            failures.append(
+                f"{name}{_key(rec)}: committed fused_speedup {sp:.3f} "
+                f"< 1.0 (impl {rec.get('fused_impl')}) — retune and "
+                "regenerate the baseline (benchmarks.run --tune)"
+            )
+    return failures
+
+
+def tuned_drift_warnings(
+    base_path: Path, fresh_path: Path, drift_tol: float
+) -> list[str]:
+    """Committed vs fresh TUNED_kernels.json winner drift (warn only)."""
+    try:
+        base = json.loads(base_path.read_text()).get("entries", {})
+        fresh = json.loads(fresh_path.read_text()).get("entries", {})
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"tuned-cache comparison skipped: {e}"]
+    warnings = []
+    common = sorted(set(base) & set(fresh))
+    for key in common:
+        b, f = base[key].get("wall_ms"), fresh[key].get("wall_ms")
+        if not b or not f or b <= 0 or f <= 0:
+            continue
+        ratio = max(b, f) / min(b, f)
+        if ratio > drift_tol:
+            warnings.append(
+                f"tuned-cache drift {key}: committed winner "
+                f"{base[key].get('config')} at {b:.1f} ms vs fresh "
+                f"{fresh[key].get('config')} at {f:.1f} ms "
+                f"({ratio:.2f}x > {drift_tol:.1f}x) — consider "
+                "regenerating TUNED_kernels.json on this hardware"
+            )
+    if common:
+        warnings.append(
+            f"tuned-cache: {len(common)} common entries compared"
+        )
+    return warnings
+
+
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument(
         "--baseline", required=True,
-        help="directory holding the committed BENCH_*.json copies",
+        help="directory holding the committed BENCH_*.json copies "
+        "(and optionally the committed TUNED_kernels.json)",
     )
     ap.add_argument(
         "--fresh", default=str(REPO),
@@ -116,6 +184,10 @@ def main() -> int:
     )
     ap.add_argument("--wall-tol", type=float, default=4.0)
     ap.add_argument("--mem-tol", type=float, default=1.5)
+    ap.add_argument(
+        "--drift-tol", type=float, default=1.5,
+        help="tuned-cache winner drift ratio above which to warn",
+    )
     args = ap.parse_args()
 
     baseline_dir = Path(args.baseline)
@@ -152,7 +224,16 @@ def main() -> int:
             base, fresh, Path(name).stem, args.wall_tol, args.mem_tol
         )
         failures.extend(f)
+        failures.extend(committed_row_failures(base, Path(name).stem))
         notes.extend(n)
+
+    base_tuned = baseline_dir / "TUNED_kernels.json"
+    fresh_tuned = fresh_dir / "TUNED_kernels.json"
+    if base_tuned.exists() and fresh_tuned.exists():
+        for w in tuned_drift_warnings(
+            base_tuned, fresh_tuned, args.drift_tol
+        ):
+            print(f"warning: {w}")
 
     for n in notes:
         print(f"note: {n}")
