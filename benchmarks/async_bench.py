@@ -1,0 +1,177 @@
+"""Async-runtime benchmark: barrier cost under stragglers, and the
+lossy-network tolerance check the synchronous plane cannot run at all.
+
+Writes a machine-readable ``BENCH_async.json`` at the repo root, the
+gossip-plane sibling of ``BENCH_stats.json`` / ``BENCH_serving.json``.
+Everything here is measured on the *virtual* clock of
+``core.async_engine`` (event time, not wall time), so the numbers are
+hardware-independent and deterministic in the seed — the bench gate
+only checks the file's own acceptance invariant, never cross-machine
+deltas.
+
+Straggler sweep: one node fires k times slower than the rest
+(k = 1, 2, 5, 10). A barrier plane pays k per round — every round
+waits for the straggler — so its time-to-tolerance is
+rounds_to_tol * k, exactly linear in k. The async push-sum runtime
+only gates the straggler's own mass releases: the other V-1 nodes
+keep gossiping at full rate, and the measured time-to-tolerance grows
+sublinearly. The committed JSON pins that separation
+(``sublinear_vs_linear`` per row).
+
+Lossy row (the acceptance invariant): on the paper's Fig. 2 network
+under a certified jointly-connected 20% loss trace plus per-message
+delay jitter, the async engine must reach the residual-to-beta* that
+the synchronous DenseMixer run reached on the *fault-free* graph —
+convergence to the centralized solution through dropped and delayed
+messages, which is the point of gossiping moment masses instead of
+betas.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import numpy as np
+
+from repro.core import async_engine, consensus, dc_elm
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BENCH_JSON = os.path.join(REPO_ROOT, "BENCH_async.json")
+
+STRAGGLER_FACTORS = (1, 2, 5, 10)
+TOL = 1e-5  # relative residual to the f64 centralized beta*
+
+
+def _problem(V, Ni, L, M, C, seed=7):
+    ks = jax.random.split(jax.random.key(seed), 2)
+    H = jax.random.normal(ks[0], (V, Ni, L))
+    T = jax.random.normal(ks[1], (V, Ni, M))
+    state, P_, Q_ = dc_elm.simulate_init(H, T, C)
+    beta_star = np.linalg.solve(
+        np.eye(L) / C + np.asarray(P_, np.float64).sum(0),
+        np.asarray(Q_, np.float64).sum(0),
+    )
+    return state, P_, Q_, beta_star
+
+
+def _sync_rounds_to_tol(state, g, C, beta_star, tol, max_rounds):
+    """Rounds the barrier plane needs to reach tol (straggler-free)."""
+    target = np.asarray(beta_star)
+    trace_fn = lambda betas: dc_elm.distance_to(betas, target)  # noqa: E731
+    _, traces = dc_elm.simulate_run(
+        state, g, g.default_gamma(), C, max_rounds, trace_fn=trace_fn
+    )
+    hit = np.nonzero(np.asarray(traces) < tol)[0]
+    return int(hit[0]) + 1 if hit.size else -1
+
+
+def _straggler_sweep(fast, rows, records):
+    V, Ni, L, M, C = 16, 48, 12, 1, 0.05
+    g = consensus.hypercube(4)
+    state, P_, Q_, beta_star = _problem(V, Ni, L, M, C)
+    # the jax scan makes 2000 sync rounds cheap even in --fast; a cap
+    # below rounds-to-tol would poison every t_sync in the sweep
+    r2t = _sync_rounds_to_tol(state, g, C, beta_star, TOL, 2000)
+    if r2t < 0:
+        raise RuntimeError("sync plane did not reach TOL in 2000 rounds")
+    factors = STRAGGLER_FACTORS[:: 3 if fast else 1]  # fast: (1, 10)
+    for k in factors:
+        periods = [float(k)] + [1.0] * (V - 1)
+        eng = async_engine.async_dc_elm(
+            g, P_, Q_, C, fire_periods=periods, seed=0
+        )
+        res = eng.run_until(
+            residual_tol=TOL, t_max=50.0 * r2t * k, target=beta_star
+        )
+        t_sync = float(r2t * k)  # every barrier round waits k
+        speedup = t_sync / res.t if res.t > 0 else float("inf")
+        rec = {
+            "straggler_factor": k,
+            "graph": g.name,
+            "t_tol_sync_vt": t_sync,
+            "t_tol_async_vt": res.t,
+            "async_speedup_vt": speedup,
+            "sync_rounds_to_tol": r2t,
+            "async_fires": res.fires,
+            "async_sends": res.sends,
+            "converged": bool(res.converged),
+            # linear-vs-sublinear: sync cost scales as k exactly; the
+            # async cost must scale strictly slower once k > 1
+            "sublinear_vs_linear": bool(
+                k == 1 or res.t < t_sync
+            ),
+        }
+        records.append(rec)
+        rows.append((
+            f"async/straggler_x{k}", 0.0,
+            f"t_sync={t_sync:.0f};t_async={res.t:.1f};"
+            f"speedup={speedup:.2f};fires={res.fires};"
+            f"converged={res.converged}",
+        ))
+    return r2t
+
+
+def _lossy_acceptance(fast, rows):
+    """Fig. 2 + certified 20% loss + delay jitter vs fault-free sync."""
+    V, Ni, L, M, C = 4, 30, 8, 2, 0.05
+    g = consensus.paper_fig2()
+    state, P_, Q_, beta_star = _problem(V, Ni, L, M, C, seed=0)
+    K = 150 if fast else 300
+    dense, _ = dc_elm.simulate_run(state, g, g.default_gamma(), C, K)
+    sync_res = float(dc_elm.distance_to(
+        np.asarray(dense.betas), np.asarray(beta_star)
+    ))
+    tol = max(sync_res, TOL)
+    fm = consensus.FaultModel.sample_certified(
+        g, 0.2, num_rounds=64, window=8
+    )
+    eng = async_engine.async_dc_elm(
+        g, P_, Q_, C,
+        faults=fm, delays=consensus.DelayModel(base=0.3, jitter=0.4),
+        seed=3,
+    )
+    res = eng.run_until(residual_tol=tol, t_max=40_000.0, target=beta_star)
+    ws = eng.wire_stats
+    acceptance = {
+        "graph": g.name,
+        "sync_rounds": K,
+        "sync_residual": sync_res,
+        "drop_prob": 0.2,
+        "async_residual": res.residual,
+        "async_t_vt": res.t,
+        "async_drop_frac": res.drops / max(1, res.sends),
+        "async_reaches_sync_tol": bool(res.converged),
+        "gossip_bytes": int(ws.bytes_on_wire),
+    }
+    rows.append((
+        "async/fig2_lossy_vs_sync", 0.0,
+        f"sync_res={sync_res:.2e};async_res={res.residual:.2e};"
+        f"t_async={res.t:.1f};drops={res.drops}/{res.sends};"
+        f"reaches_sync_tol={res.converged}",
+    ))
+    return acceptance
+
+
+def bench_async(fast: bool = False):
+    """Straggler sweep + lossy acceptance row; writes BENCH_async.json."""
+    rows, records = [], []
+    _straggler_sweep(fast, rows, records)
+    acceptance = _lossy_acceptance(fast, rows)
+    payload = {
+        "suite": "async",
+        "backend": jax.default_backend(),
+        "fast": bool(fast),
+        "tol": TOL,
+        "rows": records,
+        "acceptance": acceptance,
+    }
+    with open(BENCH_JSON, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    rows.append((
+        "async/json", 0.0,
+        f"wrote={os.path.relpath(BENCH_JSON, REPO_ROOT)}",
+    ))
+    return rows, {"acceptance": acceptance}

@@ -60,7 +60,7 @@ SUITES = {}
 
 
 def _register():
-    from benchmarks import micro, paper_figs, serving_bench, stats_bench
+    from benchmarks import async_bench, micro, paper_figs, serving_bench, stats_bench
 
     SUITES.update({
         "fig3": paper_figs.fig3_centralized_sinc,
@@ -69,6 +69,7 @@ def _register():
         "gram": micro.bench_gram,
         "stats": stats_bench.bench_stats,
         "serving": serving_bench.bench_serving,
+        "async": async_bench.bench_async,
         "ssd": micro.bench_ssd,
         "attn": micro.bench_attention,
         "online": micro.bench_online_vs_direct,
@@ -115,6 +116,8 @@ def main() -> None:
                 kw = {"rounds": 600}
             if name in ("stats", "serving"):
                 kw = {"fast": args.fast, "tune": args.tune}
+            if name == "async":
+                kw = {"fast": args.fast}
             rows, _ = fn(**kw)
             for r in rows:
                 print(f"{r[0]},{r[1]:.1f},{r[2]}")

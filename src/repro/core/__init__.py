@@ -2,6 +2,8 @@
 
 Modules:
   features    random ELM feature maps h(x) (+ the activation registry)
+  async_engine event-driven push-sum gossip runtime (no round barrier)
+  push_sum    ratio-consensus mass algebra + conservation accounting
   stats       the statistics plane: (P, Q, ||T||^2, Omega) for every
               path — fused feature->moment kernels, chunked
               SufficientStats, Cholesky solves
@@ -17,6 +19,7 @@ Modules:
 """
 
 from repro.core import (  # noqa: F401
+    async_engine,
     compression,
     consensus,
     dc_elm,
@@ -27,5 +30,6 @@ from repro.core import (  # noqa: F401
     gossip,
     incremental,
     online,
+    push_sum,
     stats,
 )

@@ -489,6 +489,9 @@ class CompressedMixer:
     def compress(self):
         return self.base.compress  # always None; the spec supersedes it
 
+    def gamma_upper_bound(self) -> float:
+        return self.base.gamma_upper_bound()
+
     def default_gamma(self, safety: float = 0.9) -> float:
         return self.base.default_gamma(safety)
 

@@ -296,9 +296,29 @@ class FaultModel:
             i, j = o.edge
             if not (0 <= i < V and 0 <= j < V) or i == j:
                 raise ValueError(f"bad outage edge {o.edge}")
+            if self.graph.adjacency[i, j] == 0:
+                # silently accepted before, then erased by the
+                # `keep * edges` mask — the outage could never fire
+                raise ValueError(
+                    f"outage edge {o.edge} is not an edge of "
+                    f"{self.graph.name}: the keep-mask is applied over "
+                    "the base edge set, so this outage could never fire"
+                )
+            if o.start < 0 or o.duration < 0:
+                raise ValueError(
+                    f"outage on {o.edge} has negative start/duration "
+                    f"({o.start}, {o.duration}); intervals are "
+                    "[start, start + duration) in rounds >= 0"
+                )
         for c in self.crashes:
             if not 0 <= c.node < V:
                 raise ValueError(f"bad crash node {c.node}")
+            if c.start < 0 or c.duration < 0:
+                raise ValueError(
+                    f"crash of node {c.node} has negative start/duration "
+                    f"({c.start}, {c.duration}); intervals are "
+                    "[start, start + duration) in rounds >= 0"
+                )
 
     @property
     def num_nodes(self) -> int:
@@ -393,6 +413,60 @@ class FaultModel:
             f"(p={edge_drop_prob}, window={window}); grow the window or "
             "lower the failure rate"
         )
+
+
+@dataclasses.dataclass(frozen=True)
+class DelayModel:
+    """Per-message link-latency distribution for the async runtime.
+
+    A message put on edge (i, j) at virtual time t is delivered at
+
+        t + scale(i, j) * (base + jitter * U),   U ~ Uniform[0, 1)
+
+    with U drawn from the scheduler's seeded stream, so a whole async
+    run replays bit-for-bit from its seed. ``edge_scale`` entries model
+    slow *links* (undirected: (i, j) covers both directions); a slow
+    *node* is a firing-period concern and lives in
+    ``async_engine.AsyncEngine(fire_periods=...)``. ``base=0`` with no
+    jitter is the synchronous limit: delivery at the send instant,
+    consumed at the receiver's next fire.
+
+    Complementary to ``FaultModel``: FaultModel decides whether a
+    message survives the link at all, DelayModel decides when the
+    survivors arrive.
+    """
+
+    base: float = 0.1
+    jitter: float = 0.0
+    edge_scale: tuple[tuple[tuple[int, int], float], ...] = ()
+
+    def __post_init__(self):
+        if not np.isfinite(self.base) or self.base < 0.0:
+            raise ValueError(f"base delay must be finite >= 0, got {self.base}")
+        if not np.isfinite(self.jitter) or self.jitter < 0.0:
+            raise ValueError(f"jitter must be finite >= 0, got {self.jitter}")
+        for (i, j), s in self.edge_scale:
+            if i == j:
+                raise ValueError(f"edge_scale on a self-loop ({i}, {j})")
+            if not np.isfinite(s) or s <= 0.0:
+                raise ValueError(
+                    f"edge_scale for ({i}, {j}) must be finite > 0, got {s}"
+                )
+
+    def scale(self, i: int, j: int) -> float:
+        """Per-edge latency multiplier, symmetric in (i, j)."""
+        for (a, b), s in self.edge_scale:
+            if (a, b) == (i, j) or (a, b) == (j, i):
+                return s
+        return 1.0
+
+    def sample(self, rng: np.random.Generator, i: int, j: int) -> float:
+        """One message's latency on edge (i, j); consumes one uniform
+        from ``rng`` iff the model has jitter (stream-stable in config)."""
+        d = self.base
+        if self.jitter > 0.0:
+            d += self.jitter * float(rng.random())
+        return self.scale(i, j) * d
 
 
 # ---------------------------------------------------------------------------

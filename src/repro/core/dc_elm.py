@@ -190,17 +190,21 @@ def simulate_run(
     num_iters: int,
     *,
     trace_fn: Callable[[jax.Array], jax.Array] | None = None,
+    check_gamma: bool = True,
 ):
     """Run num_iters rounds through the engine's scan driver.
 
     trace_fn: optional per-iteration metric over stacked betas (e.g. the
-    paper's average empirical risk R_d(k), eq. 32). Returns
+    paper's average empirical risk R_d(k), eq. 32).
+    check_gamma=False skips the Thm. 2 bound validation (deliberate
+    divergence experiments like paper Fig. 4(a)). Returns
     (final_state, traces or None).
     """
     eng = engine_lib.simulated_dc_elm(graph, C, dtype=state.betas.dtype)
     gamma = jnp.asarray(gamma, dtype=state.betas.dtype)
     betas, traces = eng.run(
-        state.betas, state.omegas, gamma, num_iters, trace_fn=trace_fn
+        state.betas, state.omegas, gamma, num_iters, trace_fn=trace_fn,
+        check_gamma=check_gamma,
     )
     final = dataclasses.replace(state, betas=betas, k=state.k + num_iters)
     return final, traces
@@ -240,6 +244,7 @@ def simulate_run_time_varying(
     num_iters: int,
     *,
     trace_fn: Callable[[jax.Array], jax.Array] | None = None,
+    check_gamma: bool = True,
 ):
     """DC-ELM over a time-varying topology (paper Sec. V future work).
 
@@ -254,7 +259,8 @@ def simulate_run_time_varying(
     )
     gamma = jnp.asarray(gamma, dtype=state.betas.dtype)
     betas, traces = eng.run(
-        state.betas, state.omegas, gamma, num_iters, trace_fn=trace_fn
+        state.betas, state.omegas, gamma, num_iters, trace_fn=trace_fn,
+        check_gamma=check_gamma,
     )
     final = dataclasses.replace(state, betas=betas, k=state.k + num_iters)
     return final, traces

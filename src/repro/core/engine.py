@@ -126,14 +126,69 @@ class ConsensusEngine:
         """Exact ``compression.WireStats`` of the last run (or None)."""
         return getattr(self.mixer, "last_wire_stats", None)
 
-    def step(self, x, aux=None, gamma=None, k=0):
+    def gamma_upper_bound(self) -> float | None:
+        """Thm. 2's 1/d_max for the *active* mixer (None if the mixer
+        cannot say, e.g. traced adjacencies).
+
+        Membership churn moves this bound: ``stream_join``'s default
+        all-incumbent topology jumps d_max to ~V, so always re-read the
+        bound from the engine ``stream_join``/``stream_leave`` return
+        rather than reusing the pre-churn value.
+        """
+        fn = getattr(self.mixer, "gamma_upper_bound", None)
+        if fn is None:
+            return None
+        try:
+            return float(fn())
+        except (
+            TypeError,
+            jax.errors.ConcretizationTypeError,
+            jax.errors.TracerArrayConversionError,
+        ):
+            return None
+
+    def _validate_gamma(self, gamma, check_gamma: bool) -> None:
+        """Reject a concrete gamma outside (0, 1/d_max) of the active
+        mixer — the silent-divergence bug after membership churn.
+
+        Traced gammas (inside jit/shard_map) and mixers without a
+        concrete bound are skipped; ``check_gamma=False`` is the escape
+        hatch for deliberate above-bound experiments (paper Fig. 4(a)).
+        """
+        if not check_gamma or gamma is None:
+            return
+        try:
+            g = float(gamma)
+        except (
+            TypeError,
+            jax.errors.ConcretizationTypeError,
+            jax.errors.TracerArrayConversionError,
+        ):
+            return
+        bound = self.gamma_upper_bound()
+        if bound is None:
+            return
+        if not 0.0 < g < bound:
+            raise ValueError(
+                f"gamma={g:.6g} violates Thm. 2's 0 < gamma < 1/d_max "
+                f"= {bound:.6g} for the active mixer (the bound moves "
+                "under membership churn — re-read it from the engine "
+                "stream_join/stream_leave return). Pass "
+                "check_gamma=False to run a deliberate divergence "
+                "experiment."
+            )
+
+    def step(self, x, aux=None, gamma=None, k=0, *, check_gamma=True):
         """A single consensus round, in the mixer's execution context.
 
         For ``PpermuteMixer`` this must run inside a caller-managed
         shard_map (distributed/steps.py and core/elm_head.py do this to
         mix replicas whose leaves are further model-sharded); for
-        ``DenseMixer`` it is directly callable/jittable.
+        ``DenseMixer`` it is directly callable/jittable. A concrete
+        gamma is validated against the active mixer's Thm. 2 bound
+        (``check_gamma=False`` opts out).
         """
+        self._validate_gamma(gamma, check_gamma)
         return self.rule(x, self.mixer.laplacian(x, k), aux, gamma)
 
     def run(
@@ -146,14 +201,19 @@ class ConsensusEngine:
         trace_fn=None,
         state_spec=None,
         aux_spec=None,
+        check_gamma=True,
     ):
         """num_iters rounds under the mixer's scan driver.
 
         trace_fn: optional per-round metric over the stacked state
         (DenseMixer only). state_spec/aux_spec: PartitionSpec overrides
         for states whose trailing dims are also sharded (PpermuteMixer
-        only). Returns (final_state, traces or None).
+        only). A concrete gamma is validated against the active mixer's
+        Thm. 2 bound at entry (``check_gamma=False`` opts out for
+        deliberate divergence experiments). Returns
+        (final_state, traces or None).
         """
+        self._validate_gamma(gamma, check_gamma)
         return self.mixer.run(
             self.rule, x, aux, gamma, num_iters, trace_fn, state_spec,
             aux_spec,
@@ -226,6 +286,7 @@ class ConsensusEngine:
         state_spec=None,
         aux_spec=None,
         publish_to=None,
+        check_gamma=True,
     ):
         """One Algorithm 2 event on every node, end-to-end.
 
@@ -268,6 +329,7 @@ class ConsensusEngine:
             trace_fn=trace_fn,
             state_spec=state_spec,
             aux_spec=aux_spec,
+            check_gamma=check_gamma,
         )
         if publish_to is not None:
             publish_to.publish(final)
@@ -291,7 +353,9 @@ class ConsensusEngine:
         (``online.rescale_num_nodes``) and re-seeds beta_j = Omega_j Q_j,
         restoring the zero-gradient-sum invariant for the smaller
         network. Returns ``(new_engine, new_state)`` — the engine is
-        rebuilt for the (V-1)-node rule and topology.
+        rebuilt for the (V-1)-node rule and topology, and
+        ``new_engine.gamma_upper_bound()`` is the post-churn Thm. 2
+        bound to step with (the pre-churn gamma may now be invalid).
 
         graph: the surviving communication graph; default = the base
         adjacency with ``node``'s row/column deleted (every snapshot,
@@ -337,7 +401,12 @@ class ConsensusEngine:
         index V (append order). Returns ``(new_engine, new_state)``.
 
         graph: the enlarged communication graph; default = the base
-        adjacency with the joiner connected to every incumbent.
+        adjacency with the joiner connected to every incumbent — which
+        jumps d_max to ~V, so a pre-churn gamma is very likely above
+        the new Thm. 2 bound. Step with
+        ``new_engine.gamma_upper_bound()`` /
+        ``new_engine.mixer.default_gamma()``; the engine's gamma
+        validation rejects a stale concrete gamma at run entry.
         """
         C, V = self._ridge_constants()
         adjacencies = self._membership_adjacencies(graph, add=True)

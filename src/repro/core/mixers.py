@@ -132,11 +132,15 @@ class DenseMixer:
     def num_nodes(self) -> int:
         return self.adjacencies.shape[-1]
 
-    def default_gamma(self, safety: float = 0.9) -> float:
-        """safety / max_k d_max(G_k) (paper Thm. 2 bound, joint over
-        snapshots). Requires concrete adjacencies (not under a trace)."""
+    def gamma_upper_bound(self) -> float:
+        """Paper Thm. 2: 1 / max_k d_max(G_k), joint over snapshots.
+        Requires concrete adjacencies (not under a trace)."""
         d_max = float(jnp.max(jnp.sum(self.adjacencies, axis=-1)))
-        return safety / d_max
+        return 1.0 / d_max
+
+    def default_gamma(self, safety: float = 0.9) -> float:
+        """safety * gamma_upper_bound() (paper Thm. 2 bound)."""
+        return safety * self.gamma_upper_bound()
 
     def _adjacency(self, k):
         if self.adjacencies.shape[0] == 1:
@@ -250,8 +254,11 @@ class PpermuteMixer:
     def num_nodes(self) -> int:
         return self.spec.num_nodes(self.axis_sizes)
 
+    def gamma_upper_bound(self) -> float:
+        return self.spec.gamma_upper_bound(self.axis_sizes)
+
     def default_gamma(self, safety: float = 0.9) -> float:
-        return safety * self.spec.gamma_upper_bound(self.axis_sizes)
+        return safety * self.gamma_upper_bound()
 
     def node_pspec(self) -> P:
         """PartitionSpec placing the leading node axis on the consensus axes."""
@@ -411,6 +418,10 @@ class FaultyMixer:
     @property
     def compress(self):
         return self.base.compress
+
+    def gamma_upper_bound(self) -> float:
+        """Faults only remove edges, so the base bound stays valid."""
+        return self.base.gamma_upper_bound()
 
     def default_gamma(self, safety: float = 0.9) -> float:
         return self.base.default_gamma(safety)

@@ -1,0 +1,172 @@
+"""Push-sum / ratio-consensus mass algebra for the async runtime.
+
+The synchronous plane (core/engine.py) needs a *symmetric* Laplacian
+every round — dropped links must be dropped on both ends or the
+zero-gradient-sum invariant bends. Real networks give you neither
+symmetry nor rounds. Push-sum (ratio consensus) removes both
+assumptions: each node carries a mass pair
+
+    sigma_i = (A-mass, Q-mass)   with  A_i = I/(VC) + P_i,  Q_i = H_i^T T_i
+    rho_i   = scalar counting mass, rho_i(0) = 1
+
+and on every local firing splits its current mass equally between
+itself and its out-neighbors. Because every split *conserves* total
+mass, the ratios sigma_i / rho_i converge to the network averages
+(mean A, mean Q) on any jointly-reachable directed sequence — and the
+node estimate
+
+    beta_i = (sigma_A_i / rho_i)^{-1} (sigma_Q_i / rho_i)
+           = solve(sigma_A_i, sigma_Q_i)
+
+converges to the *centralized* solution beta* = (I/C + sum P)^{-1}
+sum Q exactly, not just to consensus: scale the averaged moments by V
+and the ridge term comes out right. This is why the async engine
+gossips the moments (A_i, Q_i) instead of betas — unlike Laplacian
+mixing of betas, the fixed point is beta* under loss, delay, and
+asymmetric timing.
+
+**Loss-proof counters.** A dropped message must not destroy mass, so
+transmissions use running sums (robust ratio consensus): the sender
+accumulates everything it ever shipped on edge i->j into a cumulative
+counter mu[i->j] and transmits *the counter*; the receiver remembers
+the last counter value it processed, nu[i->j], and applies the
+difference. A lost message leaves its mass "in flight" inside
+mu - nu until any later message on that edge delivers it; stale or
+reordered deliveries are no-ops (guarded by a sequence number — the
+newest counter subsumes them). The per-event conservation law
+
+    sum_i sigma_i + sum_{(i,j)} (mu[i->j] - nu[i->j]) = sum_i sigma_i(0)
+
+holds *exactly* (up to float roundoff) after every fire, delivery,
+drop, and reorder — it is the async plane's zero-gradient-sum
+analogue, asserted by tests and the nightly seed-sweep stress job.
+
+This module is the pure state algebra (init / split / absorb /
+conservation accounting) on numpy arrays; the event scheduler that
+drives it lives in core/async_engine.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Mass:
+    """One node's (or one edge counter's) mass triple."""
+
+    A: np.ndarray  # (L, L) accumulated ridge-Gram mass
+    Q: np.ndarray  # (L, M) accumulated cross-moment mass
+    rho: float  # scalar counting mass
+
+    def copy(self) -> "Mass":
+        return Mass(A=self.A.copy(), Q=self.Q.copy(), rho=float(self.rho))
+
+    @classmethod
+    def zeros(cls, L: int, M: int, dtype=np.float64) -> "Mass":
+        return cls(
+            A=np.zeros((L, L), dtype=dtype),
+            Q=np.zeros((L, M), dtype=dtype),
+            rho=0.0,
+        )
+
+    def add_scaled(self, other: "Mass", w: float) -> None:
+        """self += w * other (in place)."""
+        self.A += w * other.A
+        self.Q += w * other.Q
+        self.rho += w * other.rho
+
+    def add_diff(self, latest: "Mass", processed: "Mass") -> None:
+        """self += (latest - processed) — absorb a cumulative counter's
+        unprocessed remainder (in place)."""
+        self.A += latest.A - processed.A
+        self.Q += latest.Q - processed.Q
+        self.rho += latest.rho - processed.rho
+
+    def scale(self, w: float) -> None:
+        """self *= w (in place) — the kept share after a split."""
+        self.A *= w
+        self.Q *= w
+        self.rho *= w
+
+
+def init_masses(P: np.ndarray, Q: np.ndarray, C: float) -> list[Mass]:
+    """Per-node initial mass from local statistics.
+
+    P: (V, L, L) local Grams H_i^T H_i, Q: (V, L, M) cross moments.
+    Node i starts with sigma = (I/(VC) + P_i, Q_i) and rho = 1 — the
+    same (paper eq. 21) ridge-regularized moments the synchronous
+    plane's Omega_i inverts, kept *uninverted* here because sums of
+    moments are meaningful where sums of inverses are not.
+    """
+    P = np.asarray(P, dtype=np.float64)
+    Q = np.asarray(Q, dtype=np.float64)
+    V, L = P.shape[0], P.shape[1]
+    ridge = np.eye(L) / (V * float(C))
+    return [Mass(A=ridge + P[i], Q=Q[i].copy(), rho=1.0) for i in range(V)]
+
+
+def estimate(mass: Mass) -> np.ndarray:
+    """beta_i = solve(sigma_A / rho, sigma_Q / rho) = solve(sigma_A,
+    sigma_Q) — rho cancels in the ratio, but keeping it nonzero is what
+    guarantees sigma_A is (a positive multiple of) an SPD matrix."""
+    if mass.rho <= 0.0:
+        raise ValueError(
+            f"cannot estimate from nonpositive counting mass {mass.rho}"
+        )
+    return np.linalg.solve(mass.A, mass.Q)
+
+
+def split_share(out_degree: int) -> float:
+    """Equal split over self + out-neighbors (standard push-sum)."""
+    return 1.0 / (out_degree + 1.0)
+
+
+def conservation_residual(
+    sigmas: list[Mass],
+    mu: dict,
+    nu: dict,
+    total0: Mass,
+) -> float:
+    """Max-abs violation of the conservation law, relative to the
+    initial totals:
+
+        sum_i sigma_i + sum_edges (mu - nu)  ==  total0 .
+
+    mu/nu: dicts keyed by directed edge (i, j) holding cumulative
+    Mass counters (sent / processed). Exact up to roundoff no matter
+    which messages were dropped, delayed, or reordered.
+    """
+    L, M = total0.A.shape[0], total0.Q.shape[1]
+    acc = Mass.zeros(L, M)
+    for s in sigmas:
+        acc.add_scaled(s, 1.0)
+    for key, sent in mu.items():
+        acc.add_scaled(sent, 1.0)
+        got = nu.get(key)
+        if got is not None:
+            acc.add_scaled(got, -1.0)
+    scale = max(
+        float(np.max(np.abs(total0.A))),
+        float(np.max(np.abs(total0.Q))),
+        float(abs(total0.rho)),
+        1.0,
+    )
+    err = max(
+        float(np.max(np.abs(acc.A - total0.A))),
+        float(np.max(np.abs(acc.Q - total0.Q))),
+        float(abs(acc.rho - total0.rho)),
+    )
+    return err / scale
+
+
+def total_mass(sigmas: list[Mass]) -> Mass:
+    """Plain sum of node masses (the conserved quantity at t=0, before
+    anything is in flight)."""
+    L, M = sigmas[0].A.shape[0], sigmas[0].Q.shape[1]
+    acc = Mass.zeros(L, M)
+    for s in sigmas:
+        acc.add_scaled(s, 1.0)
+    return acc

@@ -267,12 +267,21 @@ class ELMServer:
         return x
 
     def _next_node(self, node: int | None) -> int:
+        """Round-robin over the *served* snapshot's node models.
+
+        Uses the cached snapshot (refreshed by the bounded-staleness
+        rule) rather than a fresh ``store.snapshot()`` per submit —
+        the old per-request read was a lock-path hot-spot that also
+        bypassed the ``max_staleness`` contract — and the rotation
+        counter only ever advances by one, so a V change between
+        submits re-wraps cleanly instead of skipping/repeating nodes
+        under a shifting modulo base.
+        """
         if node is not None:
             return node
-        node = self._rr_node
-        self._rr_node = (self._rr_node + 1) % max(
-            1, self.store.snapshot().num_nodes
-        )
+        self._refresh_snapshot()
+        node = self._rr_node % max(1, self._snap.num_nodes)
+        self._rr_node = node + 1
         return node
 
     def submit(self, x, *, node: int | None = None) -> int:

@@ -1,0 +1,417 @@
+"""Async push-sum runtime: sync-limit parity against the round-based
+engines, mass conservation under loss, straggler liveness, scheduler
+determinism — plus regressions for the three correctness bugs this
+subsystem surfaced in the synchronous plane (silent FaultModel no-ops,
+unvalidated gamma after churn, the serving round-robin snapshot race).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import async_engine, consensus, dc_elm, engine, push_sum
+from repro.serving import BetaStore, ELMServer
+
+
+def _problem(V=4, Ni=30, L=8, M=2, C=4.0, seed=0):
+    ks = jax.random.split(jax.random.key(seed), 2)
+    H = jax.random.normal(ks[0], (V, Ni, L)) / np.sqrt(L)
+    T = jax.random.normal(ks[1], (V, Ni, M))
+    state, P_, Q_ = dc_elm.simulate_init(H, T, C)
+    return state, P_, Q_
+
+
+def _beta_star64(P_, Q_, C):
+    """Centralized beta* in f64 (the jax path is f32 under tests, whose
+    ~1e-7 error would floor the async residual assertions)."""
+    P = np.asarray(P_, np.float64)
+    Q = np.asarray(Q_, np.float64)
+    L = P.shape[1]
+    return np.linalg.solve(np.eye(L) / C + P.sum(0), Q.sum(0))
+
+
+def _reference_rounds(betas, omegas, adj, gamma, C, K, keep=None):
+    """Hand-rolled eq. (20) in f64, optionally fault-masked (the exact
+    recursion both planes must reproduce)."""
+    b = np.asarray(betas, np.float64).copy()
+    omegas = np.asarray(omegas, np.float64)
+    adj = np.asarray(adj, np.float64)
+    V = b.shape[0]
+    for r in range(K):
+        a = adj if keep is None else adj * keep[r]
+        lap = np.einsum("ij,jlm->ilm", a, b) - a.sum(1)[:, None, None] * b
+        b = b + (gamma / (V * C)) * np.einsum("vlk,vkm->vlm", omegas, lap)
+    return b
+
+
+# ---------------------------------------------------------------------------
+# Sync-limit parity
+# ---------------------------------------------------------------------------
+
+
+def test_sync_limit_matches_dense_engine():
+    """Barrier schedule + zero delay/loss: run_until(t_max=K) equals K
+    rounds of eq. (20) exactly in f64, and matches the f32 DenseMixer
+    engine to f32-roundoff ("bitwise-level close")."""
+    C, K = 4.0, 60
+    state, P_, Q_ = _problem(C=C)
+    g = consensus.paper_fig2()
+    gamma = g.default_gamma()
+    eng = async_engine.sync_limit_dc_elm(
+        g, np.asarray(state.betas), np.asarray(state.omegas), gamma, C
+    )
+    res = eng.run_until(t_max=K)
+    exact = _reference_rounds(
+        state.betas, state.omegas, g.adjacency, gamma, C, K
+    )
+    np.testing.assert_allclose(res.betas, exact, rtol=0, atol=1e-12)
+    dense, _ = dc_elm.simulate_run(state, g, gamma, C, K)
+    np.testing.assert_allclose(
+        res.betas, np.asarray(dense.betas, np.float64), rtol=0, atol=5e-6
+    )
+    assert res.fires == g.num_nodes * (K + 1)  # incl. the t=0 warm-up
+
+
+def test_sync_limit_matches_faulty_engine_certified_trace():
+    """Same claim under a certified lossy trace: the async runtime with
+    the FaultModel as its message-drop process replays
+    with_faults(DenseMixer) round for round."""
+    C, K = 4.0, 60
+    state, P_, Q_ = _problem(C=C)
+    g = consensus.paper_fig2()
+    gamma = g.default_gamma()
+    fm = consensus.FaultModel.sample_certified(
+        g, 0.3, num_rounds=K, window=8
+    )
+    a = async_engine.sync_limit_dc_elm(
+        g, np.asarray(state.betas), np.asarray(state.omegas), gamma, C,
+        faults=fm, fault_rounds=K,
+    )
+    res = a.run_until(t_max=K)
+    exact = _reference_rounds(
+        state.betas, state.omegas, g.adjacency, gamma, C, K,
+        keep=fm.edge_keep(K),
+    )
+    np.testing.assert_allclose(res.betas, exact, rtol=0, atol=1e-12)
+    eng_f = engine.with_faults(engine.simulated_dc_elm(g, C), fm, K)
+    ref, _ = eng_f.run(state.betas, state.omegas, gamma, K)
+    np.testing.assert_allclose(
+        res.betas, np.asarray(ref, np.float64), rtol=0, atol=5e-6
+    )
+
+
+# ---------------------------------------------------------------------------
+# Push-sum: exactness, conservation, liveness
+# ---------------------------------------------------------------------------
+
+
+def test_push_sum_reaches_sync_tolerance_on_fig2_lossy():
+    """Acceptance: on the paper's Fig. 2 graph under a certified lossy
+    trace (+ delay jitter), the async engine reaches the same residual
+    to beta* that DenseMixer.run reached — with no round barrier."""
+    C, K = 4.0, 400
+    state, P_, Q_ = _problem(C=C)
+    g = consensus.paper_fig2()
+    beta_star = _beta_star64(P_, Q_, C)
+    dense, _ = dc_elm.simulate_run(state, g, g.default_gamma(), C, K)
+    sync_res = float(dc_elm.distance_to(
+        jnp.asarray(dense.betas), jnp.asarray(beta_star, jnp.float32)
+    ))
+    fm = consensus.FaultModel.sample_certified(g, 0.2, num_rounds=64, window=8)
+    eng = async_engine.async_dc_elm(
+        g, P_, Q_, C,
+        faults=fm, delays=consensus.DelayModel(base=0.3, jitter=0.4), seed=3,
+    )
+    res = eng.run_until(
+        residual_tol=max(sync_res, 1e-6), t_max=20_000, target=beta_star
+    )
+    assert res.converged, (res.residual, sync_res)
+
+
+def test_push_sum_mass_conservation_under_loss():
+    """The conservation law holds at every probe point of a lossy,
+    jittery run — dropped messages delay mass, they never destroy it."""
+    C = 4.0
+    _, P_, Q_ = _problem(C=C)
+    g = consensus.paper_fig2()
+    fm = consensus.FaultModel(graph=g, edge_drop_prob=0.4, seed=7)
+    eng = async_engine.async_dc_elm(
+        g, P_, Q_, C,
+        faults=fm, delays=consensus.DelayModel(base=0.5, jitter=1.0), seed=5,
+    )
+    for t_stop in (3, 10, 40, 160):
+        eng.run_until(t_max=float(t_stop))
+        assert eng.rule.conservation_residual() < 1e-9, t_stop
+    # and the in-flight term is genuinely nonzero mid-run (mass rides
+    # the counters, the invariant is not trivially sigma-only)
+    inflight = sum(
+        abs(eng.rule.mu[k].rho - eng.rule.nu[k].rho) for k in eng.rule.mu
+    )
+    assert inflight > 0.0
+
+
+def test_straggler_liveness_10x():
+    """One node firing at 10x the period: the network still converges
+    to beta* (nobody waits on a barrier for the straggler)."""
+    C = 4.0
+    _, P_, Q_ = _problem(C=C)
+    g = consensus.paper_fig2()
+    beta_star = _beta_star64(P_, Q_, C)
+    eng = async_engine.async_dc_elm(
+        g, P_, Q_, C,
+        fire_periods=[10.0, 1.0, 1.0, 1.0],
+        delays=consensus.DelayModel(base=0.2), seed=1,
+    )
+    res = eng.run_until(residual_tol=1e-6, t_max=8000, target=beta_star)
+    assert res.converged, res.residual
+    assert eng.rule.conservation_residual() < 1e-9
+
+
+def test_push_sum_stale_reordered_messages_are_noops():
+    """The running-sum counters make late/duplicate deliveries no-ops:
+    processing a *stale* counter after a newer one changes nothing."""
+    C = 4.0
+    _, P_, Q_ = _problem(C=C)
+    g = consensus.paper_fig2()
+    rule = async_engine.PushSumRule(g, P_, Q_, C)
+    rule.fire(1, {})  # node 1 ships counters to 0 and 2
+    old = rule.mu[(1, 0)].copy()
+    rule.fire(1, {})  # newer cumulative counter on the same edge
+    new = rule.mu[(1, 0)].copy()
+    rule.fire(0, {1: (1, new)})  # newest arrives first
+    sig = rule.sigmas[0].copy()
+    rule.fire(0, {1: (0, old)})  # stale reordering: must be a no-op
+    assert rule._last_seq[(1, 0)] == 1
+    np.testing.assert_array_equal(rule.sigmas[0].A, (
+        sig.A * push_sum.split_share(len(rule.out_neighbors[0]))
+    ))
+    assert rule.conservation_residual() < 1e-12
+
+
+def test_same_seed_same_event_log():
+    """Determinism: same seed => identical event log; a different seed
+    (under delay jitter) diverges."""
+    C = 4.0
+    _, P_, Q_ = _problem(C=C)
+    g = consensus.paper_fig2()
+
+    def run(seed):
+        fm = consensus.FaultModel(graph=g, edge_drop_prob=0.3, seed=11)
+        eng = async_engine.async_dc_elm(
+            g, P_, Q_, C,
+            faults=fm, delays=consensus.DelayModel(base=0.2, jitter=0.6),
+            seed=seed,
+        )
+        eng.run_until(t_max=40.0)
+        return eng.event_log, eng.betas()
+
+    log_a, betas_a = run(0)
+    log_b, betas_b = run(0)
+    log_c, _ = run(1)
+    assert log_a == log_b
+    np.testing.assert_array_equal(betas_a, betas_b)
+    assert log_a != log_c
+
+
+def test_wire_stats_exact_accounting():
+    """Barrier/no-loss: every fire ships deg messages, all billed; under
+    a full outage the dropped messages cost zero wire bytes."""
+    C, K = 4.0, 10
+    state, P_, Q_ = _problem(C=C)
+    g = consensus.paper_fig2()  # ring4: out-degree 2 everywhere
+    eng = async_engine.async_dc_elm(g, P_, Q_, C)
+    res = eng.run_until(t_max=float(K))
+    ws = eng.wire_stats
+    msg_bytes = eng.rule.payload_floats() * 8
+    assert res.fires == 4 * (K + 1)
+    assert ws.rounds == res.fires
+    assert ws.links_live == ws.links_sent == 2 * res.fires
+    assert ws.bytes_on_wire == ws.links_sent * msg_bytes
+    assert ws.per_round_bytes.sum() == ws.bytes_on_wire
+    assert eng.total_bytes_on_wire == ws.bytes_on_wire
+
+    fm = consensus.FaultModel(
+        graph=g,
+        outages=tuple(
+            consensus.LinkOutage(edge=(i, (i + 1) % 4), start=0, duration=10**6)
+            for i in range(4)
+        ),
+    )
+    dead = async_engine.async_dc_elm(g, P_, Q_, C, faults=fm)
+    r2 = dead.run_until(t_max=float(K))
+    assert r2.drops == r2.sends > 0
+    assert dead.wire_stats.bytes_on_wire == 0
+    assert dead.wire_stats.links_live == r2.sends
+
+
+def test_run_until_argument_validation():
+    C = 4.0
+    _, P_, Q_ = _problem(C=C)
+    g = consensus.paper_fig2()
+    eng = async_engine.async_dc_elm(g, P_, Q_, C)
+    with pytest.raises(ValueError, match="residual_tol"):
+        eng.run_until()
+    with pytest.raises(ValueError, match="fire_periods"):
+        async_engine.async_dc_elm(g, P_, Q_, C, fire_periods=[1, 1, 0, 1])
+    with pytest.raises(ValueError, match="sized for"):
+        async_engine.AsyncEngine(
+            consensus.ring(6), async_engine.PushSumRule(g, P_, Q_, C)
+        )
+
+
+# ---------------------------------------------------------------------------
+# Bugfix regressions: FaultModel validation
+# ---------------------------------------------------------------------------
+
+
+def test_fault_model_rejects_non_edge_outage():
+    """A LinkOutage on a non-edge used to be silently erased by the
+    `keep * edges` mask — it must fail loudly at construction."""
+    g = consensus.ring(6)  # (0, 3) is not a ring edge
+    with pytest.raises(ValueError, match="not an edge"):
+        consensus.FaultModel(
+            graph=g,
+            outages=(consensus.LinkOutage(edge=(0, 3), start=0, duration=5),),
+        )
+
+
+def test_fault_model_rejects_negative_intervals():
+    g = consensus.ring(6)
+    with pytest.raises(ValueError, match="negative start/duration"):
+        consensus.FaultModel(
+            graph=g,
+            outages=(consensus.LinkOutage(edge=(0, 1), start=-3, duration=5),),
+        )
+    with pytest.raises(ValueError, match="negative start/duration"):
+        consensus.FaultModel(
+            graph=g,
+            outages=(consensus.LinkOutage(edge=(0, 1), start=0, duration=-1),),
+        )
+    with pytest.raises(ValueError, match="negative start/duration"):
+        consensus.FaultModel(
+            graph=g,
+            crashes=(consensus.NodeCrash(node=2, start=-1, duration=4),),
+        )
+    # valid models still construct (both orientations of an edge)
+    consensus.FaultModel(
+        graph=g,
+        outages=(consensus.LinkOutage(edge=(1, 0), start=0, duration=5),),
+        crashes=(consensus.NodeCrash(node=2, start=0, duration=4),),
+    )
+
+
+def test_delay_model_validation():
+    with pytest.raises(ValueError, match="base delay"):
+        consensus.DelayModel(base=-0.1)
+    with pytest.raises(ValueError, match="jitter"):
+        consensus.DelayModel(jitter=-1.0)
+    with pytest.raises(ValueError, match="edge_scale"):
+        consensus.DelayModel(edge_scale=(((0, 1), 0.0),))
+    with pytest.raises(ValueError, match="self-loop"):
+        consensus.DelayModel(edge_scale=(((2, 2), 1.0),))
+    dm = consensus.DelayModel(base=0.5, edge_scale=(((0, 1), 4.0),))
+    assert dm.scale(1, 0) == 4.0  # symmetric lookup
+    assert dm.scale(1, 2) == 1.0
+    rng = np.random.default_rng(0)
+    assert dm.sample(rng, 0, 1) == 2.0  # no jitter => deterministic
+
+
+# ---------------------------------------------------------------------------
+# Bugfix regressions: gamma validation after churn
+# ---------------------------------------------------------------------------
+
+
+def test_run_rejects_gamma_above_bound():
+    C = 4.0
+    state, P_, Q_ = _problem(C=C)
+    g = consensus.paper_fig2()  # d_max = 2 => bound 0.5
+    eng = engine.simulated_dc_elm(g, C)
+    with pytest.raises(ValueError, match="Thm. 2"):
+        eng.run(state.betas, state.omegas, 0.6, 10)
+    with pytest.raises(ValueError, match="Thm. 2"):
+        eng.step(state.betas, state.omegas, -0.1)
+    # escape hatch for deliberate divergence experiments
+    eng.run(state.betas, state.omegas, 0.6, 2, check_gamma=False)
+    # in-bound gamma passes; bound is surfaced on the engine
+    eng.run(state.betas, state.omegas, 0.4, 2)
+    assert eng.gamma_upper_bound() == pytest.approx(0.5)
+
+
+def test_stream_join_rejects_stale_gamma():
+    """stream_join's default all-incumbent topology jumps d_max to ~V;
+    reusing the pre-churn gamma must fail loudly, and the post-churn
+    bound is surfaced on the returned engine."""
+    V, L, M, C = 6, 8, 2, 4.0
+    ks = jax.random.split(jax.random.key(0), 4)
+    H = jax.random.normal(ks[0], (V, 20, L)) / np.sqrt(L)
+    T = jax.random.normal(ks[1], (V, 20, M))
+    g = consensus.ring(V)
+    eng = engine.simulated_dc_elm(g, C)
+    s = eng.stream_init(H, T)
+    gamma = g.default_gamma()  # 0.45, fine on the ring
+    s, _ = eng.stream_chunk(s, gamma=gamma, num_iters=2)
+    H_new = jax.random.normal(ks[2], (15, L)) / np.sqrt(L)
+    T_new = jax.random.normal(ks[3], (15, M))
+    eng2, s2 = eng.stream_join(s, H_new, T_new)
+    bound2 = eng2.gamma_upper_bound()
+    assert bound2 == pytest.approx(1.0 / V)  # joiner degree = V
+    with pytest.raises(ValueError, match="Thm. 2"):
+        eng2.run(s2.betas, s2.omegas, gamma, 2)
+    eng2.run(s2.betas, s2.omegas, eng2.mixer.default_gamma(), 2)
+    # leave surfaces the (relaxed) bound too
+    eng3, s3 = eng2.stream_leave(s2, V)
+    assert eng3.gamma_upper_bound() == pytest.approx(0.5)
+
+
+# ---------------------------------------------------------------------------
+# Bugfix regressions: serving round-robin snapshot protocol
+# ---------------------------------------------------------------------------
+
+
+def _server(V, L=6, M=2, **kw):
+    from repro.core.features import make_random_features
+
+    fmap = make_random_features(jax.random.key(0), 2, L)
+    betas = jax.random.normal(jax.random.key(1), (V, L, M))
+    store = BetaStore(betas)
+    return ELMServer(fmap, store, **kw), store
+
+
+def test_round_robin_uses_served_snapshot_not_store():
+    """A frozen server keeps rotating over its pinned snapshot's V even
+    after the store publishes a different-sized model (the old code
+    read the live store on every submit, bypassing freeze/staleness)."""
+    srv, store = _server(V=3)
+    x = np.ones((2, 2), np.float32)
+    srv.freeze()  # pins the V=3 snapshot
+    store.publish(jnp.ones((1, 6, 2)))  # live store shrinks to V=1
+    nodes = []
+    for _ in range(6):
+        srv.submit(x)
+        nodes.append(srv.flush()[0].node)
+    assert nodes == [0, 1, 2, 0, 1, 2]
+
+
+def test_round_robin_rewraps_cleanly_when_V_changes():
+    """Node choice re-wraps modulo the new V instead of skipping or
+    repeating replicas under a shifting modulo base."""
+    srv, store = _server(V=3)
+    x = np.ones((2, 2), np.float32)
+    picks = []
+    for _ in range(2):
+        srv.submit(x)
+        picks.append(srv.flush()[0].node)
+    assert picks == [0, 1]
+    store.publish(jnp.ones((2, 6, 2)))  # V: 3 -> 2 mid-rotation
+    for _ in range(4):
+        srv.submit(x)
+        picks.append(srv.flush()[0].node)
+    # counter re-wraps into the smaller V with no replica skipped
+    assert picks[2:] == [0, 1, 0, 1]
+
+
+def test_round_robin_empty_store_still_raises():
+    srv = ELMServer(lambda x: x, BetaStore())
+    with pytest.raises(RuntimeError, match="no published betas"):
+        srv.submit(np.ones((1, 2), np.float32))

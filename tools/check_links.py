@@ -44,6 +44,11 @@ def resolve(base: Path, target: str, *, code: bool = False) -> bool:
     target = target.split("#", 1)[0]
     if not target:
         return True
+    if target.startswith("/"):
+        # absolute paths point outside the repo (machine-local context
+        # like the retrieval set under /root/related) — not checkable
+        # portably, so out of scope rather than broken
+        return True
     if (base.parent / target).exists():
         return True
     if code:
