@@ -69,6 +69,7 @@ def _register():
         "gram": micro.bench_gram,
         "stats": stats_bench.bench_stats,
         "serving": serving_bench.bench_serving,
+        "multitenant": serving_bench.bench_multitenant,
         "async": async_bench.bench_async,
         "ssd": micro.bench_ssd,
         "attn": micro.bench_attention,
@@ -114,7 +115,7 @@ def main() -> None:
                 kw = {"rounds": 1000}
             if args.fast and name == "compression":
                 kw = {"rounds": 600}
-            if name in ("stats", "serving"):
+            if name in ("stats", "serving", "multitenant"):
                 kw = {"fast": args.fast, "tune": args.tune}
             if name == "async":
                 kw = {"fast": args.fast}

@@ -63,7 +63,7 @@ import jax.numpy as jnp
 from repro.analysis.roofline import HBM_BW, PEAK_FLOPS
 
 SCHEMA_VERSION = 1
-OPS = ("stats", "predict")
+OPS = ("stats", "predict", "stacked")
 IMPLS = ("scan", "pallas")
 
 #: working-set budgets for the pruning test (bytes): VMEM for the
@@ -82,8 +82,12 @@ TIE_FACTOR = 1.03
 DEFAULTS = {
     ("stats", "scan"): {"chunk": 2048},
     ("predict", "scan"): {"chunk": 4096},
+    # stacked: the gathered (chunk, L, M) beta tiles dominate the
+    # working set, so the default chunk sits below the single-beta scan
+    ("stacked", "scan"): {"chunk": 2048},
     ("stats", "pallas"): {"block_n": 512, "block_l": 256},
     ("predict", "pallas"): {"block_n": 512, "block_l": 256},
+    ("stacked", "pallas"): {"block_n": 256, "block_l": 256},
 }
 
 _REPO_ROOT = Path(__file__).resolve().parents[3]
@@ -149,9 +153,16 @@ def paired_timeit_ms(fns, *args, repeats=3):
 
 @dataclasses.dataclass(frozen=True)
 class TunePoint:
-    """One (op, impl, problem, backend) tuning coordinate."""
+    """One (op, impl, problem, backend) tuning coordinate.
 
-    op: str  # "stats" | "predict"
+    ``T`` is the stacked-beta tenant count — the new block axis of the
+    multi-tenant predict. It is required for op="stacked" and joins
+    the cache key there (the beta block scales with T); the other ops
+    keep T=0 and their keys are byte-identical to the pre-stacked
+    schema, so committed caches stay valid.
+    """
+
+    op: str  # "stats" | "predict" | "stacked"
     impl: str  # "scan" | "pallas"
     N: int
     D: int
@@ -159,6 +170,7 @@ class TunePoint:
     M: int
     dtype: str
     backend: str
+    T: int = 0  # tenant count; stacked op only
 
     def __post_init__(self):
         if self.op not in OPS:
@@ -167,12 +179,17 @@ class TunePoint:
             raise ValueError(
                 f"impl must be one of {IMPLS}, got {self.impl!r}"
             )
+        if self.op == "stacked" and self.T <= 0:
+            raise ValueError(
+                f"op='stacked' needs a tenant count T >= 1, got {self.T}"
+            )
 
     @property
     def key(self) -> str:
+        t = f"_T{self.T}" if self.T else ""
         return (
             f"{self.op}/{self.impl}/N{self.N}_D{self.D}_L{self.L}"
-            f"_M{self.M}_{self.dtype}/{self.backend}"
+            f"_M{self.M}{t}_{self.dtype}/{self.backend}"
         )
 
     @property
@@ -185,6 +202,8 @@ class TunePoint:
         N, D, L, M = self.N, self.D, self.L, self.M
         if self.op == "stats":
             return 2.0 * N * D * L + 2.0 * N * L * (L + M)
+        # predict and stacked share the useful-flop count: the stacked
+        # gather adds traffic, not MACs
         return 2.0 * N * L * (D + M)
 
 
@@ -197,10 +216,12 @@ def candidates(point: TunePoint) -> list[dict]:
     """
     out = []
     if point.impl == "scan":
-        chunks = {
-            min(c, point.N)
-            for c in (512, 1024, 2048, 4096, 8192, 16384)
-        }
+        grid = (
+            (256, 512, 1024, 2048, 4096)  # gathered tiles cap the chunk
+            if point.op == "stacked"
+            else (512, 1024, 2048, 4096, 8192, 16384)
+        )
+        chunks = {min(c, point.N) for c in grid}
         chunks.add(min(DEFAULTS[(point.op, "scan")]["chunk"], point.N))
         out = [{"chunk": c} for c in sorted(chunks)]
     else:
@@ -220,13 +241,19 @@ def candidates(point: TunePoint) -> list[dict]:
 def working_set_bytes(point: TunePoint, cfg: dict) -> float:
     """Resident bytes a candidate keeps hot (the VMEM/cache test)."""
     s = point.itemsize
-    D, L, M = point.D, point.L, point.M
+    D, L, M, T = point.D, point.L, point.M, point.T
     if point.impl == "scan":
         c = cfg["chunk"]
         if point.op == "stats":
             # X/T chunk + W + H tile + f32 moment carries
             return s * (c * D + D * L + c * L + c * M) + 4.0 * (
                 L * L + L * M
+            )
+        if point.op == "stacked":
+            # X chunk + W + H tile + stacked betas + gathered per-row
+            # beta tiles (the term that caps the chunk) + Y chunk
+            return s * (c * D + D * L + c * L + c * M) + 4.0 * (
+                T * L * M + c * L * M
             )
         # predict: X chunk + W + H tile + beta + Y chunk
         return s * (c * D + D * L + c * L + c * M) + 4.0 * L * M
@@ -235,6 +262,12 @@ def working_set_bytes(point: TunePoint, cfg: dict) -> float:
         # X tile + two W blocks + two H tiles + T tile + f32 P/Q blocks
         return s * (bn * D + 2 * D * bl + 2 * bn * bl + bn * M) + 4.0 * (
             bl * bl + bl * M
+        )
+    if point.op == "stacked":
+        # X tile + W block + H tile + (T, bl, M) beta block + gathered
+        # (bn, bl, M) tiles + f32 out block
+        return s * (bn * D + D * bl + bn * bl) + 4.0 * (
+            T * bl * M + bn * bl * M + bn * M
         )
     # predict: X tile + W block + H tile + beta block + f32 out block
     return s * (bn * D + D * bl + bn * bl + bl * M) + 4.0 * bn * M
@@ -248,7 +281,7 @@ def hbm_bytes(point: TunePoint, cfg: dict) -> float:
     large blocks spill the hidden tile out of the working-set budget.
     """
     s = point.itemsize
-    N, D, L, M = point.N, point.D, point.L, point.M
+    N, D, L, M, T = point.N, point.D, point.L, point.M, point.T
     if point.impl == "scan":
         c = cfg["chunk"]
         steps = math.ceil(N / c)
@@ -257,6 +290,10 @@ def hbm_bytes(point: TunePoint, cfg: dict) -> float:
         # the hidden tile spills past the cache budget -> extra round trip
         spill = s * N * L if s * c * L > CACHE_BUDGET / 2 else 0.0
         out = 4.0 * (L * L + L * M) if point.op == "stats" else s * N * M
+        if point.op == "stacked":
+            # the gathered (c, L, M) beta tiles are materialized per
+            # step: N*L*M of gather traffic across the whole run
+            base += 4.0 * N * L * M
         return base + carry + spill + out
     bn, bl = cfg["block_n"], cfg["block_l"]
     jblocks = math.ceil(L / bl)
@@ -268,8 +305,13 @@ def hbm_bytes(point: TunePoint, cfg: dict) -> float:
             + s * D * L * jblocks * math.ceil(N / bn)
             + 4.0 * (L * L + L * M)
         )
-    # predict: X re-streams once per j (L) block
-    return s * N * D * jblocks + s * D * L * math.ceil(N / bn) + s * N * M
+    # predict/stacked: X re-streams once per j (L) block; the stacked
+    # path additionally re-reads the (T, bl, M) beta block per grid
+    # step and gathers (bn, bl, M) per-row tiles
+    base = s * N * D * jblocks + s * D * L * math.ceil(N / bn) + s * N * M
+    if point.op == "stacked":
+        base += 4.0 * (T * L * M * math.ceil(N / bn) + N * L * M)
+    return base
 
 
 def estimate(point: TunePoint, cfg: dict) -> dict:
@@ -320,6 +362,14 @@ def _problem(point: TunePoint):
     beta = jax.random.normal(
         ks[3], (point.L, point.M), dtype=jnp.float32
     )
+    if point.op == "stacked":
+        betas = jax.random.normal(
+            ks[3], (point.T, point.L, point.M), dtype=jnp.float32
+        )
+        tids = jax.random.randint(
+            jax.random.key(1), (point.N,), 0, point.T, dtype=jnp.int32
+        )
+        return X, W, b, betas, tids
     return X, W, b, beta
 
 
@@ -332,6 +382,17 @@ def candidate_fn(point: TunePoint, cfg: dict):
             return jax.jit(
                 functools.partial(
                     elm_stats_scan, activation="sigmoid",
+                    chunk=cfg["chunk"],
+                )
+            )
+        if point.op == "stacked":
+            from repro.kernels.elm_predict_ref import (
+                elm_predict_stacked_scan,
+            )
+
+            return jax.jit(
+                functools.partial(
+                    elm_predict_stacked_scan, activation="sigmoid",
                     chunk=cfg["chunk"],
                 )
             )
@@ -348,6 +409,14 @@ def candidate_fn(point: TunePoint, cfg: dict):
         return jax.jit(
             functools.partial(
                 elm_stats_pallas, activation="sigmoid", **cfg
+            )
+        )
+    if point.op == "stacked":
+        from repro.kernels.elm_predict import elm_predict_stacked_pallas
+
+        return jax.jit(
+            functools.partial(
+                elm_predict_stacked_pallas, activation="sigmoid", **cfg
             )
         )
     from repro.kernels.elm_predict import elm_predict_pallas
@@ -426,28 +495,28 @@ def _save_cache(payload: dict, cache_path: str) -> None:
     clear_memo()
 
 
-def _resolve_point(op, N, D, L, M, dtype, backend, impl) -> TunePoint:
+def _resolve_point(op, N, D, L, M, dtype, backend, impl, T=0) -> TunePoint:
     backend = backend or jax.default_backend()
     impl = impl or ("pallas" if backend == "tpu" else "scan")
     return TunePoint(
         op=op, impl=impl, N=int(N), D=int(D), L=int(L), M=int(M),
-        dtype=str(jnp.dtype(dtype)), backend=backend,
+        dtype=str(jnp.dtype(dtype)), backend=backend, T=int(T),
     )
 
 
 def lookup(
     op: str, N: int, D: int, L: int, M: int, dtype, *,
     backend: str | None = None, impl: str | None = None,
-    cache_path: str | None = None,
+    cache_path: str | None = None, T: int = 0,
 ) -> dict | None:
     """The tuned config for a point, or None on a cache miss.
 
     Exact key first, then the nearest-N entry for the same
-    (op, impl, D, L, M, dtype, backend) within a 4x N ratio. Memoized
-    in-process (LRU of {_MEMO_SIZE}) so trace-time consultation from
-    the dispatch wrappers is effectively free.
+    (op, impl, D, L, M, [T,] dtype, backend) within a 4x N ratio.
+    Memoized in-process (LRU of {_MEMO_SIZE}) so trace-time
+    consultation from the dispatch wrappers is effectively free.
     """
-    point = _resolve_point(op, N, D, L, M, dtype, backend, impl)
+    point = _resolve_point(op, N, D, L, M, dtype, backend, impl, T)
     path = cache_path or default_cache_path()
     memo_key = (path, point.key)
     with _lock:
@@ -460,8 +529,9 @@ def lookup(
     if hit is not None:
         cfg = dict(hit["config"])
     else:
+        t = f"_T{point.T}" if point.T else ""
         suffix = (
-            f"_D{point.D}_L{point.L}_M{point.M}_{point.dtype}"
+            f"_D{point.D}_L{point.L}_M{point.M}{t}_{point.dtype}"
             f"/{point.backend}"
         )
         prefix = f"{point.op}/{point.impl}/N"
@@ -487,6 +557,7 @@ def tune(
     backend: str | None = None, impl: str | None = None,
     repeats: int = 2, cache_path: str | None = None,
     force: bool = False, prune_factor: float = PRUNE_FACTOR,
+    T: int = 0,
 ) -> dict:
     """Sweep-and-cache one point; returns the winning config.
 
@@ -499,7 +570,7 @@ def tune(
     an existing cache entry and ``force=False`` this is a read (no
     measurement).
     """
-    point = _resolve_point(op, N, D, L, M, dtype, backend, impl)
+    point = _resolve_point(op, N, D, L, M, dtype, backend, impl, T)
     path = cache_path or default_cache_path()
     payload = load_cache(path)
     if not force:
@@ -543,6 +614,7 @@ def resolve_config(
     kw: dict, tuning, *, op: str, impl: str,
     N: int, D: int, L: int, M: int, dtype,
     backend: str | None = None, cache_path: str | None = None,
+    T: int = 0,
 ) -> dict:
     """Merge the tuning policy into a dispatcher's block kwargs.
 
@@ -563,7 +635,7 @@ def resolve_config(
             return kw
         cfg = lookup(
             op, N, D, L, M, dtype,
-            backend=backend, impl=impl, cache_path=cache_path,
+            backend=backend, impl=impl, cache_path=cache_path, T=T,
         )
         if cfg is None:
             return kw

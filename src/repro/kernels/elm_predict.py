@@ -40,6 +40,23 @@ sigmoid), so hidden rows past N are masked to exact zeros — the padded
 Y rows are then exact zeros too, and are sliced off. Padded L columns
 are harmless by construction: beta's padded rows are zero, so the
 g(0)-valued padded hidden columns contribute nothing.
+
+Stacked multi-tenant path (``elm_predict_stacked_pallas``): a
+micro-batch mixing many tenants carries per-row ids into a stacked
+(T, L, M) beta tensor. The shared hidden tile g(XW+b) is computed
+ONCE per (bn, bl) grid step — exactly as above — and contracts against
+the per-row gathered beta tiles
+
+    Y[i] += batched_dot(H_tile, betas[tid[i], l_blk])    (bn, M)
+
+so serving T tenants costs one launch, not T: the feature work is
+shared, only the readout gather is per-tenant (decentralized
+multi-task ELM, arXiv 1904.11366). The beta block is (T, bl, M) — the
+T axis rides whole while L is blocked — and the row gather is a
+jnp.take inside the kernel (VMEM gather; for tenant counts whose
+stacked block outgrows VMEM, shrink ``block_l`` — the autotuner sweeps
+it). Masked padded rows carry tenant id 0; their hidden rows are
+exact zeros so the gathered beta contributes nothing.
 """
 
 from __future__ import annotations
@@ -142,4 +159,102 @@ def elm_predict_pallas(
         out_shape=jax.ShapeDtypeStruct((N2, M2), jnp.float32),
         interpret=interpret,
     )(X, W, b2, beta)
+    return Y[:N, :M]
+
+
+def _elm_predict_stacked_kernel(
+    x_ref, w_ref, b_ref, beta_ref, tid_ref, y_ref,
+    *, activation, num_rows, block_n, operand_dtype,
+):
+    i = pl.program_id(0)
+    l = pl.program_id(1)
+
+    @pl.when(l == 0)
+    def _init_y():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    h = hidden_tile(
+        x_ref, w_ref, b_ref,
+        activation=activation,
+        rows_in_tile=num_rows - i * block_n,
+        out_dtype=operand_dtype,
+    )
+    betas = beta_ref[...]  # (T, bl, M): whole T axis, L blocked
+    tids = tid_ref[...][:, 0]  # (bn,)
+    bg = jnp.take(betas, tids, axis=0)  # (bn, bl, M) per-row beta tiles
+    # batched row contraction: Y[n] += h[n] @ bg[n] — same dot_general
+    # as the scan/oracle `_gather_contract`, so per-row results do not
+    # depend on launch packing
+    y = jax.lax.dot_general(
+        h.astype(betas.dtype)[:, None, :], bg,
+        dimension_numbers=(((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32,
+    )
+    y_ref[...] += y[:, 0, :]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("activation", "block_l", "block_n", "interpret"),
+)
+def elm_predict_stacked_pallas(
+    X: jax.Array,
+    W: jax.Array,
+    b: jax.Array,
+    betas: jax.Array,
+    tenant_ids: jax.Array,
+    *,
+    activation: str = "sigmoid",
+    block_l: int = 256,
+    block_n: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    """Y[n] = g(X W + b)[n] @ betas[tenant_ids[n]] with H fused in VMEM.
+
+    X: (N, D), W: (D, L), b: (L,), betas: (T, L, M), tenant_ids: (N,)
+    int32 -> Y: (N, M) f32. One launch serves every tenant in the
+    batch; the shared hidden tile is computed once per grid step.
+    """
+    N, D = X.shape
+    L = W.shape[1]
+    T, _, M = betas.shape
+    bl = min(block_l, L)
+    bn = min(block_n, N)
+    pN, pL, pD, pM = (-N) % bn, (-L) % bl, (-D) % 128, (-M) % 128
+    if pN or pD:
+        X = jnp.pad(X, ((0, pN), (0, pD)))
+    if pL or pD:
+        W = jnp.pad(W, ((0, pD), (0, pL)))
+    b2 = jnp.pad(b, (0, pL))[None, :].astype(jnp.float32)
+    if pL or pM:
+        betas = jnp.pad(betas, ((0, 0), (0, pL), (0, pM)))
+    # padded rows gather tenant 0's beta but their hidden rows are
+    # masked to exact zeros, so the contribution is exactly zero
+    tids = jnp.asarray(tenant_ids, jnp.int32)
+    if pN:
+        tids = jnp.pad(tids, (0, pN))
+    tids2 = tids[:, None]  # (N2, 1): TPU wants >= 2D operands
+    W = W.astype(X.dtype)
+    betas = betas.astype(jnp.promote_types(X.dtype, betas.dtype))
+    N2, L2, M2 = X.shape[0], W.shape[1], betas.shape[2]
+    grid = (N2 // bn, L2 // bl)
+    kernel = functools.partial(
+        _elm_predict_stacked_kernel,
+        activation=activation, num_rows=N, block_n=bn,
+        operand_dtype=X.dtype,
+    )
+    Y = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, X.shape[1]), lambda i, l: (i, 0)),   # X
+            pl.BlockSpec((W.shape[0], bl), lambda i, l: (0, l)),   # W
+            pl.BlockSpec((1, bl), lambda i, l: (0, l)),            # b
+            pl.BlockSpec((T, bl, M2), lambda i, l: (0, l, 0)),     # betas
+            pl.BlockSpec((bn, 1), lambda i, l: (i, 0)),            # tids
+        ],
+        out_specs=pl.BlockSpec((bn, M2), lambda i, l: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((N2, M2), jnp.float32),
+        interpret=interpret,
+    )(X, W, b2, betas, tids2)
     return Y[:N, :M]

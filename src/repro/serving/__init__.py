@@ -8,6 +8,13 @@ from repro.serving.elm_server import (
     latency_percentiles,
 )
 from repro.serving.engine import ContinuousBatchingEngine, Request
+from repro.serving.tenants import (
+    RetiredTenantError,
+    TenantPublisher,
+    TenantRegistry,
+    TenantSnapshot,
+    UnknownTenantError,
+)
 
 __all__ = [
     "BetaSnapshot",
@@ -18,5 +25,10 @@ __all__ = [
     "PredictRequest",
     "PredictResponse",
     "Request",
+    "RetiredTenantError",
+    "TenantPublisher",
+    "TenantRegistry",
+    "TenantSnapshot",
+    "UnknownTenantError",
     "latency_percentiles",
 ]

@@ -57,10 +57,26 @@ stochastic int8 quantizer (core/compression.int8_roundtrip, keyed
 deterministically by snapshot version and node) — the bytes/latency
 tradeoff row of benchmarks/serving_bench.py.
 
+Multi-tenant mode: constructing either server over a
+``serving.TenantRegistry`` (instead of a ``BetaStore``) switches it to
+per-tenant serving — requests carry ``tenant=`` instead of ``node=``,
+packing freely mixes tenants in one padded bucket, and each launch is
+ONE stacked-beta fused predict (``kernels.elm_predict_ops.
+predict_stacked``): the shared g(XW+b) row tile is computed once and
+contracted against per-row gathered beta tiles from the snapshot's
+(T, L, M) stacked tensor. The flush-level snapshot capture pins every
+request's *per-tenant* version for the whole flush (split chunks
+included), the staleness bound is per tenant
+(``registry.stale_tenants``), and requests whose tenant was retired
+mid-queue are rejected into ``server.rejections`` with the named
+``RetiredTenantError`` instead of poisoning the flush.
+
 The server itself is a single-dispatcher object (submit/flush from one
 thread); the store is safe to publish into from another thread — the
 serve-while-train loop in ``examples/elm_serving.py`` runs training
-events and query traffic against the same store.
+events and query traffic against the same store, and
+``TenantRegistry.publisher(tenant)`` is the per-tenant
+``stream_chunk(publish_to=...)`` hook.
 """
 
 from __future__ import annotations
@@ -74,6 +90,8 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.serving.tenants import TenantRegistry, TenantSnapshot
 
 
 # ---------------------------------------------------------------------------
@@ -148,18 +166,21 @@ class BetaStore:
 class PredictRequest:
     uid: int
     x: np.ndarray  # (n, D) query rows
-    node: int  # which node replica answers
+    node: int  # which node replica answers (0 in multi-tenant mode)
     v_submit: int  # store version when the request was accepted
     t_submit: float
+    tenant: object = None  # multi-tenant mode: which model answers
 
 
 @dataclasses.dataclass(frozen=True)
 class PredictResponse:
     uid: int
     y: np.ndarray  # (n, M)
-    version: int  # beta snapshot that produced y (whole response)
+    version: int  # beta snapshot that produced y (whole response);
+    # in multi-tenant mode this is the *per-tenant* version
     node: int
     latency_s: float
+    tenant: object = None
 
 
 def latency_percentiles(latencies_s) -> dict:
@@ -223,8 +244,23 @@ class ELMServer:
                 f"beta_mode must be one of {self.BETA_MODES}, got "
                 f"{beta_mode!r}"
             )
+        if int(max_staleness) < 0:
+            raise ValueError(
+                f"max_staleness must be >= 0 (trailing versions allowed "
+                f"at flush time), got {max_staleness}"
+            )
+        if int(int8_tile) <= 0:
+            raise ValueError(
+                f"int8_tile must be a positive tile width, got {int8_tile}"
+            )
         self.feature_map = feature_map
-        self.store = store if isinstance(store, BetaStore) else BetaStore(store)
+        self.registry = store if isinstance(store, TenantRegistry) else None
+        if self.registry is not None:
+            self.store = store  # multi-tenant mode: stacked-beta launches
+        else:
+            self.store = (
+                store if isinstance(store, BetaStore) else BetaStore(store)
+            )
         self.buckets = tuple(int(b) for b in buckets)
         self.max_staleness = int(max_staleness)
         self.use_kernel = use_kernel
@@ -242,10 +278,13 @@ class ELMServer:
         self._fns: dict[int, Callable] = {}  # bucket rows -> compiled fn
         self._parts: dict[int, list] = {}  # uid -> chunks of a split req
         self._beta_q: dict[tuple, jax.Array] = {}  # (version, node) -> deq
+        #: multi-tenant mode: (uid, tenant, error) for requests whose
+        #: tenant left the pinned snapshot between submit and flush
+        self.rejections: list[tuple] = []
         self.metrics = {
             "requests": 0, "responses": 0, "batches": 0,
             "rows": 0, "padded_rows": 0, "swaps": 0,
-            "beta_bytes": 0, "latencies_s": [],
+            "beta_bytes": 0, "rejected": 0, "latencies_s": [],
         }
 
     # ------------------------------------------------------------------ api
@@ -284,20 +323,54 @@ class ELMServer:
         self._rr_node = node + 1
         return node
 
-    def submit(self, x, *, node: int | None = None) -> int:
+    def _admit(self, node: int | None, tenant) -> int:
+        """Validate the request's addressing mode; returns the node.
+
+        Single-tenant (BetaStore) serving addresses a node replica
+        (``node=``); multi-tenant (TenantRegistry) serving addresses a
+        tenant model (``tenant=``). Mixing them raises a named error,
+        and unknown/retired tenants are rejected here at submit time.
+        """
+        if self.registry is not None:
+            if tenant is None:
+                raise ValueError(
+                    "tenant= is required when serving a TenantRegistry; "
+                    "registered tenants: "
+                    f"{sorted(map(repr, self.registry.tenant_ids))}"
+                )
+            if node is not None:
+                raise ValueError(
+                    "node= applies to single-tenant (BetaStore) serving; "
+                    "this server serves a TenantRegistry — pin the model "
+                    "with tenant= instead"
+                )
+            # raises the named Unknown/RetiredTenantError for bad ids
+            self.registry.tenant_version(tenant)
+            return 0
+        if tenant is not None:
+            raise ValueError(
+                "tenant= applies to multi-tenant (TenantRegistry) "
+                "serving; this server serves a BetaStore — pin the node "
+                "replica with node= instead"
+            )
+        return self._next_node(node)
+
+    def submit(self, x, *, node: int | None = None, tenant=None) -> int:
         """Queue one request of shape (n, D) (or (D,)); returns its uid.
 
         Rows are coerced to the server's ``row_dtype`` (one packed batch
         = one dtype, by contract) and D must match the feature map's
         input width (or the first request's, when the map doesn't say).
         node pins the answering replica; default round-robin across the
-        store's V node models. Oversized requests are split into
-        max-bucket chunks here and reassembled at flush.
+        store's V node models. Over a ``TenantRegistry`` pass ``tenant=``
+        instead — packing freely mixes tenants in one stacked launch.
+        Oversized requests are split into max-bucket chunks here and
+        reassembled at flush.
         """
+        node = self._admit(node, tenant)
         x = self._coerce_rows(x)
         uid = self._uid
         self._uid += 1
-        node = self._next_node(node)
         self.metrics["requests"] += 1
         self.metrics["rows"] += x.shape[0]
         cap = self.buckets[-1]
@@ -308,7 +381,7 @@ class ELMServer:
         for part, chunk in enumerate(chunks):
             self._queue.append(PredictRequest(
                 uid=uid if len(chunks) == 1 else (uid, part),
-                x=chunk, node=node,
+                x=chunk, node=node, tenant=tenant,
                 v_submit=self.store.version, t_submit=now,
             ))
         return uid
@@ -317,15 +390,29 @@ class ELMServer:
         """Serve everything pending; returns responses in uid order.
 
         One store read for the whole flush (hot-swap point); FIFO
-        packing per node into the smallest bucket that fits. Includes
-        any responses a ``predict()`` call served but did not claim.
+        packing per node into the smallest bucket that fits — in
+        multi-tenant mode one "node" group mixes every tenant, so each
+        packed batch is one stacked-beta launch. Includes any responses
+        a ``predict()`` call served but did not claim.
         """
-        self._refresh_snapshot()
+        queued = {r.tenant for r in self._queue if r.tenant is not None}
+        self._refresh_snapshot(queued or None)
         responses = self._leftover
         self._leftover = []
         by_node: dict[int, list[PredictRequest]] = {}
+        rejected: set = set()
         while self._queue:
             r = self._queue.popleft()
+            if (
+                self.registry is not None
+                and r.tenant not in self._snap.slots
+            ):
+                uid = r.uid[0] if isinstance(r.uid, tuple) else r.uid
+                if uid not in rejected:
+                    rejected.add(uid)
+                    self._reject(uid, r.tenant)
+                self._parts.pop(uid, None)
+                continue
             by_node.setdefault(r.node, []).append(r)
         served: list[PredictResponse] = []
         for node, reqs in by_node.items():
@@ -342,14 +429,15 @@ class ELMServer:
         if len(lat) > self.LATENCY_WINDOW:  # long-running servers: bound it
             del lat[: len(lat) - self.LATENCY_WINDOW]
 
-    def predict(self, x, *, node: int | None = None) -> np.ndarray:
+    def predict(self, x, *, node: int | None = None,
+                tenant=None) -> np.ndarray:
         """Synchronous single-request convenience: submit + flush.
 
         Other requests pending at call time are served by the same
         flush; their responses are retained and returned by the next
         ``flush()`` rather than dropped.
         """
-        uid = self.submit(x, node=node)
+        uid = self.submit(x, node=node, tenant=tenant)
         mine = None
         for r in self.flush():
             if r.uid == uid:
@@ -382,16 +470,47 @@ class ELMServer:
 
     # ------------------------------------------------------------- internals
 
-    def _refresh_snapshot(self):
-        latest = self.store.version
+    def _refresh_snapshot(self, tenants=None):
+        """Bounded-staleness hot-swap point.
+
+        Single-tenant: refresh when the store's global version trails by
+        more than ``max_staleness``. Multi-tenant: per-tenant rule — a
+        tenant that keeps publishing cannot pin everyone else's snapshot
+        fresh, so refresh only when a *served* tenant (``tenants``, or
+        any when None) is stale or missing from the snapshot.
+        """
         if self._snap is None:
             self._snap = self.store.snapshot()
             return
         if self._frozen:
             return
+        if self.registry is not None:
+            stale = set(self.registry.stale_tenants(
+                self._snap, self.max_staleness
+            ))
+            if tenants is not None:
+                stale &= set(tenants)
+            if stale:
+                self._snap = self.store.snapshot()
+                self.metrics["swaps"] += 1
+            return
+        latest = self.store.version
         if latest - self._snap.version > self.max_staleness:
             self._snap = self.store.snapshot()
             self.metrics["swaps"] += 1
+
+    def _reject(self, uid, tenant) -> None:
+        """Record a request whose tenant left the pinned snapshot
+        between submit and flush: the named error lands in
+        ``self.rejections`` instead of poisoning the whole flush
+        (submit() already rejects unknown/retired tenants eagerly)."""
+        try:
+            self._snap._check(tenant)
+        except KeyError as err:  # Unknown/RetiredTenantError
+            self.rejections.append((uid, tenant, err))
+            self.metrics["rejected"] += 1
+            return
+        raise AssertionError("rejected a servable tenant")
 
     def _pack(self, reqs: list) -> list[list]:
         """FIFO-pack requests into batches of <= max-bucket total rows."""
@@ -430,6 +549,58 @@ class ELMServer:
 
             fn = self._fns[bucket] = jax.jit(run)
         return fn
+
+    def _compiled_stacked(self, bucket: int) -> Callable:
+        """Compile-once stacked-beta program for one bucket: a batch
+        mixing many tenants is ONE fused launch, no per-tenant
+        recompilation (re-traced only when the snapshot's tenant count
+        changes the stacked tensor's shape)."""
+        key = ("stacked", bucket)
+        fn = self._fns.get(key)
+        if fn is None:
+            fmap, use_kernel, sample = (
+                self.feature_map, self.use_kernel, self.sample_fn,
+            )
+
+            def run(xpad, betas, tids):
+                from repro.kernels import elm_predict_ops
+
+                y = elm_predict_ops.predict_stacked(
+                    xpad, fmap, betas, tids, use_kernel=use_kernel
+                )
+                return sample(y) if sample is not None else y
+
+            fn = self._fns[key] = jax.jit(run)
+        return fn
+
+    def _stacked_for(self, snap: TenantSnapshot) -> jax.Array:
+        """The served stacked (T, L, M) tensor: published, or its int8
+        round-trip (deterministic in the snapshot version; cached so
+        repeated launches pay quantization once per snapshot)."""
+        if self.beta_mode == "fp32":
+            return snap.betas
+        key = (snap.version, "stacked")
+        deq = self._beta_q.get(key)
+        if deq is None:
+            from repro.core.compression import (
+                CompressionSpec, int8_roundtrip,
+            )
+
+            betas = snap.betas.astype(jnp.float32)
+            flat = int8_roundtrip(
+                betas.reshape(-1), self.int8_tile,
+                jax.random.key(snap.version),
+            )
+            deq = flat.reshape(betas.shape)
+            self._beta_q = {
+                k: v for k, v in self._beta_q.items()
+                if k[0] == snap.version
+            }
+            self._beta_q[key] = deq
+            self.metrics["beta_bytes"] += CompressionSpec(
+                mode="int8", tile=self.int8_tile
+            ).message_bytes(int(betas.size))
+        return deq
 
     def _beta_for(self, snap: BetaSnapshot, node: int) -> jax.Array:
         """The served beta for one node: published, or its int8
@@ -471,17 +642,36 @@ class ELMServer:
         for r in batch:
             X[off:off + r.x.shape[0]] = r.x
             off += r.x.shape[0]
-        beta = self._beta_for(snap, node)
-        Y = np.asarray(self._compiled(bucket)(jnp.asarray(X), beta))
+        if self.registry is not None:
+            # one stacked launch mixes every tenant in the batch; the
+            # padded tail rows carry slot 0 (their hidden rows are
+            # masked to zero, so the gathered beta contributes nothing)
+            tids = np.zeros((bucket,), np.int32)
+            off = 0
+            for r in batch:
+                tids[off:off + r.x.shape[0]] = snap.slot(r.tenant)
+                off += r.x.shape[0]
+            Y = np.asarray(self._compiled_stacked(bucket)(
+                jnp.asarray(X), self._stacked_for(snap), jnp.asarray(tids)
+            ))
+        else:
+            beta = self._beta_for(snap, node)
+            Y = np.asarray(self._compiled(bucket)(jnp.asarray(X), beta))
         self.metrics["batches"] += 1
         self.metrics["padded_rows"] += bucket - rows
         now = time.perf_counter()
         out, off = [], 0
         for r in batch:
             n = r.x.shape[0]
+            if self.registry is not None:
+                # the flush-level snapshot pins every request's
+                # per-tenant version for the whole flush
+                version, rnode = snap.tenant_version(r.tenant), 0
+            else:
+                version, rnode = snap.version, node % snap.num_nodes
             out.append(PredictResponse(
-                uid=r.uid, y=Y[off:off + n], version=snap.version,
-                node=node % snap.num_nodes, latency_s=now - r.t_submit,
+                uid=r.uid, y=Y[off:off + n], version=version,
+                node=rnode, tenant=r.tenant, latency_s=now - r.t_submit,
             ))
             off += n
         return out
@@ -508,6 +698,7 @@ class ELMServer:
                 y=np.concatenate([p.y for p in parts], axis=0),
                 version=parts[0].version,
                 node=parts[0].node,
+                tenant=parts[0].tenant,
                 latency_s=max(p.latency_s for p in parts),
             ))
         return whole
@@ -527,6 +718,7 @@ class _Pending:
     node: int
     deadline: float | None
     t_submit: float
+    tenant: object = None  # multi-tenant mode: which model answers
     served: list = dataclasses.field(default_factory=list)
     offset: int = 0  # rows already served (mid-flight when 0 < offset < n)
     version: int | None = None  # pinned at the request's first launch
@@ -592,6 +784,16 @@ class ContinuousELMServer(ELMServer):
         clock: Callable[[], float] = time.perf_counter,
         **kw,
     ):
+        if int(slots) <= 0:
+            raise ValueError(
+                f"slots must be a positive in-flight row count, got "
+                f"{slots}"
+            )
+        if float(deadline_slack_s) < 0.0:
+            raise ValueError(
+                f"deadline_slack_s must be >= 0 seconds, got "
+                f"{deadline_slack_s}"
+            )
         super().__init__(feature_map, store, buckets=(int(slots),), **kw)
         if not 0.0 <= float(min_fill) <= 1.0:
             raise ValueError(f"min_fill must be in [0, 1], got {min_fill}")
@@ -605,23 +807,24 @@ class ContinuousELMServer(ELMServer):
 
     # ------------------------------------------------------------------ api
 
-    def submit(self, x, *, node: int | None = None,
+    def submit(self, x, *, node: int | None = None, tenant=None,
                deadline: float | None = None) -> int:
         """Queue one request; rows are admitted continuously by step().
 
         deadline: absolute time (on the server's ``clock``) by which
         the request should be served; orders admission (EDF) and
         force-launches partial batches about to miss. None = FIFO
-        behind all deadlined requests.
+        behind all deadlined requests. Over a ``TenantRegistry`` pass
+        ``tenant=`` instead of ``node=``.
         """
+        node = self._admit(node, tenant)
         x = self._coerce_rows(x)
         uid = self._uid
         self._uid += 1
-        node = self._next_node(node)
         self.metrics["requests"] += 1
         self.metrics["rows"] += x.shape[0]
         self._pending.append(_Pending(
-            uid=uid, x=x, node=node,
+            uid=uid, x=x, node=node, tenant=tenant,
             deadline=None if deadline is None else float(deadline),
             t_submit=self.clock(),
         ))
@@ -636,7 +839,23 @@ class ContinuousELMServer(ELMServer):
         if not mid_flight:
             # refresh only between requests: every row of a request is
             # served by the version pinned at its first launch
-            self._refresh_snapshot()
+            self._refresh_snapshot(
+                {p.tenant for p in self._pending}
+                if self.registry is not None else None
+            )
+            if self.registry is not None:
+                # nothing is mid-flight, so every pending request is
+                # still unstarted: reject the ones whose tenant left
+                # the fresh snapshot (named error in self.rejections)
+                keep = []
+                for p in self._pending:
+                    if p.tenant in self._snap.slots:
+                        keep.append(p)
+                    else:
+                        self._reject(p.uid, p.tenant)
+                self._pending = keep
+                if not self._pending:
+                    return []
         self._pending.sort(key=lambda p: p.slack_key)
         head = self._pending[0]
         ready = sum(p.remaining for p in self._pending)
@@ -657,7 +876,17 @@ class ContinuousELMServer(ELMServer):
         # admit rows (EDF order) into per-node batches of <= slots rows
         batches: dict[int, list[tuple[_Pending, int, int]]] = {}
         fill: dict[int, int] = {}
+        snap = self._snap
         for p in self._pending:
+            if (
+                self.registry is not None
+                and p.tenant not in snap.slots
+            ):
+                # admitted while another request was mid-flight and the
+                # pinned snapshot predates this tenant: wait for the
+                # next refresh point (retired tenants are rejected
+                # there instead)
+                continue
             free = self.slots - fill.get(p.node, 0)
             take = min(free, p.remaining)
             if take <= 0:
@@ -665,23 +894,36 @@ class ContinuousELMServer(ELMServer):
             batches.setdefault(p.node, []).append((p, p.offset, take))
             fill[p.node] = fill.get(p.node, 0) + take
             p.offset += take
-        snap = self._snap
         for node, parts in batches.items():
             X = np.zeros((self.slots, parts[0][0].x.shape[1]),
                          self.row_dtype)
+            tids = np.zeros((self.slots,), np.int32)
             off = 0
             for p, start, take in parts:
                 X[off:off + take] = p.x[start:start + take]
+                if self.registry is not None:
+                    tids[off:off + take] = snap.slot(p.tenant)
                 off += take
-            Y = np.asarray(self._compiled(self.slots)(
-                jnp.asarray(X), self._beta_for(snap, node)
-            ))
+            if self.registry is not None:
+                Y = np.asarray(self._compiled_stacked(self.slots)(
+                    jnp.asarray(X), self._stacked_for(snap),
+                    jnp.asarray(tids),
+                ))
+            else:
+                Y = np.asarray(self._compiled(self.slots)(
+                    jnp.asarray(X), self._beta_for(snap, node)
+                ))
             self.metrics["batches"] += 1
             self.metrics["padded_rows"] += self.slots - off
             off = 0
             for p, _, take in parts:
                 if p.version is None:
-                    p.version = snap.version
+                    # multi-tenant mode pins the *per-tenant* version
+                    # of the request's first launch
+                    p.version = (
+                        snap.tenant_version(p.tenant)
+                        if self.registry is not None else snap.version
+                    )
                 p.served.append(Y[off:off + take])
                 off += take
         self.metrics["steps"] += 1
@@ -694,7 +936,11 @@ class ContinuousELMServer(ELMServer):
                     uid=p.uid,
                     y=np.concatenate(p.served, axis=0),
                     version=p.version,
-                    node=p.node % snap.num_nodes,
+                    node=(
+                        0 if self.registry is not None
+                        else p.node % snap.num_nodes
+                    ),
+                    tenant=p.tenant,
                     latency_s=done_at - p.t_submit,
                 ))
             else:

@@ -1,0 +1,333 @@
+"""Versioned multi-tenant model registry over one shared feature map.
+
+The ROADMAP's "millions of users" story (open item 2): decentralized
+multi-task ELM (arXiv 1904.11366) shows many related tasks sharing ONE
+hidden layer while learning per-task readouts, and subnetwork theory
+(arXiv 1610.09608) justifies restricting per-tenant learning to the
+shared feature subspace. Operationally that means thousands of
+``(tenant_id, version) -> beta`` readouts over a single
+``RandomFeatureMap``, hot-swapped independently, and served together:
+a micro-batch mixing many tenants is answered by ONE stacked-beta
+kernel launch (kernels/elm_predict.py, ``elm_predict_stacked_*``).
+
+``TenantRegistry`` generalizes ``serving.BetaStore`` from "V node
+replicas of one model" to "T independent tenant models":
+
+* **Versioning.** Every ``publish(tenant, beta)`` bumps that tenant's
+  own version (1-based, monotonic across retire/re-register) AND the
+  registry's global version. ``retire(tenant)`` removes the tenant;
+  subsequent lookups raise the *named* ``RetiredTenantError`` (vs
+  ``UnknownTenantError`` for ids never seen) so the serving plane can
+  reject retired traffic distinguishably.
+* **Atomic snapshots.** Readers call ``snapshot()`` and get an
+  immutable ``TenantSnapshot``: the stacked (T, L, M) beta tensor plus
+  tenant -> (slot, version) maps, published under one atomic reference
+  swap exactly like ``BetaSnapshot``. Publishers mutate a host-side
+  buffer under the registry lock; the stacked device tensor is
+  (re)built lazily on the first snapshot after a mutation, so a burst
+  of publishes costs one stack, not one per publish.
+* **Staleness bounds.** Snapshots carry per-tenant versions;
+  ``stale_tenants(snapshot, max_staleness)`` lists tenants whose
+  snapshot version trails their latest publish by more than the bound
+  — the serving plane's per-tenant refresh rule (a tenant that keeps
+  publishing cannot pin every OTHER tenant's snapshot fresh).
+* **int8 beta tiles.** ``beta_mode="int8"`` round-trips every
+  published beta through the compression plane's per-tile stochastic
+  quantizer (core/compression.int8_roundtrip, keyed deterministically
+  by tenant uid and version); ``metrics["beta_bytes"]`` accounts the
+  quantized wire/storage bytes via ``CompressionSpec.message_bytes``.
+* **Consensus hook.** ``registry.publisher(tenant, reduce=...)`` is a
+  ``publish_to=`` adapter for ``ConsensusEngine.stream_chunk``: the
+  post-consensus stacked (V, L, M) betas are reduced (mean over nodes,
+  or one node's estimate) into that tenant's next version, so per-user
+  training streams publish straight into the serving plane.
+
+Thread-safety contract: any number of publisher threads may
+``publish``/``retire`` concurrently with reader ``snapshot`` calls;
+a snapshot is immutable and internally consistent (its stacked tensor
+and maps describe one global version).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Mapping
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+BETA_MODES = ("fp32", "int8")
+
+
+class UnknownTenantError(KeyError):
+    """A tenant id that was never registered with the registry."""
+
+
+class RetiredTenantError(KeyError):
+    """A tenant id that was registered and has since been retired."""
+
+
+@dataclasses.dataclass(frozen=True)
+class TenantSnapshot:
+    """An immutable multi-tenant model: stacked betas + tenant maps.
+
+    ``betas`` is the (T, L, M) stacked tensor the fused stacked-beta
+    kernel contracts against; ``slots`` maps tenant_id -> row in it;
+    ``versions`` maps tenant_id -> the per-tenant version this
+    snapshot holds. ``version`` is the registry's global version at
+    capture (bumped by every publish/retire on any tenant).
+    """
+
+    version: int
+    betas: jax.Array  # (T, L, M)
+    slots: Mapping  # tenant_id -> row index into betas
+    versions: Mapping  # tenant_id -> per-tenant version
+    retired: frozenset = frozenset()  # ids retired as of this snapshot
+
+    @property
+    def num_tenants(self) -> int:
+        return self.betas.shape[0]
+
+    @property
+    def tenant_ids(self) -> tuple:
+        return tuple(self.slots)
+
+    def _check(self, tenant):
+        if tenant not in self.slots:
+            if tenant in self.retired:
+                raise RetiredTenantError(
+                    f"tenant {tenant!r} is retired; re-register it with "
+                    f"publish() before serving"
+                )
+            raise UnknownTenantError(
+                f"unknown tenant {tenant!r}; registered tenants: "
+                f"{sorted(map(repr, self.slots))}"
+            )
+
+    def slot(self, tenant) -> int:
+        """Row of ``tenant`` in the stacked tensor (named errors)."""
+        self._check(tenant)
+        return self.slots[tenant]
+
+    def tenant_version(self, tenant) -> int:
+        self._check(tenant)
+        return self.versions[tenant]
+
+    def beta(self, tenant) -> jax.Array:
+        """One tenant's (L, M) readout out of the stacked tensor."""
+        return self.betas[self.slot(tenant)]
+
+
+class TenantPublisher:
+    """``publish_to=`` adapter: consensus betas -> one tenant's slot.
+
+    ``ConsensusEngine.stream_chunk(publish_to=...)`` hands over the
+    post-consensus stacked (V, L, M) node betas; this reduces them to
+    the tenant's single (L, M) readout — ``reduce="mean"`` averages
+    the node estimates (they agree at consensus; the mean is the
+    natural serving model mid-consensus too), an int picks that node's
+    estimate — and publishes it as the tenant's next version.
+    """
+
+    def __init__(self, registry: "TenantRegistry", tenant, reduce="mean"):
+        if reduce != "mean" and not isinstance(reduce, int):
+            raise ValueError(
+                f'reduce must be "mean" or a node index, got {reduce!r}'
+            )
+        self.registry = registry
+        self.tenant = tenant
+        self.reduce = reduce
+
+    def publish(self, betas) -> int:
+        b = jnp.asarray(betas)
+        if b.ndim == 2:  # already a single (L, M) readout
+            beta = b
+        elif b.ndim == 3:
+            beta = (
+                jnp.mean(b, axis=0) if self.reduce == "mean"
+                else b[self.reduce]
+            )
+        else:
+            raise ValueError(
+                f"betas must be (L, M) or stacked (V, L, M), got {b.shape}"
+            )
+        return self.registry.publish(self.tenant, beta)
+
+
+class TenantRegistry:
+    """Thread-safe versioned registry of per-tenant betas.
+
+    betas: optional initial {tenant_id: (L, M) beta} mapping.
+    beta_mode: "fp32" stores published betas as-is; "int8" round-trips
+      each through the compression plane's per-tile stochastic int8
+      quantizer at publish time (deterministic in tenant uid and
+      version) and accounts the quantized bytes.
+    int8_tile: quantization tile width for beta_mode="int8".
+    """
+
+    def __init__(self, betas=None, *, beta_mode: str = "fp32",
+                 int8_tile: int = 128):
+        if beta_mode not in BETA_MODES:
+            raise ValueError(
+                f"beta_mode must be one of {BETA_MODES}, got {beta_mode!r}"
+            )
+        if int(int8_tile) <= 0:
+            raise ValueError(
+                f"int8_tile must be a positive int, got {int8_tile}"
+            )
+        self.beta_mode = beta_mode
+        self.int8_tile = int(int8_tile)
+        self._lock = threading.Lock()
+        self._betas: dict = {}  # tenant -> np.ndarray (L, M)
+        self._versions: dict = {}  # tenant -> live per-tenant version
+        self._uids: dict = {}  # tenant -> stable registration uid
+        self._retired: dict = {}  # tenant -> last version before retire
+        self._version = 0  # global version (any mutation bumps)
+        self._next_uid = 0
+        self._shape = None  # (L, M) pinned by the first publish
+        self._snap: TenantSnapshot | None = None
+        self.metrics = {"publishes": 0, "retires": 0, "beta_bytes": 0}
+        if betas is not None:
+            for tenant, beta in dict(betas).items():
+                self.publish(tenant, beta)
+
+    # -------------------------------------------------------------- write
+
+    def _coerce(self, tenant, beta) -> np.ndarray:
+        b = np.asarray(jnp.asarray(beta), np.float32)
+        if b.ndim != 2:
+            raise ValueError(
+                f"beta must be a (L, M) readout matrix, got shape {b.shape}"
+            )
+        if self._shape is None:
+            self._shape = b.shape
+        elif b.shape != self._shape:
+            raise ValueError(
+                f"beta for tenant {tenant!r} has shape {b.shape}; this "
+                f"registry serves {self._shape} readouts"
+            )
+        return b
+
+    def _quantize(self, beta: np.ndarray, uid: int, version: int):
+        from repro.core.compression import CompressionSpec, int8_roundtrip
+
+        key = jax.random.fold_in(jax.random.key(version), uid)
+        flat = int8_roundtrip(
+            jnp.asarray(beta).reshape(-1), self.int8_tile, key
+        )
+        nbytes = CompressionSpec(
+            mode="int8", tile=self.int8_tile
+        ).message_bytes(int(beta.size))
+        return np.asarray(flat, np.float32).reshape(beta.shape), nbytes
+
+    def publish(self, tenant, beta) -> int:
+        """Register or hot-swap one tenant's readout; returns its new
+        per-tenant version (1-based, monotonic across retirement)."""
+        b = self._coerce(tenant, beta)
+        with self._lock:
+            prev = self._versions.get(
+                tenant, self._retired.pop(tenant, 0)
+            )
+            version = prev + 1
+            if tenant not in self._uids:
+                self._uids[tenant] = self._next_uid
+                self._next_uid += 1
+            if self.beta_mode == "int8":
+                b, nbytes = self._quantize(b, self._uids[tenant], version)
+                self.metrics["beta_bytes"] += nbytes
+            self._betas[tenant] = b
+            self._versions[tenant] = version
+            self._version += 1
+            self.metrics["publishes"] += 1
+            return version
+
+    def retire(self, tenant) -> None:
+        """Remove a tenant; later lookups raise RetiredTenantError."""
+        with self._lock:
+            if tenant not in self._versions:
+                if tenant in self._retired:
+                    raise RetiredTenantError(
+                        f"tenant {tenant!r} is already retired"
+                    )
+                raise UnknownTenantError(
+                    f"unknown tenant {tenant!r}; registered tenants: "
+                    f"{sorted(map(repr, self._versions))}"
+                )
+            self._retired[tenant] = self._versions.pop(tenant)
+            del self._betas[tenant]
+            self._version += 1
+            self.metrics["retires"] += 1
+
+    def publisher(self, tenant, *, reduce="mean") -> TenantPublisher:
+        """A ``stream_chunk(publish_to=...)`` hook for one tenant."""
+        return TenantPublisher(self, tenant, reduce)
+
+    # --------------------------------------------------------------- read
+
+    def snapshot(self) -> TenantSnapshot:
+        """The current immutable snapshot (stacked lazily per version)."""
+        snap = self._snap  # atomic reference read
+        if snap is not None and snap.version == self._version:
+            return snap
+        with self._lock:
+            if self._snap is None or self._snap.version != self._version:
+                if not self._betas:
+                    raise RuntimeError(
+                        "TenantRegistry has no live tenants; publish() "
+                        "at least one before snapshot()"
+                    )
+                tenants = list(self._betas)
+                stacked = jnp.asarray(
+                    np.stack([self._betas[t] for t in tenants])
+                )
+                self._snap = TenantSnapshot(
+                    version=self._version,
+                    betas=stacked,
+                    slots={t: i for i, t in enumerate(tenants)},
+                    versions=dict(self._versions),
+                    retired=frozenset(self._retired),
+                )
+            return self._snap
+
+    @property
+    def version(self) -> int:
+        """Global registry version (any publish/retire bumps it)."""
+        return self._version
+
+    def tenant_version(self, tenant) -> int:
+        """A tenant's latest published version (named errors)."""
+        with self._lock:
+            if tenant in self._versions:
+                return self._versions[tenant]
+            if tenant in self._retired:
+                raise RetiredTenantError(
+                    f"tenant {tenant!r} is retired; re-register it with "
+                    f"publish() before serving"
+                )
+            raise UnknownTenantError(
+                f"unknown tenant {tenant!r}; registered tenants: "
+                f"{sorted(map(repr, self._versions))}"
+            )
+
+    @property
+    def tenant_ids(self) -> tuple:
+        with self._lock:
+            return tuple(self._versions)
+
+    def stale_tenants(
+        self, snapshot: TenantSnapshot, max_staleness: int
+    ) -> list:
+        """Tenants whose snapshot version trails their latest publish
+        by more than ``max_staleness`` versions — plus any live tenant
+        the snapshot does not know yet. The serving plane refreshes
+        when this is non-empty for the tenants it is about to serve."""
+        with self._lock:
+            live = dict(self._versions)
+        out = []
+        for t, latest in live.items():
+            held = snapshot.versions.get(t)
+            if held is None or latest - held > max_staleness:
+                out.append(t)
+        return out
