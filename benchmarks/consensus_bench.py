@@ -1,0 +1,374 @@
+"""Consensus-plane benchmark: fused neighbor-gather gossip rounds vs
+the dense ``(V,V) @ (V, L*M)`` round program.
+
+Measures wall time and peak temporary memory over a (graph, V, L)
+grid and writes a machine-readable ``BENCH_consensus.json`` at the
+repo root — the bench trajectory for the paper's communication hot
+loop (eq. (20) / Algorithm 1 step 8). The acceptance point is the
+flagship sparse topology (hypercube, V=1024, L=128, f32 — fan-in
+log2 V = 10, so the dense round burns ~100x the edge MACs): the fused
+neighbor path must be reported no slower than the dense round — and
+``tools/bench_gate.py`` enforces ``fused_speedup >= 1.0`` on every
+committed row.
+
+Paths under test (both jit-compiled, never interpret mode):
+  * unfused — ``elm_gossip_ref.dense_gossip_rounds``: the exact
+    DenseMixer.laplacian + DCELMRule composition as one jittable scan,
+    touching all V^2 adjacency slots (zeros included) per round.
+  * fused   — on TPU the Pallas kernel plane (kernels/elm_gossip.py:
+    the in-kernel multi-round arm when state + snapshots fit VMEM,
+    else one launch per round); elsewhere the neighbor-list scan
+    (``elm_gossip_ref.elm_gossip_scan``) gathering only the d_max
+    padded slots. The chunk/block config comes from the tuned cache
+    per point (op="gossip", N <- V, D <- d_max; ``tune=True``
+    re-measures and refreshes TUNED_kernels.json first).
+
+Rows where ``elm_gossip_ops.prefers_dense`` holds (complete graphs;
+small V; L large relative to V) follow the PR 6 degenerate-row
+convention: the dispatcher lowers to the dense program there, so the
+single executable is timed once and the speedup is 1.0 by identity.
+Two wire-format rows ride on the flagship point: a bf16-payload run of
+the full round loop, and an int8 single explicit-payload round (the
+CompressedMixer arm — its stateful replica loop is not jittable, so
+the stateless per-round kernels are what can be raced).
+"""
+
+from __future__ import annotations
+
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks._bench_util import temp_bytes
+from repro.core.consensus import build
+from repro.kernels import autotune
+from repro.kernels.autotune import paired_timeit_ms, timeit_ms
+from repro.kernels.elm_gossip_ops import prefers_dense
+from repro.kernels.elm_gossip_ref import (
+    dense_gossip_rounds,
+    elm_gossip_scan,
+    gossip_round_payload,
+    neighbor_lists,
+)
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BENCH_JSON = os.path.join(REPO_ROOT, "BENCH_consensus.json")
+
+M = 8  # targets-per-node; the wide axis is L (hidden width)
+ROUNDS = 16  # gossip rounds per timed program (one lax.scan)
+C = 10.0  # ridge constant entering scale = gamma / (V C)
+
+
+def _problem(V, L, kind, dtype):
+    """State + topology operands for one grid point.
+
+    Explicit f32/bf16 arrays — benchmarks.run enables x64, so every
+    literal here must pin its dtype or the dense matmul silently
+    doubles its bytes.
+    """
+    g = build(kind, V)
+    d_max = int(round(g.d_max))
+    dt = jnp.dtype(dtype)
+    rng = np.random.default_rng(0)
+    betas = jnp.asarray(rng.normal(size=(V, L, M)), jnp.float32)
+    omegas = jnp.asarray(rng.normal(size=(V, L, L)) / L, jnp.float32)
+    betas, omegas = betas.astype(dt), omegas.astype(dt)
+    adj = jnp.asarray(g.adjacency, jnp.float32)[None]
+    deg_dense = jnp.sum(adj, axis=-1)
+    idx, w, deg = neighbor_lists(adj)
+    # Thm. 2 step size: gamma < 1/d_max (0.9 safety), scale = gamma/(VC)
+    scale = jnp.float32(0.9 / d_max / (V * C))
+    return dict(
+        d_max=d_max, betas=betas, omegas=omegas, adj=adj,
+        deg_dense=deg_dense, idx=idx, w=w, deg=deg, scale=scale,
+    )
+
+
+def _gossip_cfg(V, d_max, L, *, impl, tune, fast):
+    """Tuned (or default) block config for one gossip point."""
+    dims = dict(N=V, D=d_max, L=L, M=M, dtype="float32")
+    if tune:
+        cfg = autotune.tune(
+            "gossip", **dims, impl=impl, repeats=2 if fast else 3,
+            force=True,
+        )
+        tag = "tuned"
+    else:
+        cfg = autotune.lookup("gossip", **dims, impl=impl)
+        tag = "cached" if cfg is not None else "default"
+        if cfg is None:
+            cfg = dict(autotune.DEFAULTS[("gossip", impl)])
+    cfg_s = ",".join(f"{k}={v}" for k, v in sorted(cfg.items()))
+    return cfg, f"{impl}({cfg_s};{tag})"
+
+
+def _fused_rounds_fn(prob, *, impl, cfg, compress):
+    """The jitted fused multi-round program for one point.
+
+    Built once per row (not through elm_gossip_ops per call) so the
+    timing loop hits a stable jit cache entry.
+    """
+    if impl == "pallas":
+        from repro.kernels.elm_gossip import (
+            elm_gossip_pallas,
+            elm_gossip_pallas_multiround,
+            multiround_vmem_bytes,
+        )
+
+        V, L, _ = prob["betas"].shape
+        S, _, d_max = prob["idx"].shape
+        if multiround_vmem_bytes(V, L, M, S, d_max) <= autotune.VMEM_BUDGET:
+            return jax.jit(functools.partial(
+                elm_gossip_pallas_multiround, num_rounds=ROUNDS,
+                compress=compress,
+            ))
+        return jax.jit(functools.partial(
+            elm_gossip_pallas, num_rounds=ROUNDS, compress=compress,
+            block_v=int(cfg.get("block_n", 8)),
+        ))
+    return jax.jit(functools.partial(
+        elm_gossip_scan, num_rounds=ROUNDS, compress=compress,
+        chunk=int(cfg.get("chunk", 8)),
+    ))
+
+
+@jax.jit
+def _dense_round_payload(betas, payload, omegas, adj_k, deg_k, scale):
+    # the dense single explicit-payload round (CompressedMixer's
+    # _run_dense body via DenseMixer.apply_round, as one jittable step)
+    V, L, Mq = betas.shape
+    p = payload.reshape(V, L * Mq)
+    lap = (adj_k[0] @ p - deg_k[0][:, None] * p).reshape(V, L, Mq)
+    upd = jnp.einsum("vlk,vkm->vlm", omegas, lap)
+    return betas + scale * upd
+
+
+def _int8_roundtrip(betas):
+    """Per-node symmetric int8 quantize-dequantize — the receivers'
+    decoded-replica view that the CompressedMixer arm mixes over."""
+    amax = jnp.maximum(
+        jnp.max(jnp.abs(betas), axis=(1, 2), keepdims=True), 1e-12
+    )
+    q = jnp.clip(jnp.round(betas / amax * 127.0), -127, 127)
+    return (q * (amax / 127.0)).astype(betas.dtype)
+
+
+def _time_pair(unfused, u_args, fused, f_args, *, degenerate, reps):
+    """(unfused_ms, fused_ms, peaks) — degenerate rows timed once."""
+    if degenerate:
+        ms = timeit_ms(unfused, *u_args, repeats=2 * reps)
+        peak = temp_bytes(unfused, *u_args)
+        return ms, ms, peak, peak
+    u_ms, f_ms = paired_timeit_ms(
+        [lambda: unfused(*u_args), lambda: fused(*f_args)], repeats=reps,
+    )
+    return u_ms, f_ms, temp_bytes(unfused, *u_args), temp_bytes(fused, *f_args)
+
+
+def bench_consensus(fast: bool = False, tune: bool = False):
+    """fused-vs-dense gossip wall time + peak memory over the grid.
+
+    Emits CSV rows and writes BENCH_consensus.json at the repo root.
+    With ``tune=True`` each non-degenerate point is re-tuned
+    (sweep-and-cache into TUNED_kernels.json) before it is benched.
+    """
+    backend = jax.default_backend()
+    impl = "pallas" if backend == "tpu" else "scan"
+    reps = 2 if fast else 5
+    if fast:
+        grid = [
+            ("hypercube", 16, 128), ("hypercube", 64, 128),
+            ("complete", 16, 128), ("complete", 64, 128),
+        ]
+    else:
+        # hypercube is the paper's sparse topology (d_max = log2 V);
+        # the V=1024 row is the flagship: V/L large enough that the
+        # dense round's zero-edge MACs dominate on every backend
+        grid = [
+            ("hypercube", 16, 128), ("hypercube", 64, 128),
+            ("hypercube", 64, 512), ("hypercube", 256, 128),
+            ("hypercube", 256, 512), ("hypercube", 1024, 128),
+            ("complete", 16, 128), ("complete", 64, 128),
+            ("complete", 256, 128), ("complete", 256, 512),
+        ]
+    flagship = dict(kind="hypercube", V=64 if fast else 1024, L=128)
+
+    rows, records = [], []
+    acceptance = None
+
+    def add_record(pt, extra, u_ms, f_ms, u_pk, f_pk, name):
+        rec = dict(
+            pt, **extra, fused_impl=name, backend=backend,
+            unfused_wall_ms=u_ms, fused_wall_ms=f_ms,
+            unfused_peak_temp_bytes=u_pk, fused_peak_temp_bytes=f_pk,
+            fused_speedup=u_ms / max(f_ms, 1e-9),
+        )
+        records.append(rec)
+        tag = (
+            f"consensus/{extra['graph']}_V{pt['N']}_L{pt['L']}_"
+            f"{pt['dtype']}"
+        )
+        peak_s = (
+            f"peak_temp_MiB={f_pk / 2**20:.1f}" if f_pk >= 0
+            else "peak_temp_MiB=n/a"
+        )
+        rows.append((
+            tag, f_ms,
+            f"speedup={rec['fused_speedup']:.2f}x;impl={name};{peak_s}",
+        ))
+        return rec
+
+    for kind, V, L in grid:
+        prob = _problem(V, L, kind, "float32")
+        d_max = prob["d_max"]
+        pt = dict(N=V, D=d_max, L=L, M=M, dtype="float32")
+        dense_fn = jax.jit(functools.partial(
+            dense_gossip_rounds, num_rounds=ROUNDS,
+        ))
+        u_args = (
+            prob["betas"], prob["omegas"], prob["adj"],
+            prob["deg_dense"], prob["scale"],
+        )
+        degenerate = prefers_dense(V, d_max, L, M)
+        if degenerate:
+            # the dispatcher lowers these to the dense program:
+            # one executable, speedup 1.0 by identity (PR 6)
+            name = "dense(=unfused)"
+            fused_fn, f_args = dense_fn, u_args
+        else:
+            cfg, name = _gossip_cfg(
+                V, d_max, L, impl=impl, tune=tune, fast=fast,
+            )
+            fused_fn = _fused_rounds_fn(
+                prob, impl=impl, cfg=cfg, compress=None,
+            )
+            f_args = (
+                prob["betas"], prob["omegas"], prob["idx"],
+                prob["w"], prob["deg"], prob["scale"],
+            )
+        u_ms, f_ms, u_pk, f_pk = _time_pair(
+            dense_fn, u_args, fused_fn, f_args,
+            degenerate=degenerate, reps=reps,
+        )
+        extra = dict(graph=kind, d_max=d_max, rounds=ROUNDS)
+        add_record(pt, extra, u_ms, f_ms, u_pk, f_pk, name)
+
+        is_flagship = (
+            kind == flagship["kind"] and V == flagship["V"]
+            and L == flagship["L"]
+        )
+        if is_flagship:
+            acceptance = dict(
+                point=pt,
+                fused_wall_ms=f_ms,
+                unfused_wall_ms=u_ms,
+                fused_not_slower=f_ms <= u_ms,
+            )
+            rows.append((
+                "consensus/acceptance_flagship", 0.0,
+                f"fused_not_slower={f_ms <= u_ms};"
+                f"fused_ms={f_ms:.2f};unfused_ms={u_ms:.2f}",
+            ))
+
+    # wire-format rows at the flagship sparse point ------------------
+    V, L, kind = flagship["V"], flagship["L"], flagship["kind"]
+    prob = _problem(V, L, kind, "float32")
+    d_max = prob["d_max"]
+    wire_degenerate = prefers_dense(V, d_max, L, M)
+
+    # bf16 payload: the full fused round loop casts the gathered
+    # payload to bf16 inside the program (wire dtype), f32 state
+    cfg, name = _gossip_cfg(V, d_max, L, impl=impl, tune=False, fast=fast)
+    dense_bf16 = jax.jit(functools.partial(
+        dense_gossip_rounds, num_rounds=ROUNDS, compress="bf16",
+    ))
+    u_args = (
+        prob["betas"], prob["omegas"], prob["adj"], prob["deg_dense"],
+        prob["scale"],
+    )
+    if wire_degenerate:
+        fused_bf16, f_args = dense_bf16, u_args
+        name = "dense(=unfused)"
+    else:
+        fused_bf16 = _fused_rounds_fn(
+            prob, impl=impl, cfg=cfg, compress="bf16",
+        )
+        f_args = (
+            prob["betas"], prob["omegas"], prob["idx"], prob["w"],
+            prob["deg"], prob["scale"],
+        )
+    u_ms, f_ms, u_pk, f_pk = _time_pair(
+        dense_bf16, u_args, fused_bf16, f_args,
+        degenerate=wire_degenerate, reps=reps,
+    )
+    add_record(
+        dict(N=V, D=d_max, L=L, M=M, dtype="bfloat16"),
+        dict(graph=kind, d_max=d_max, rounds=ROUNDS),
+        u_ms, f_ms, u_pk, f_pk, name + ";wire=bf16",
+    )
+
+    # int8 payload: single explicit-payload round (the CompressedMixer
+    # arm; its replica loop is host-stateful, so the stateless round
+    # kernels are the raceable unit)
+    payload = jax.block_until_ready(_int8_roundtrip(prob["betas"]))
+    chunk = int(cfg.get("chunk", 8)) if impl == "scan" else None
+    u_args = (
+        prob["betas"], payload, prob["omegas"], prob["adj"],
+        prob["deg_dense"], prob["scale"],
+    )
+    if wire_degenerate:
+        fpay, f_args, int8_name = (
+            _dense_round_payload, u_args, "dense(=unfused)"
+        )
+    elif impl == "pallas":
+        from repro.kernels.elm_gossip import elm_gossip_pallas
+
+        fpay = jax.jit(functools.partial(
+            elm_gossip_pallas, num_rounds=1,
+            block_v=int(cfg.get("block_n", 8)), payload=payload,
+        ))
+        f_args = (
+            prob["betas"], prob["omegas"], prob["idx"], prob["w"],
+            prob["deg"], prob["scale"],
+        )
+        int8_name = f"pallas(block_v={int(cfg.get('block_n', 8))})"
+    else:
+        fpay = jax.jit(functools.partial(
+            gossip_round_payload, chunk=chunk,
+        ))
+        f_args = (
+            prob["betas"], payload, prob["omegas"], prob["idx"][0],
+            prob["w"][0], prob["deg"][0], prob["scale"],
+        )
+        int8_name = f"scan(chunk={chunk})"
+    u_ms, f_ms, u_pk, f_pk = _time_pair(
+        _dense_round_payload, u_args, fpay, f_args,
+        degenerate=wire_degenerate, reps=reps,
+    )
+    add_record(
+        dict(N=V, D=d_max, L=L, M=M, dtype="int8"),
+        dict(graph=kind, d_max=d_max, rounds=1),
+        u_ms, f_ms, u_pk, f_pk, int8_name + ";wire=int8;payload-round",
+    )
+
+    payload_json = dict(
+        suite="consensus",
+        backend=backend,
+        default_point=dict(
+            N=flagship["V"], D=d_max, L=flagship["L"], M=M,
+            dtype="float32",
+        ),
+        tuned=tune,
+        rows=records,
+        acceptance=acceptance,
+    )
+    with open(BENCH_JSON, "w") as fh:
+        json.dump(payload_json, fh, indent=2)
+    rows.append((
+        "consensus/json", 0.0, f"written={os.path.basename(BENCH_JSON)}",
+    ))
+    return rows, {"json": BENCH_JSON}

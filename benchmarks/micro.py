@@ -563,9 +563,73 @@ print('DONE')
     return rows, {}
 
 
+def bench_consensus_profile():
+    """Gossip-round arm choice and utilization vs the roofline model.
+
+    For each (graph, V, L) point: the measured wall time of the arm the
+    dispatcher actually picks (``elm_gossip_ops.prefers_dense``) next
+    to the dense round, and the ``analysis/roofline.py``
+    ``gossip_round_terms`` modeled times for both arms — the model that
+    drives the autotuner's candidate pruning and the dense-fallback
+    heuristic, shown against ground truth so drift is visible.
+    """
+    import functools
+
+    from repro.analysis.roofline import gossip_round_terms
+    from repro.core.consensus import build
+    from repro.kernels import elm_gossip_ops
+    from repro.kernels.elm_gossip_ref import (
+        dense_gossip_rounds,
+        neighbor_lists,
+    )
+
+    rows = []
+    R, M = 8, 8
+    for kind, V, L in [
+        ("hypercube", 256, 128), ("hypercube", 1024, 128),
+        ("complete", 256, 128),
+    ]:
+        g = build(kind, V)
+        d_max = int(round(g.d_max))
+        ks = jax.random.split(jax.random.key(0), 2)
+        betas = jax.random.normal(ks[0], (V, L, M), jnp.float32)
+        omegas = jax.random.normal(ks[1], (V, L, L), jnp.float32) / L
+        adj = jnp.asarray(g.adjacency, jnp.float32)[None]
+        degd = jnp.sum(adj, axis=-1)
+        idx, w, deg = neighbor_lists(adj)
+        scale = jnp.float32(0.9 / d_max / (V * 10.0))
+        dense = jax.jit(
+            functools.partial(dense_gossip_rounds, num_rounds=R)
+        )
+        dense_us = _timeit_us(dense, betas, omegas, adj, degd, scale)
+        to_dense = elm_gossip_ops.prefers_dense(V, d_max, L, M)
+        if to_dense:
+            fused_us = dense_us
+        else:
+            fused_us = _timeit_us(
+                lambda b: elm_gossip_ops.fused_gossip_rounds(
+                    b, omegas, idx, w, deg, scale, num_rounds=R,
+                ),
+                betas,
+            )
+        mn = gossip_round_terms(V, d_max, L, M)
+        md = gossip_round_terms(V, d_max, L, M, dense=True)
+        rows.append((
+            f"consensus/{kind}_V{V}_L{L}", fused_us / R,
+            f"arm={'dense' if to_dense else 'neighbor'};"
+            f"dense_us_per_round={dense_us / R:.0f};"
+            f"measured_ratio={dense_us / fused_us:.2f};"
+            f"modeled_compute_ratio="
+            f"{md['t_compute'] / mn['t_compute']:.2f};"
+            f"modeled_round_us={mn['t_round'] * 1e6:.1f}",
+        ))
+    return rows, {}
+
+
 PROFILES = {
     "gram": bench_gram,
     "stats": bench_stats_profile,
+    "consensus": bench_consensus_profile,
     "ssd": bench_ssd,
     "attn": bench_attention,
     "online": bench_online_vs_direct,

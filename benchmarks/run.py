@@ -60,7 +60,14 @@ SUITES = {}
 
 
 def _register():
-    from benchmarks import async_bench, micro, paper_figs, serving_bench, stats_bench
+    from benchmarks import (
+        async_bench,
+        consensus_bench,
+        micro,
+        paper_figs,
+        serving_bench,
+        stats_bench,
+    )
 
     SUITES.update({
         "fig3": paper_figs.fig3_centralized_sinc,
@@ -70,6 +77,7 @@ def _register():
         "stats": stats_bench.bench_stats,
         "serving": serving_bench.bench_serving,
         "multitenant": serving_bench.bench_multitenant,
+        "consensus": consensus_bench.bench_consensus,
         "async": async_bench.bench_async,
         "ssd": micro.bench_ssd,
         "attn": micro.bench_attention,
@@ -115,7 +123,7 @@ def main() -> None:
                 kw = {"rounds": 1000}
             if args.fast and name == "compression":
                 kw = {"rounds": 600}
-            if name in ("stats", "serving", "multitenant"):
+            if name in ("stats", "serving", "multitenant", "consensus"):
                 kw = {"fast": args.fast, "tune": args.tune}
             if name == "async":
                 kw = {"fast": args.fast}

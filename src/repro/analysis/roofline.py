@@ -105,6 +105,49 @@ class RooflineTerms:
         }
 
 
+# ---------------------------------------------------------------------------
+# Gossip-round time model (the consensus plane's eq. (20) hot loop)
+# ---------------------------------------------------------------------------
+
+
+def gossip_round_terms(
+    V: int, d_max: int, L: int, M: int, *, itemsize: int = 4,
+    dense: bool = False,
+) -> dict:
+    """Roofline terms for one eq. (20) consensus round.
+
+    Per round every node forms lap_i = sum_j a_ij (beta_j - beta_i)
+    over ``d_max`` neighbors (``V`` fan-in on the ``dense=True``
+    matmul formulation) and contracts it against Omega_i — the
+    ``2*V*L*L*M`` Omega FLOPs both formulations share. HBM traffic is
+    the state in+out, the Omegas, and the neighbor lists (or the dense
+    adjacency); ``gather_bytes`` is the neighbor-gather volume the
+    fused kernel keeps in VMEM (reported separately — it only hits HBM
+    when an unfused path materializes the gathered tiles).
+
+    Used for relative ranking (candidate pruning in
+    ``kernels/autotune.py`` op="gossip", the dense-vs-neighbor arm
+    choice in ``kernels/elm_gossip_ops.py``, and the
+    ``benchmarks/micro.py --profile consensus`` rows) — the absolute
+    constants cancel out of those comparisons.
+    """
+    fanin = V if dense else d_max
+    flops = 2.0 * V * fanin * L * M + 2.0 * V * L * L * M
+    state = itemsize * (2.0 * V * L * M + V * L * L)
+    lists = itemsize * V * V if dense else 2.0 * itemsize * V * d_max
+    gather_bytes = itemsize * V * fanin * L * M
+    t_compute = flops / PEAK_FLOPS
+    t_memory = (state + lists) / HBM_BW
+    return {
+        "flops": flops,
+        "hbm_bytes": state + lists,
+        "gather_bytes": gather_bytes,
+        "t_compute": t_compute,
+        "t_memory": t_memory,
+        "t_round": max(t_compute, t_memory),
+    }
+
+
 def model_flops_estimate(cfg, shape) -> float:
     """6 * N_active * D for training; 2 * N_active * D_tokens for decode."""
     n_active = cfg.active_param_count()

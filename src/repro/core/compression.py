@@ -649,8 +649,10 @@ class CompressedMixer:
                 )
             )(x_, xhat, keys)
             xhat2 = self._advance_replicas(xhat, q, refresh)
-            lap = self.base.laplacian(xhat2, k)
-            nxt = rule(x_, lap, aux, gamma)
+            # the base's apply_round fuses gather + rule where it can
+            # (NeighborMixer -> kernels/elm_gossip_ops); the default is
+            # the exact rule(x, base.laplacian(x̂, k)) composition
+            nxt = self.base.apply_round(rule, x_, xhat2, aux, gamma, k)
             tr = trace_fn(nxt) if trace_fn is not None else jnp.zeros(())
             return (nxt, xhat2), (sent, tr)
 

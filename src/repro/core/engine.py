@@ -47,7 +47,12 @@ import numpy as np
 from repro.core import gossip, online
 from repro.core.compression import CompressedMixer, CompressionSpec
 from repro.core.consensus import FaultModel, Graph
-from repro.core.mixers import DenseMixer, FaultyMixer, PpermuteMixer
+from repro.core.mixers import (
+    DenseMixer,
+    FaultyMixer,
+    NeighborMixer,
+    PpermuteMixer,
+)
 
 
 # ---------------------------------------------------------------------------
@@ -376,7 +381,9 @@ class ConsensusEngine:
         ostate = online.OnlineNodeState(omega=omegas, Q=Qs)
         new_engine = self._rewrap_faults(
             ConsensusEngine(
-                DenseMixer(adjacencies, compress=self._base_compress()),
+                self._dense_mixer_cls()(
+                    adjacencies, compress=self._base_compress()
+                ),
                 DCELMRule(V - 1, C),
             ),
             drop=node,
@@ -417,7 +424,9 @@ class ConsensusEngine:
         ostate = online.OnlineNodeState(omega=omegas, Q=Qs)
         new_engine = self._rewrap_faults(
             ConsensusEngine(
-                DenseMixer(adjacencies, compress=self._base_compress()),
+                self._dense_mixer_cls()(
+                    adjacencies, compress=self._base_compress()
+                ),
                 DCELMRule(V + 1, C),
             ),
             add=True,
@@ -491,6 +500,17 @@ class ConsensusEngine:
     def _base_compress(self):
         return getattr(self.mixer, "compress", None)
 
+    def _dense_mixer_cls(self) -> type:
+        """The dense-layout mixer class membership churn rebuilds with —
+        preserving a NeighborMixer (or other DenseMixer subclass)
+        through the CompressedMixer/FaultyMixer wrapper chain, so e.g.
+        a fused-kernel engine stays fused after stream_leave/join."""
+        mixer = self.mixer
+        while isinstance(mixer, (CompressedMixer, FaultyMixer)):
+            mixer = mixer.base
+        cls = type(mixer)
+        return cls if issubclass(cls, DenseMixer) else DenseMixer
+
     def _ridge_constants(self) -> tuple[float, int]:
         if not isinstance(self.rule, DCELMRule):
             raise TypeError(
@@ -526,19 +546,32 @@ def simulated_dc_elm(
     *,
     dtype=jnp.float32,
     compress=None,
+    mixer: str = "dense",
 ) -> ConsensusEngine:
     """DC-ELM over arbitrary dense graphs (the fidelity/simulation path).
 
     compress: None/"none" (default), "bf16" (inline payload cast), or an
     "int8"/"topk" mode string / ``compression.CompressionSpec`` (wraps
     the mixer in a ``CompressedMixer``).
+
+    mixer: "dense" (default) mixes via the dense adjacency matmul;
+    "neighbor" selects ``mixers.NeighborMixer`` — the fused gossip
+    kernel plane over padded neighbor lists (dense-parity pinned), which
+    falls back to the dense program on graphs too dense for gathers to
+    win.
     """
     inline, spec = _split_compress(compress)
+    try:
+        cls = {"dense": DenseMixer, "neighbor": NeighborMixer}[mixer]
+    except KeyError:
+        raise ValueError(
+            f'mixer must be "dense" or "neighbor", got {mixer!r}'
+        ) from None
     if isinstance(graphs, (Graph, list)):
-        mixer = DenseMixer.from_graphs(graphs, dtype=dtype, compress=inline)
+        mx = cls.from_graphs(graphs, dtype=dtype, compress=inline)
     else:
-        mixer = DenseMixer(graphs, compress=inline)
-    eng = ConsensusEngine(mixer, DCELMRule(mixer.num_nodes, C))
+        mx = cls(graphs, compress=inline)
+    eng = ConsensusEngine(mx, DCELMRule(mx.num_nodes, C))
     return with_compression(eng, spec) if spec is not None else eng
 
 

@@ -111,6 +111,9 @@ class DenseMixer:
                 f"adjacencies must be (V,V) or (S,V,V), got {adjacencies.shape}"
             )
         self.adjacencies = adjacencies
+        # weighted degrees per snapshot, computed once: every scanned
+        # round used to redo the (S, V, V) reduction under the trace
+        self.degrees = jnp.sum(adjacencies, axis=-1)
         self.compress = _normalize_compress(compress)
         self.last_wire_stats = None
         self.total_bytes_on_wire = 0
@@ -135,7 +138,7 @@ class DenseMixer:
     def gamma_upper_bound(self) -> float:
         """Paper Thm. 2: 1 / max_k d_max(G_k), joint over snapshots.
         Requires concrete adjacencies (not under a trace)."""
-        d_max = float(jnp.max(jnp.sum(self.adjacencies, axis=-1)))
+        d_max = float(jnp.max(self.degrees))
         return 1.0 / d_max
 
     def default_gamma(self, safety: float = 0.9) -> float:
@@ -147,9 +150,15 @@ class DenseMixer:
             return self.adjacencies[0]
         return self.adjacencies[k % self.adjacencies.shape[0]]
 
+    def _degree_row(self, k):
+        if self.degrees.shape[0] == 1:
+            return self.degrees[0]
+        return self.degrees[k % self.degrees.shape[0]]
+
     def laplacian(self, x, k=0):
         """Stacked Laplacian term, one leaf at a time: A @ x - deg * x."""
         adj = self._adjacency(k)
+        deg = self._degree_row(k)
 
         def leaf(v):
             flat = v.reshape(v.shape[0], -1)
@@ -157,10 +166,20 @@ class DenseMixer:
             dt = _mix_dtype(payload.dtype)
             p = payload.astype(dt)
             a = adj.astype(dt)
-            lap = a @ p - jnp.sum(a, axis=1)[:, None] * p
+            lap = a @ p - deg.astype(dt)[:, None] * p
             return lap.astype(v.dtype).reshape(v.shape)
 
         return jax.tree.map(leaf, x)
+
+    def apply_round(self, rule, x, payload, aux, gamma, k=0):
+        """One consensus round where the gossiped payload differs from
+        the state — the ``CompressedMixer`` hot path, where ``payload``
+        is the receivers' decoded view x̂ of the network while the
+        update applies to the true state ``x``. Subclasses may fuse the
+        gather + rule into one program; this default is the exact
+        composition ``rule(x, laplacian(payload, k), aux, gamma)``.
+        """
+        return rule(x, self.laplacian(payload, k), aux, gamma)
 
     def run(
         self,
@@ -194,6 +213,151 @@ class DenseMixer:
             self.compress, compression.dense_out_degrees(self.adjacencies),
             x, self.num_nodes, num_iters,
         ))
+
+
+class NeighborMixer(DenseMixer):
+    """Neighbor-sparse mixing through the fused gossip kernel plane.
+
+    Semantically a ``DenseMixer`` (same constructor, same Laplacian,
+    same wire accounting — everything composes: ``FaultyMixer``,
+    ``CompressedMixer``, elastic membership), but the adjacency is
+    additionally lowered at construction to padded CSR-style neighbor
+    lists (``kernels/elm_gossip_ref.neighbor_lists``) and the hot paths
+    dispatch to ``kernels/elm_gossip_ops``:
+
+    * ``run`` with a ``DCELMRule`` over stacked f32 betas executes the
+      whole round loop as the fused gossip kernel (Pallas on TPU, a
+      jitted neighbor-list scan elsewhere) — the dense ``(V, V) @
+      (V, L*M)`` matmul and its HBM-round-tripped Laplacian never
+      materialize.
+    * ``apply_round`` (the CompressedMixer hot path) fuses the
+      payload-gather + Omega contraction of one round.
+    * ``laplacian`` gathers over neighbor slots instead of the dense
+      matmul whenever the graph is genuinely sparse (2 d_max < V).
+
+    On graphs too dense for gathers to win (complete-ish topologies,
+    or small V relative to L — ``elm_gossip_ops.prefers_dense``) every
+    path falls back to the exact DenseMixer program, so selecting this
+    mixer is always safe; parity with ``DenseMixer`` is pinned to f32
+    tolerance in tests/test_gossip_kernel.py.
+    """
+
+    def __init__(self, adjacencies, *, compress: str | None = None):
+        super().__init__(adjacencies, compress=compress)
+        from repro.kernels import elm_gossip_ref
+
+        idx, w, _ = elm_gossip_ref.neighbor_lists(self.adjacencies)
+        self.neighbor_idx = idx
+        self.neighbor_w = w
+        self.d_max = int(idx.shape[-1])
+
+    def _lists_row(self, k):
+        if self.adjacencies.shape[0] == 1:
+            return self.neighbor_idx[0], self.neighbor_w[0], self.degrees[0]
+        S = self.adjacencies.shape[0]
+        return (
+            self.neighbor_idx[k % S],
+            self.neighbor_w[k % S],
+            self.degrees[k % S],
+        )
+
+    def laplacian(self, x, k=0):
+        from repro.kernels import elm_gossip_ops, elm_gossip_ref
+
+        if elm_gossip_ops.laplacian_prefers_dense(
+            self.num_nodes, self.d_max
+        ):
+            return super().laplacian(x, k)
+        idx_k, w_k, deg_k = self._lists_row(k)
+
+        def leaf(v):
+            flat = v.reshape(v.shape[0], -1)
+            payload = compress_payload(flat, self.compress)
+            lap = elm_gossip_ref.neighbor_laplacian(
+                payload, idx_k, w_k, deg_k
+            )
+            return lap.astype(v.dtype).reshape(v.shape)
+
+        return jax.tree.map(leaf, x)
+
+    def _fused_ok(self, rule, x, aux, gamma, *, allow_bf16: bool) -> bool:
+        """The fused kernel covers exactly the DC-ELM hot path: stacked
+        f32 (V, L, M) betas, (V, L, L) Omegas, a concrete-or-traced
+        gamma, inline payload mode None/bf16, on a graph sparse enough
+        for the gather formulation to win."""
+        from repro.core.engine import DCELMRule
+        from repro.kernels import elm_gossip_ops
+
+        if not isinstance(rule, DCELMRule) or gamma is None:
+            return False
+        if self.compress is not None and not allow_bf16:
+            return False
+        if not (
+            isinstance(x, jax.Array)
+            and x.ndim == 3
+            and x.dtype == jnp.float32
+        ):
+            return False
+        V, L, M = x.shape
+        if V != self.num_nodes:
+            return False
+        if not (
+            isinstance(aux, jax.Array)
+            and aux.shape == (V, L, L)
+            and aux.dtype == jnp.float32
+        ):
+            return False
+        return not elm_gossip_ops.prefers_dense(V, self.d_max, L, M)
+
+    def _scale(self, rule, gamma):
+        return gamma / (rule.num_nodes * rule.C)
+
+    def apply_round(self, rule, x, payload, aux, gamma, k=0):
+        fusable = (
+            self.compress is None
+            and isinstance(payload, jax.Array)
+            and payload.ndim == 3
+            and payload.dtype == jnp.float32
+            and self._fused_ok(rule, x, aux, gamma, allow_bf16=False)
+        )
+        if not fusable:
+            return super().apply_round(rule, x, payload, aux, gamma, k)
+        from repro.kernels import elm_gossip_ops
+
+        idx_k, w_k, deg_k = self._lists_row(k)
+        return elm_gossip_ops.fused_gossip_round(
+            x, payload, aux, idx_k, w_k, deg_k, self._scale(rule, gamma)
+        )
+
+    def run(
+        self,
+        rule,
+        x,
+        aux,
+        gamma,
+        num_iters: int,
+        trace_fn=None,
+        state_spec=None,
+        aux_spec=None,
+    ):
+        if (
+            trace_fn is not None
+            or num_iters <= 0
+            or not self._fused_ok(rule, x, aux, gamma, allow_bf16=True)
+        ):
+            return super().run(
+                rule, x, aux, gamma, num_iters, trace_fn, state_spec,
+                aux_spec,
+            )
+        from repro.kernels import elm_gossip_ops
+
+        final = elm_gossip_ops.fused_gossip_rounds(
+            x, aux, self.neighbor_idx, self.neighbor_w, self.degrees,
+            self._scale(rule, gamma), num_rounds=num_iters,
+            compress=self.compress,
+        )
+        self._record_wire(x, num_iters)
+        return final, None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -390,7 +554,12 @@ class FaultyMixer:
                 np.asarray(base.adjacencies)[np.arange(period) % S]
                 * edge_keep[np.arange(period) % R]
             )
-            self._dense = DenseMixer(
+            # type(base), not DenseMixer: a NeighborMixer base rebuilds
+            # its padded neighbor lists from the masked period, folding
+            # each round's edge-keep mask into per-neighbor-slot weights
+            # (a dropped edge is a zero-weight slot), so the fused
+            # kernel path survives fault injection
+            self._dense = type(base)(
                 jnp.asarray(masked, base.adjacencies.dtype),
                 compress=base.compress,
             )
@@ -442,6 +611,17 @@ class FaultyMixer:
         my = gossip.global_node_index(base.spec, base.axis_sizes)
         keep = self._keep[jnp.mod(jnp.asarray(k), self.num_rounds), :, my]
         return self._masked_laplacian(x, keep)
+
+    def apply_round(self, rule, x, payload, aux, gamma, k=0):
+        """Masked round with an explicit payload — delegates to the
+        masked-period inner mixer (dense bases only; the ppermute arm
+        has no payload-splitting caller)."""
+        if self._dense is None:
+            raise NotImplementedError(
+                "apply_round with an explicit payload is a dense-base "
+                "feature"
+            )
+        return self._dense.apply_round(rule, x, payload, aux, gamma, k)
 
     def _masked_laplacian(self, x, keep):
         base = self.base

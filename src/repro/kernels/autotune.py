@@ -63,7 +63,7 @@ import jax.numpy as jnp
 from repro.analysis.roofline import HBM_BW, PEAK_FLOPS
 
 SCHEMA_VERSION = 1
-OPS = ("stats", "predict", "stacked")
+OPS = ("stats", "predict", "stacked", "gossip")
 IMPLS = ("scan", "pallas")
 
 #: working-set budgets for the pruning test (bytes): VMEM for the
@@ -88,6 +88,11 @@ DEFAULTS = {
     ("stats", "pallas"): {"block_n": 512, "block_l": 256},
     ("predict", "pallas"): {"block_n": 512, "block_l": 256},
     ("stacked", "pallas"): {"block_n": 256, "block_l": 256},
+    # gossip: the point maps V -> N and d_max -> D (kernels/elm_gossip);
+    # scan "chunk" is neighbor slots per gather step, pallas "block_n"
+    # is the node tile block_v
+    ("gossip", "scan"): {"chunk": 8},
+    ("gossip", "pallas"): {"block_n": 8},
 }
 
 _REPO_ROOT = Path(__file__).resolve().parents[3]
@@ -162,7 +167,7 @@ class TunePoint:
     schema, so committed caches stay valid.
     """
 
-    op: str  # "stats" | "predict" | "stacked"
+    op: str  # "stats" | "predict" | "stacked" | "gossip"
     impl: str  # "scan" | "pallas"
     N: int
     D: int
@@ -202,6 +207,10 @@ class TunePoint:
         N, D, L, M = self.N, self.D, self.L, self.M
         if self.op == "stats":
             return 2.0 * N * D * L + 2.0 * N * L * (L + M)
+        if self.op == "gossip":
+            # per round: neighbor-weighted gather-accumulate over D
+            # slots plus the (L, L) @ (L, M) Omega contraction per node
+            return 2.0 * N * D * L * M + 2.0 * N * L * L * M
         # predict and stacked share the useful-flop count: the stacked
         # gather adds traffic, not MACs
         return 2.0 * N * L * (D + M)
@@ -215,6 +224,15 @@ def candidates(point: TunePoint) -> list[dict]:
     path on the machine that measured it.
     """
     out = []
+    if point.op == "gossip":
+        if point.impl == "scan":
+            # chunk = neighbor slots per gather step, capped at d_max
+            chunks = {min(c, point.D) for c in (1, 2, 4, 8, 16, 32, 64)}
+            chunks.add(min(DEFAULTS[("gossip", "scan")]["chunk"], point.D))
+            return [{"chunk": c} for c in sorted(chunks)]
+        bns = {min(b, point.N) for b in (8, 16, 32, 64)}
+        bns.add(min(DEFAULTS[("gossip", "pallas")]["block_n"], point.N))
+        return [{"block_n": b} for b in sorted(bns)]
     if point.impl == "scan":
         grid = (
             (256, 512, 1024, 2048, 4096)  # gathered tiles cap the chunk
@@ -242,6 +260,25 @@ def working_set_bytes(point: TunePoint, cfg: dict) -> float:
     """Resident bytes a candidate keeps hot (the VMEM/cache test)."""
     s = point.itemsize
     D, L, M, T = point.D, point.L, point.M, point.T
+    if point.op == "gossip":
+        N = point.N
+        if point.impl == "scan":
+            # state + f32 lap carry + the gathered (V, chunk, L*M) tile
+            # (the chunk knob's term) + omegas + lists
+            c = cfg["chunk"]
+            return (
+                s * N * L * M
+                + 4.0 * N * L * M * (1 + c)
+                + s * N * L * L
+                + 8.0 * N * D
+            )
+        # pallas: full state resident + per-tile omega/lap/out blocks
+        bn = cfg["block_n"]
+        return (
+            4.0 * N * L * M
+            + 4.0 * bn * (L * L + 2 * L * M)
+            + 8.0 * bn * D
+        )
     if point.impl == "scan":
         c = cfg["chunk"]
         if point.op == "stats":
@@ -282,6 +319,17 @@ def hbm_bytes(point: TunePoint, cfg: dict) -> float:
     """
     s = point.itemsize
     N, D, L, M, T = point.N, point.D, point.L, point.M, point.T
+    if point.op == "gossip":
+        # per round: state read+write, omegas, neighbor lists; the scan
+        # materializes the gathered (V, chunk, L*M) tiles — an extra
+        # round trip when a tile spills the cache budget
+        base = 4.0 * (2.0 * N * L * M + N * L * L) + 8.0 * N * D
+        if point.impl == "scan":
+            c = cfg["chunk"]
+            base += 4.0 * N * D * L * M
+            if 4.0 * N * c * L * M > CACHE_BUDGET / 2:
+                base += 4.0 * N * D * L * M
+        return base
     if point.impl == "scan":
         c = cfg["chunk"]
         steps = math.ceil(N / c)
@@ -353,6 +401,18 @@ def _problem(point: TunePoint):
     """The measurement arrays — same construction as the benches."""
     dt = jnp.dtype(point.dtype)
     ks = jax.random.split(jax.random.key(0), 4)
+    if point.op == "gossip":
+        # V <- N nodes, d_max <- D neighbor slots; a synthetic regular
+        # graph (random indices, unit weights) matches the gather cost
+        V, d = point.N, point.D
+        betas = jax.random.normal(ks[0], (V, point.L, point.M)).astype(dt)
+        omegas = jax.random.normal(
+            ks[1], (V, point.L, point.L)
+        ).astype(dt)
+        idx = jax.random.randint(ks[2], (1, V, d), 0, V, dtype=jnp.int32)
+        w = jnp.ones((1, V, d), dt)
+        deg = jnp.full((1, V), float(d), dt)
+        return betas, omegas, idx, w, deg, 0.01
     X = jax.random.normal(ks[0], (point.N, point.D)).astype(dt)
     W = jax.random.normal(ks[1], (point.D, point.L)).astype(dt)
     b = jax.random.normal(ks[2], (point.L,)).astype(jnp.float32)
@@ -375,6 +435,26 @@ def _problem(point: TunePoint):
 
 def candidate_fn(point: TunePoint, cfg: dict):
     """A jitted callable running the point's op with one candidate."""
+    if point.op == "gossip":
+        # a short fixed round count: enough for the per-round cost to
+        # dominate the scan setup, cheap enough to sweep
+        if point.impl == "scan":
+            from repro.kernels.elm_gossip_ref import elm_gossip_scan
+
+            return jax.jit(
+                functools.partial(
+                    elm_gossip_scan, num_rounds=4, chunk=cfg["chunk"]
+                )
+            )
+        from repro.kernels.elm_gossip import elm_gossip_pallas
+
+        return jax.jit(
+            functools.partial(
+                elm_gossip_pallas, num_rounds=4,
+                block_v=cfg["block_n"],
+                interpret=jax.default_backend() != "tpu",
+            )
+        )
     if point.impl == "scan":
         if point.op == "stats":
             from repro.kernels.elm_stats_ref import elm_stats_scan

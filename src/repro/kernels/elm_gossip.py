@@ -1,0 +1,301 @@
+"""Fused consensus-round Pallas kernel over padded neighbor lists.
+
+One grid pass applies the paper's eq. (20) update
+
+    beta_i += scale * Omega_i @ (sum_s w[i,s] beta[idx[i,s]] - deg_i beta_i)
+
+for a block of ``block_v`` nodes per program: the neighbor beta tiles
+are gathered from a VMEM-resident copy of the full state, the Laplacian
+is accumulated in VMEM registers (f32), and the Omega contraction +
+state update write straight to the output block — the ``(V, L, M)``
+Laplacian never exists in HBM. Layout inside the kernel is
+``(V, M, L)``: L (128-aligned) rides the lane dimension so the state
+stays physically compact for small M (the (V, L, M) layout would pad
+M to a full 128-lane tile and blow the VMEM budget ~16x at M=8).
+
+Arms:
+
+* ``elm_gossip_pallas`` — ``num_rounds`` rounds as an outer
+  ``lax.scan`` over per-round kernel launches (the state round-trips
+  HBM between rounds; the Laplacian still never does). bf16 payload
+  (``compress="bf16"``) casts the gathered/self payload in-kernel and
+  accumulates in f32, matching ``mixers.compress_payload``. An
+  explicitly encoded ``payload=`` operand (int8-roundtripped replicas
+  from core/compression.py) is gathered instead of the state —
+  the fused CompressedMixer round (single-round only: the payload is
+  re-encoded outside per round).
+* ``elm_gossip_pallas_multiround`` — the small-state arm: the whole
+  state, Omegas and every topology snapshot stay resident in VMEM and
+  an in-kernel ``lax.fori_loop`` runs all rounds back-to-back, so the
+  state skips its per-round HBM round-trips too. Gate on
+  ``multiround_vmem_bytes`` (see elm_gossip_ops).
+
+Off TPU both arms run under ``interpret=True`` for correctness tests;
+the production CPU path is ``elm_gossip_ref.elm_gossip_scan``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rup(x: int, m: int) -> int:
+    return x + (-x) % m
+
+
+def _lap_tile(src, idx, wts, deg, lo, block_v, d_max, bf16):
+    """f32 Laplacian for the node block starting at ``lo``.
+
+    src: (Vp, Mp, Lp) gather source (state or encoded payload);
+    idx/wts: (block_v, d_pad); deg: (block_v,). The gathered tiles are
+    VMEM values — this accumulation is the fusion.
+    """
+    if bf16:
+        src = src.astype(jnp.bfloat16)
+    p_tile = jax.lax.dynamic_slice_in_dim(src, lo, block_v, axis=0)
+    lap0 = -deg[:, None, None] * p_tile.astype(jnp.float32)
+
+    def acc(s, lap):
+        col = jax.lax.dynamic_index_in_dim(idx, s, axis=1, keepdims=False)
+        ws = jax.lax.dynamic_index_in_dim(wts, s, axis=1, keepdims=False)
+        g = jnp.take(src, col, axis=0).astype(jnp.float32)
+        return lap + ws[:, None, None] * g
+
+    return jax.lax.fori_loop(0, d_max, acc, lap0)
+
+
+def _apply_omega(beta_tile, omega, lap, scale):
+    """beta + scale * Omega @ lap in the (M, L) lane layout.
+
+    upd[v, m, l] = sum_k omega[v, l, k] * lap[v, m, k] — contracting
+    both lane (k) dims on the MXU with f32 accumulation.
+    """
+    upd = jax.lax.dot_general(
+        lap,
+        omega,
+        dimension_numbers=(((2,), (2,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32,
+    )
+    return beta_tile + scale * upd
+
+
+def _round_kernel(
+    scale_ref, beta_ref, omega_ref, idx_ref, w_ref, deg_ref, out_ref,
+    *, block_v, d_max, bf16,
+):
+    i = pl.program_id(0)
+    beta_full = beta_ref[...]
+    lap = _lap_tile(
+        beta_full, idx_ref[...], w_ref[...].astype(jnp.float32),
+        deg_ref[...][:, 0].astype(jnp.float32), i * block_v, block_v,
+        d_max, bf16,
+    )
+    beta_tile = jax.lax.dynamic_slice_in_dim(
+        beta_full, i * block_v, block_v, axis=0
+    )
+    out_ref[...] = _apply_omega(
+        beta_tile, omega_ref[...], lap, scale_ref[0, 0]
+    )
+
+
+def _round_kernel_payload(
+    scale_ref, beta_ref, pay_ref, omega_ref, idx_ref, w_ref, deg_ref,
+    out_ref, *, block_v, d_max,
+):
+    i = pl.program_id(0)
+    lap = _lap_tile(
+        pay_ref[...], idx_ref[...], w_ref[...].astype(jnp.float32),
+        deg_ref[...][:, 0].astype(jnp.float32), i * block_v, block_v,
+        d_max, bf16=False,
+    )
+    beta_tile = jax.lax.dynamic_slice_in_dim(
+        beta_ref[...], i * block_v, block_v, axis=0
+    )
+    out_ref[...] = _apply_omega(
+        beta_tile, omega_ref[...], lap, scale_ref[0, 0]
+    )
+
+
+def _multiround_kernel(
+    scale_ref, beta_ref, omega_ref, idx_ref, w_ref, deg_ref, out_ref,
+    *, d_max, num_snapshots, num_rounds, bf16,
+):
+    omega = omega_ref[...]
+    idx_all = idx_ref[...]
+    w_all = w_ref[...].astype(jnp.float32)
+    deg_all = deg_ref[...].astype(jnp.float32)
+    scale = scale_ref[0, 0]
+    V = omega.shape[0]
+
+    def round_fn(k, b):
+        s = jax.lax.rem(k, num_snapshots)
+        idx = jax.lax.dynamic_index_in_dim(idx_all, s, 0, keepdims=False)
+        wts = jax.lax.dynamic_index_in_dim(w_all, s, 0, keepdims=False)
+        deg = jax.lax.dynamic_index_in_dim(deg_all, s, 0, keepdims=False)
+        lap = _lap_tile(b, idx, wts, deg, 0, V, d_max, bf16)
+        return _apply_omega(b, omega, lap, scale)
+
+    out_ref[...] = jax.lax.fori_loop(0, num_rounds, round_fn, beta_ref[...])
+
+
+# ---------------------------------------------------------------------------
+# Padding / layout
+# ---------------------------------------------------------------------------
+
+
+def _prep(betas, omegas, idx, w, deg, block_v):
+    """(V, L, M) -> padded kernel operands in the (V, M, L) layout."""
+    V, L, M = betas.shape
+    bv = min(max(int(block_v), 1), _rup(V, 1))
+    Vp = _rup(V, bv)
+    Lp = _rup(L, 128)
+    Mp = _rup(M, 8)
+    dp = _rup(idx.shape[-1], 128)
+    bt = jnp.transpose(betas, (0, 2, 1)).astype(jnp.float32)
+    bt = jnp.pad(bt, ((0, Vp - V), (0, Mp - M), (0, Lp - L)))
+    om = jnp.pad(
+        omegas.astype(jnp.float32),
+        ((0, Vp - V), (0, Lp - L), (0, Lp - L)),
+    )
+    ip = jnp.pad(idx, ((0, 0), (0, Vp - V), (0, dp - idx.shape[-1])))
+    wp = jnp.pad(
+        w.astype(jnp.float32),
+        ((0, 0), (0, Vp - V), (0, dp - w.shape[-1])),
+    )
+    dg = jnp.pad(deg.astype(jnp.float32), ((0, 0), (0, Vp - V)))
+    return bt, om, ip, wp, dg, (Vp, Lp, Mp, dp, bv)
+
+
+def _unpack(out, V, L, M, dtype):
+    return jnp.transpose(out[:V, :M, :L], (0, 2, 1)).astype(dtype)
+
+
+def _snapshot(arr, k):
+    S = arr.shape[0]
+    return arr[0] if S == 1 else jnp.take(arr, jnp.mod(k, S), axis=0)
+
+
+# ---------------------------------------------------------------------------
+# Public entry points
+# ---------------------------------------------------------------------------
+
+
+def elm_gossip_pallas(
+    betas, omegas, idx, w, deg, scale, *, num_rounds=1, block_v=8,
+    compress=None, payload=None, interpret=False,
+):
+    """num_rounds fused eq. (20) rounds, one kernel launch per round.
+
+    betas: (V, L, M); omegas: (V, L, L); idx/w: (S, V, d_max);
+    deg: (S, V); scale = gamma / (VC) (scalar, may be traced).
+    compress="bf16" casts the gossiped payload in-kernel;
+    payload=(V, L, M) gathers an explicitly encoded payload instead
+    (single round only — the encoder reruns between rounds).
+    """
+    if payload is not None and num_rounds != 1:
+        raise ValueError(
+            "an explicit payload= is re-encoded outside the kernel every "
+            f"round, so it implies num_rounds=1 (got {num_rounds})"
+        )
+    bf16 = compress == "bf16"
+    V, L, M = betas.shape
+    d_max = idx.shape[-1]
+    bt, om, ip, wp, dg, (Vp, Lp, Mp, dp, bv) = _prep(
+        betas, omegas, idx, w, deg, block_v
+    )
+    scale = jnp.asarray(scale, jnp.float32).reshape(1, 1)
+    grid = (Vp // bv,)
+    full = pl.BlockSpec((Vp, Mp, Lp), lambda i: (0, 0, 0))
+    tiled3 = pl.BlockSpec((bv, Mp, Lp), lambda i: (i, 0, 0))
+    omega_spec = pl.BlockSpec((bv, Lp, Lp), lambda i: (i, 0, 0))
+    list_spec = pl.BlockSpec((bv, dp), lambda i: (i, 0))
+    deg_spec = pl.BlockSpec((bv, 1), lambda i: (i, 0))
+    scale_spec = pl.BlockSpec((1, 1), lambda i: (0, 0))
+    out_shape = jax.ShapeDtypeStruct((Vp, Mp, Lp), jnp.float32)
+
+    if payload is None:
+        kernel = functools.partial(
+            _round_kernel, block_v=bv, d_max=d_max, bf16=bf16
+        )
+        in_specs = [scale_spec, full, omega_spec, list_spec, list_spec,
+                    deg_spec]
+
+        def one_round(b, k):
+            out = pl.pallas_call(
+                kernel, grid=grid, in_specs=in_specs,
+                out_specs=tiled3, out_shape=out_shape,
+                interpret=interpret,
+            )(
+                scale, b, om, _snapshot(ip, k), _snapshot(wp, k),
+                _snapshot(dg, k)[:, None],
+            )
+            return out, None
+
+        if num_rounds == 1:
+            out = one_round(bt, 0)[0]
+        else:
+            out, _ = jax.lax.scan(one_round, bt, jnp.arange(num_rounds))
+        return _unpack(out, V, L, M, betas.dtype)
+
+    pt = jnp.transpose(payload, (0, 2, 1)).astype(jnp.float32)
+    pt = jnp.pad(pt, ((0, Vp - V), (0, Mp - M), (0, Lp - L)))
+    kernel = functools.partial(
+        _round_kernel_payload, block_v=bv, d_max=d_max
+    )
+    out = pl.pallas_call(
+        kernel, grid=grid,
+        in_specs=[scale_spec, full, full, omega_spec, list_spec,
+                  list_spec, deg_spec],
+        out_specs=tiled3, out_shape=out_shape, interpret=interpret,
+    )(scale, bt, pt, om, ip[0], wp[0], dg[0][:, None])
+    return _unpack(out, V, L, M, betas.dtype)
+
+
+def elm_gossip_pallas_multiround(
+    betas, omegas, idx, w, deg, scale, *, num_rounds, compress=None,
+    interpret=False,
+):
+    """All rounds in one kernel: state resident in VMEM throughout.
+
+    Small-state arm — gate callers on ``multiround_vmem_bytes``. The
+    topology snapshots (time-varying bases, FaultyMixer masked periods)
+    ride along in VMEM and round k picks snapshot k % S in-kernel.
+    """
+    bf16 = compress == "bf16"
+    V, L, M = betas.shape
+    S, _, d_max = idx.shape
+    bt, om, ip, wp, dg, (Vp, Lp, Mp, dp, _) = _prep(
+        betas, omegas, idx, w, deg, block_v=V
+    )
+    scale = jnp.asarray(scale, jnp.float32).reshape(1, 1)
+
+    def whole(*dims):
+        return pl.BlockSpec(dims, lambda: (0,) * len(dims))
+
+    kernel = functools.partial(
+        _multiround_kernel, d_max=d_max, num_snapshots=S,
+        num_rounds=num_rounds, bf16=bf16,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(),
+        in_specs=[
+            whole(1, 1), whole(Vp, Mp, Lp), whole(Vp, Lp, Lp),
+            whole(S, Vp, dp), whole(S, Vp, dp), whole(S, Vp),
+        ],
+        out_specs=whole(Vp, Mp, Lp),
+        out_shape=jax.ShapeDtypeStruct((Vp, Mp, Lp), jnp.float32),
+        interpret=interpret,
+    )(scale, bt, om, ip, wp, dg)
+    return _unpack(out, V, L, M, betas.dtype)
+
+
+def multiround_vmem_bytes(V, L, M, S, d_max) -> int:
+    """Resident bytes of the multi-round arm (everything in VMEM)."""
+    Vp, Lp, Mp, dp = V, _rup(L, 128), _rup(M, 8), _rup(d_max, 128)
+    state = 4 * Vp * Mp * Lp  # beta in + out + lap accumulator
+    return 3 * state + 4 * Vp * Lp * Lp + S * Vp * (4 * dp + 4 * dp + 4)

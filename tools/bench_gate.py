@@ -28,7 +28,8 @@ Two additional checks:
   at commit time at every swept point, not just the acceptance point —
   this is what makes "fused is never slower" a property of the repo
   rather than of one lucky shape. (Fresh CI rows are *not* held to it:
-  a noisy shared runner may flip a close ratio.)
+  a noisy shared runner may flip a close ratio.) The committed
+  ``acceptance.fused_not_slower`` flag is held to the same standard.
 * **Tuned-cache drift** (warn only): when both the baseline and fresh
   directories hold a ``TUNED_kernels.json`` (the nightly --tune job
   produces a fresh one), entries whose committed winner wall time
@@ -137,6 +138,17 @@ def committed_row_failures(base: dict, name: str) -> list[str]:
                 f"< 1.0 (impl {rec.get('fused_impl')}) — retune and "
                 "regenerate the baseline (benchmarks.run --tune)"
             )
+    # the committed acceptance record is the same same-machine ratio:
+    # a baseline shipped with fused_not_slower=false means the suite's
+    # own invariant was already broken at commit time
+    acc = base.get("acceptance")
+    if acc is not None and acc.get("fused_not_slower") is False:
+        failures.append(
+            f"{name}.acceptance: committed fused_not_slower is false "
+            f"(fused {acc.get('fused_wall_ms')} ms vs unfused "
+            f"{acc.get('unfused_wall_ms')} ms) — regenerate the "
+            "baseline (benchmarks.run --tune)"
+        )
     return failures
 
 
