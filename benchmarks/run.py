@@ -67,6 +67,7 @@ def _register():
         paper_figs,
         serving_bench,
         stats_bench,
+        vertical_bench,
     )
 
     SUITES.update({
@@ -78,6 +79,7 @@ def _register():
         "serving": serving_bench.bench_serving,
         "multitenant": serving_bench.bench_multitenant,
         "consensus": consensus_bench.bench_consensus,
+        "vertical": vertical_bench.bench_vertical,
         "async": async_bench.bench_async,
         "ssd": micro.bench_ssd,
         "attn": micro.bench_attention,
@@ -123,7 +125,8 @@ def main() -> None:
                 kw = {"rounds": 1000}
             if args.fast and name == "compression":
                 kw = {"rounds": 600}
-            if name in ("stats", "serving", "multitenant", "consensus"):
+            if name in ("stats", "serving", "multitenant", "consensus",
+                        "vertical"):
                 kw = {"fast": args.fast, "tune": args.tune}
             if name == "async":
                 kw = {"fast": args.fast}

@@ -1,0 +1,192 @@
+"""Vertical-partitioning benchmark: tree reduction + assembled moments.
+
+Measures the cost of assembling the network preactivation from
+column-sliced nodes (core/vertical.reduce_partials) in clear and
+secure-aggregation modes, and the fused moment pass on the assembled
+Z, over a (topology, V, N, D, L) grid. Writes a machine-readable
+``BENCH_vertical.json`` at the repo root.
+
+The headline numbers are *wire costs*, which are deterministic
+byte counts, not timings:
+
+  * clear convergecast carries per-origin payloads, so messages grow
+    toward the root (sum over nodes of subtree-size * N * L * itemsize);
+  * secure mode carries one masked fixed-point partial sum per link —
+    constant 8 bytes/value — so on any tree deeper than one hop it is
+    strictly lighter, *and* interior nodes never see a neighbor's raw
+    partials (core/secure.py).
+
+The acceptance invariant at the flagship deep-tree point is
+``secure_not_heavier``: masked payload bytes <= clear payload bytes.
+It is a deterministic property of the protocol (not a timing), so it
+must hold on every machine; the bench asserts it at run time and
+records it in the JSON. Wall-time rows (``*_wall_ms``) ride along for
+tools/bench_gate.py's 4x cliff check on same-backend runs; the
+reduction is a host-side tree walk, so no fused/unfused race (and no
+``fused_speedup``) is reported — there is no unfused subject to race.
+
+``tune=True`` refreshes the ``preact_stats`` entries of
+TUNED_kernels.json at each swept point before timing the moment pass,
+like the stats/serving suites do for their ops.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import consensus, vertical
+from repro.core.secure import SecureAggregationSpec
+from repro.kernels import autotune, elm_stats_ops
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BENCH_JSON = os.path.join(REPO_ROOT, "BENCH_vertical.json")
+
+M = 2  # targets per sample (small: the wire cost is all Z, not T)
+SPEC = SecureAggregationSpec(seed=0)
+
+
+def _host_ms(fn, repeats):
+    """Median wall time of a host-side (non-jittable) callable."""
+    fn()  # warm-up: jit caches inside the tree walk
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        times.append((time.perf_counter() - t0) * 1e3)
+    return float(np.median(times))
+
+
+def _problem(kind, V, N, D, L):
+    g = consensus.build(kind, V)
+    rng = np.random.default_rng(0)
+    X = jnp.asarray(rng.standard_normal((N, D)), jnp.float32)
+    T = jnp.asarray(rng.standard_normal((N, M)), jnp.float32)
+    fmap = vertical.make_vertical_map(jax.random.key(0), D, L, V)
+    partials = [
+        fmap.partial_preactivation(i, x)
+        for i, x in enumerate(fmap.partition.split(X))
+    ]
+    return g, X, T, fmap, partials
+
+
+def bench_vertical(fast: bool = False, tune: bool = False):
+    """Reduction wall time + wire bytes + assembled moment pass.
+
+    Emits CSV rows and writes BENCH_vertical.json at the repo root.
+    """
+    backend = jax.default_backend()
+    impl = "pallas" if backend == "tpu" else "scan"
+    reps = 2 if fast else 5
+    # one N per (topology, V): tools/bench_gate.py matches rows by
+    # (N, D, L, M, dtype) only, so reused shapes would alias rows
+    if fast:
+        grid = [
+            ("line", 8, 4096, 32, 128),
+            ("ring", 8, 4608, 32, 128),
+        ]
+    else:
+        grid = [
+            ("line", 8, 4096, 32, 128),
+            ("line", 16, 16384, 64, 256),
+            ("ring", 8, 4608, 32, 128),
+            ("ring", 16, 18432, 64, 256),
+            ("complete", 8, 5120, 32, 128),
+        ]
+    # flagship: the deepest committed tree — where constant-width
+    # masked payloads beat the growing clear convergecast the hardest
+    flagship = ("line", 16 if not fast else 8)
+
+    rows, records = [], []
+    acceptance = None
+    for kind, V, N, D, L in grid:
+        g, X, T, fmap, partials = _problem(kind, V, N, D, L)
+        pt = dict(N=N, D=D, L=L, M=M, dtype="float32")
+
+        clear_ms = _host_ms(
+            lambda: vertical.reduce_partials(partials, g)[1], reps
+        )
+        _, clear_rep = vertical.reduce_partials(partials, g)
+        secure_ms = _host_ms(
+            lambda: vertical.reduce_partials(partials, g, secure=SPEC)[1],
+            reps,
+        )
+        _, sec_rep = vertical.reduce_partials(partials, g, secure=SPEC)
+
+        if tune:
+            autotune.tune(
+                "preact_stats", N=N, D=0, L=L, M=M, dtype="float32",
+                impl=impl, repeats=2 if fast else 3, force=True,
+            )
+        Z = vertical.VerticalFeatureMap.assemble(partials)
+        mom_ms = _host_ms(
+            lambda: jax.block_until_ready(
+                elm_stats_ops.fused_preact_moments(
+                    Z, fmap.bias, T, activation=fmap.activation
+                )
+            ),
+            reps,
+        )
+
+        cb = clear_rep.wire.bytes_on_wire
+        sb = sec_rep.wire.bytes_on_wire
+        rec = dict(
+            pt, graph=kind, V=V, backend=backend,
+            clear_reduce_wall_ms=clear_ms,
+            secure_reduce_wall_ms=secure_ms,
+            moments_wall_ms=mom_ms,
+            clear_bytes_on_wire=cb,
+            secure_bytes_on_wire=sb,
+            bytes_uncompressed=clear_rep.wire.bytes_uncompressed,
+            secure_payload_bytes_per_value=8,
+            wire_ratio=sb / max(cb, 1),
+        )
+        records.append(rec)
+        tag = f"vertical/{kind}_V{V}_N{N}_L{L}"
+        rows.append((
+            tag, secure_ms * 1e3,
+            f"clear_ms={clear_ms:.1f};secure_ms={secure_ms:.1f};"
+            f"moments_ms={mom_ms:.1f};clear_B={cb};secure_B={sb};"
+            f"wire_ratio={sb / max(cb, 1):.2f}",
+        ))
+
+        if (kind, V) == flagship:
+            ok = sb <= cb
+            if not ok:
+                raise AssertionError(
+                    f"secure aggregation heavier than clear at the "
+                    f"flagship point: {sb} B > {cb} B"
+                )
+            acceptance = dict(
+                point=pt, graph=kind, V=V,
+                secure_bytes_on_wire=sb,
+                clear_bytes_on_wire=cb,
+                secure_not_heavier=ok,
+            )
+            rows.append((
+                "vertical/acceptance_flagship", 0.0,
+                f"secure_not_heavier={ok};secure_B={sb};clear_B={cb}",
+            ))
+
+    payload = dict(
+        suite="vertical",
+        backend=backend,
+        default_point=dict(
+            N=grid[-1][2], D=grid[-1][3], L=grid[-1][4], M=M,
+            dtype="float32",
+        ),
+        tuned=tune,
+        rows=records,
+        acceptance=acceptance,
+    )
+    with open(BENCH_JSON, "w") as fh:
+        json.dump(payload, fh, indent=2)
+    rows.append((
+        "vertical/json", 0.0, f"written={os.path.basename(BENCH_JSON)}"
+    ))
+    return rows, {"json": BENCH_JSON}

@@ -169,6 +169,27 @@ def simulate_init_from_stats(P_: jax.Array, Q_: jax.Array, C: float) -> DCELMSta
     return DCELMState(betas=betas, omegas=omegas, k=jnp.zeros((), jnp.int32))
 
 
+def simulate_init_vertical(
+    X_slices, T: jax.Array, feature_map, C: float, graph, **kw
+):
+    """Initialize from column-partitioned inputs (vertical mode).
+
+    Node i holds ``X_slices[i] = X[:, lo_i:hi_i]`` — the same rows,
+    disjoint feature columns. Partial preactivations are sum-reduced
+    over ``graph`` (optionally masked, see core/secure.py) before the
+    nonlinearity, so the assembled stats match the horizontal plane
+    bitwise in f64. Every node seeds at the centralized optimum via
+    the P/V, Q/V scaling trick. Thin wrapper over
+    ``core.vertical.simulate_init`` — see there for ``secure=``,
+    ``faults=`` and kernel-dispatch keywords.
+
+    Returns (DCELMState, SufficientStats, ReduceReport).
+    """
+    from repro.core import vertical
+
+    return vertical.simulate_init(X_slices, T, feature_map, C, graph, **kw)
+
+
 @functools.partial(jax.jit, static_argnames=("C",))
 def simulate_step(
     state: DCELMState, adjacency: jax.Array, gamma: jax.Array, C: float

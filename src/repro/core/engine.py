@@ -121,10 +121,19 @@ class ConsensusEngine:
     After any ``run``/``stream_chunk``, ``eng.wire_stats`` holds the
     exact bytes-on-wire accounting of the rounds just executed
     (``compression.WireStats``), on every mixer stack.
+
+    ``secure`` carries a ``secure.SecureAggregationSpec`` (set via
+    ``with_secure_aggregation``) that the vertical plane
+    (``core/vertical.py``) picks up for its sum-reductions — pairwise
+    additive masks on the assembly payloads. It deliberately does NOT
+    mask the per-round Laplacian gossip: lap_i is a *neighborhood*
+    difference, not a network-wide sum, so pairwise masks would not
+    cancel there; secure aggregation scopes to genuine sum-reductions.
     """
 
     mixer: Any
     rule: Callable
+    secure: Any = None
 
     @property
     def wire_stats(self):
@@ -385,6 +394,7 @@ class ConsensusEngine:
                     adjacencies, compress=self._base_compress()
                 ),
                 DCELMRule(V - 1, C),
+                secure=self.secure,
             ),
             drop=node,
         )
@@ -428,6 +438,7 @@ class ConsensusEngine:
                     adjacencies, compress=self._base_compress()
                 ),
                 DCELMRule(V + 1, C),
+                secure=self.secure,
             ),
             add=True,
         )
@@ -612,7 +623,8 @@ def with_faults(
     """
     if isinstance(eng.mixer, CompressedMixer):
         inner = with_faults(
-            ConsensusEngine(eng.mixer.base, eng.rule), faults, num_rounds
+            dataclasses.replace(eng, mixer=eng.mixer.base),
+            faults, num_rounds,
         )
         return with_compression(inner, eng.mixer.spec)
     if isinstance(faults, FaultModel):
@@ -621,7 +633,7 @@ def with_faults(
         mixer = FaultyMixer.from_fault_model(eng.mixer, faults, num_rounds)
     else:
         mixer = FaultyMixer(eng.mixer, faults)
-    return ConsensusEngine(mixer, eng.rule)
+    return dataclasses.replace(eng, mixer=mixer)
 
 
 def with_compression(eng: ConsensusEngine, spec) -> ConsensusEngine:
@@ -632,7 +644,26 @@ def with_compression(eng: ConsensusEngine, spec) -> ConsensusEngine:
     accounting). Composes over a fault-injected engine; the update rule
     and Thm. 2 step bound are untouched (DESIGN.md §9).
     """
-    return ConsensusEngine(CompressedMixer(eng.mixer, spec), eng.rule)
+    return dataclasses.replace(eng, mixer=CompressedMixer(eng.mixer, spec))
+
+
+def with_secure_aggregation(eng: ConsensusEngine, spec=True) -> ConsensusEngine:
+    """Attach a secure-aggregation policy to an engine.
+
+    spec: a ``secure.SecureAggregationSpec``, an int (shared PRNG
+    seed), or True for the defaults. The vertical plane
+    (``core/vertical.py``) reads ``eng.secure`` and applies pairwise
+    additive masks — fixed-point, canceling exactly in the sum — to
+    its assembly payloads; see the class docstring for why per-round
+    Laplacian gossip is out of scope. Composes freely with
+    ``with_faults`` (crash-time mask recovery rides the same
+    ``FaultModel``) and ``with_compression``.
+    """
+    from repro.core.secure import SecureAggregationSpec
+
+    return dataclasses.replace(
+        eng, secure=SecureAggregationSpec.parse(spec)
+    )
 
 
 def _split_compress(compress):

@@ -104,6 +104,58 @@ def update_chunk(
     return state
 
 
+def vertical_chunk(
+    state: OnlineNodeState,
+    X_new_slices,
+    T_new: jax.Array,
+    feature_map,
+    *,
+    remove: bool = False,
+    graph=None,
+    secure=None,
+    faults=None,
+    **kw,
+):
+    """Node-local Algorithm 2 update from column-sliced new rows.
+
+    The chunk's rows arrive at every node at once (vertical mode: same
+    samples, disjoint columns), so the assembled hidden chunk dH is
+    shared — each node folds (dH/sqrt(V), dT/sqrt(V)) into its state,
+    preserving the per-node stats = network-total/V invariant that the
+    vertical init establishes. Reduction keywords (``secure=``,
+    ``faults=``, ``start_round=``) pass through to
+    ``core.vertical.reduce_partials``.
+
+    Returns (OnlineNodeState, ReduceReport). For the full networked
+    driver (consensus rounds included) use ``vertical.stream_chunk``.
+    """
+    from repro.core import vertical
+    from repro.core.consensus import complete
+    from repro.core.features import ACTIVATIONS
+
+    vfmap = feature_map
+    if graph is None:
+        graph = complete(vfmap.num_nodes)
+    partials = [
+        vfmap.partial_preactivation(i, x)
+        for i, x in enumerate(X_new_slices)
+    ]
+    dZ, report = vertical.reduce_partials(
+        partials, graph, secure=secure, faults=faults, **kw
+    )
+    dH = ACTIVATIONS[vfmap.activation](dZ + vfmap.bias)
+    if T_new.ndim == 1:
+        T_new = T_new[:, None]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(float(graph.num_nodes), dH.dtype))
+    chunk = (dH * scale, T_new.astype(dH.dtype) * scale)
+    new = update_chunk(
+        state,
+        added=None if remove else chunk,
+        removed=chunk if remove else None,
+    )
+    return new, report
+
+
 # Batched (all V nodes at once) variants, used by the streaming driver
 # ``ConsensusEngine.stream_chunk`` (engine.py).
 batched_add_chunk = jax.jit(jax.vmap(add_chunk))

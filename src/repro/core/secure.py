@@ -1,0 +1,281 @@
+"""Pairwise-mask secure aggregation for sum-reduction payloads.
+
+The SMC privacy-preserving ELM construction (arXiv 1602.02899) and the
+federated secure-aggregation protocol it anticipates share one idea:
+when the network only ever needs a *sum* of per-node values, each pair
+of participants (i, j) can agree on a random mask stream r_ij and node
+i can publish ``x_i + sum_{j>i} r_ij - sum_{j<i} r_ij`` instead of x_i.
+Every mask appears exactly once with each sign, so the masks cancel in
+the total while every individual payload is indistinguishable from
+noise.
+
+Exact cancellation is impossible in floating point ((x + r) - r == x
+does not hold), so masking happens *after quantization*: values are
+encoded to two's-complement fixed point (``frac_bits`` fractional
+bits) and masks are added modulo 2^64, where addition is associative
+and the cancellation is exact. The masked sum therefore equals the
+unmasked sum bit-for-bit — the invariant the property tests pin.
+
+Mask lifecycle (DESIGN.md §16):
+
+* **Agreement** — the pair stream for edge {i, j} at reduction ``tag``
+  is seeded from ``SeedSequence([seed, lo, hi, tag])`` (lo < hi the
+  sorted pair), modeling a Diffie-Hellman-style per-edge key exchange.
+  Streams are never transmitted; both endpoints (and, at recovery
+  time, the aggregator acting for the survivors) regenerate them.
+* **Use** — each participant's payload carries the signed sum of its
+  pair masks against every *other* participant of the reduction. Masks
+  are single-use: a new ``tag`` (round index) yields independent
+  streams, so replaying a payload from an earlier round reveals
+  nothing.
+* **Recovery** — if a node's payload never reaches the aggregator
+  (crash mid-round, dead link), the masks it shared with the survivors
+  no longer cancel. The survivors jointly reconstruct exactly those
+  pair streams (here: the aggregator re-derives them from the shared
+  seeds, standing in for the secret-share reconstruction) and the
+  aggregator subtracts the residue. The dropped node's *data* stays
+  masked forever: its payload was never sent, and only streams paired
+  with the dropped node — never the node's values — are reconstructed.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+# one uint64 codeword per masked value on the wire
+MASK_BYTES = 8
+
+
+@dataclasses.dataclass(frozen=True)
+class SecureAggregationSpec:
+    """Parameters of the pairwise-mask protocol.
+
+    seed:      the shared PRNG key-exchange seed; all pair streams
+               derive from it (per edge, per reduction tag).
+    frac_bits: fixed-point fractional bits. Values are encoded as
+               round(x * 2^frac_bits) in two's complement; the
+               quantization error per value is <= 2^-(frac_bits+1).
+    """
+
+    seed: int = 0
+    frac_bits: int = 32
+
+    def __post_init__(self):
+        if not 0 < int(self.frac_bits) < 62:
+            raise ValueError(
+                f"frac_bits must be in (0, 62), got {self.frac_bits}: "
+                "the encoded magnitude 2^frac_bits * |x| must leave "
+                "headroom inside int64"
+            )
+
+    def payload_bytes(self, num_values: int) -> int:
+        """Wire size of one masked payload (uint64 codewords)."""
+        return int(num_values) * MASK_BYTES
+
+    @property
+    def resolution(self) -> float:
+        """The fixed-point grid spacing 2^-frac_bits."""
+        return 1.0 / float(1 << self.frac_bits)
+
+    @classmethod
+    def parse(cls, spec) -> "SecureAggregationSpec":
+        if isinstance(spec, cls):
+            return spec
+        if spec is None or spec is True:
+            return cls()
+        if isinstance(spec, int):
+            return cls(seed=spec)
+        raise ValueError(
+            f"cannot parse secure-aggregation spec {spec!r}: expected a "
+            "SecureAggregationSpec, an int seed, True, or None"
+        )
+
+
+# ---------------------------------------------------------------------------
+# Fixed-point codec (exact modular arithmetic lives in uint64)
+# ---------------------------------------------------------------------------
+
+
+def encode_fixed(values, frac_bits: int) -> np.ndarray:
+    """float -> uint64 two's-complement fixed point codes.
+
+    Raises if any scaled value leaves the +-2^62 headroom band (the
+    remaining bit of slack absorbs the network-sum growth before a
+    genuine wraparound could alias).
+    """
+    x = np.asarray(values, np.float64)
+    scaled = np.round(x * float(1 << frac_bits))
+    limit = float(1 << 62)
+    if not np.all(np.isfinite(scaled)) or np.any(np.abs(scaled) >= limit):
+        raise ValueError(
+            f"value out of fixed-point range: |x| * 2^{frac_bits} must "
+            f"stay below 2^62 (max scaled magnitude "
+            f"{np.max(np.abs(scaled)):.3g}); lower frac_bits or "
+            "pre-scale the payload"
+        )
+    return scaled.astype(np.int64).astype(np.uint64)
+
+
+def decode_fixed(codes, frac_bits: int) -> np.ndarray:
+    """uint64 codes -> float64, inverting ``encode_fixed``.
+
+    Sums of codes decode to sums of values exactly as long as the true
+    sum stays inside the int64 band — modular wraparound through
+    uint64 is what makes the masked arithmetic associative.
+    """
+    u = np.asarray(codes, np.uint64)
+    return u.astype(np.int64).astype(np.float64) / float(1 << frac_bits)
+
+
+# ---------------------------------------------------------------------------
+# Pair mask streams
+# ---------------------------------------------------------------------------
+
+
+def pair_mask(
+    spec: SecureAggregationSpec, i: int, j: int, num_values: int,
+    *, tag: int = 0,
+) -> np.ndarray:
+    """The shared mask stream for edge {i, j} at reduction ``tag``.
+
+    Symmetric in (i, j): both endpoints derive the identical stream
+    from the sorted pair, as a real key exchange would.
+    """
+    if i == j:
+        raise ValueError("a node holds no pair mask with itself")
+    lo, hi = (i, j) if i < j else (j, i)
+    ss = np.random.SeedSequence([int(spec.seed), int(lo), int(hi), int(tag)])
+    rng = np.random.Generator(np.random.PCG64(ss))
+    return rng.integers(
+        0, np.iinfo(np.uint64).max, size=int(num_values),
+        dtype=np.uint64, endpoint=True,
+    )
+
+
+def node_mask(
+    spec: SecureAggregationSpec, i: int, participants, num_values: int,
+    *, tag: int = 0,
+) -> np.ndarray:
+    """Node i's total mask: sum of +-r_ij over the other participants.
+
+    Sign convention: the lower-indexed endpoint adds the stream, the
+    higher-indexed one subtracts it — so every pair's contribution to
+    the participant-wide sum is r_ij - r_ij = 0 exactly (mod 2^64).
+    """
+    m = np.zeros(int(num_values), np.uint64)
+    for j in participants:
+        if j == i:
+            continue
+        r = pair_mask(spec, i, j, num_values, tag=tag)
+        m = m + r if i < j else m - r
+    return m
+
+
+# ---------------------------------------------------------------------------
+# The aggregator
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SecureAggregator:
+    """Masks payloads for sum-reductions over a fixed participant set.
+
+    One instance covers one cohort of participants; each reduction
+    (one ``tag``) draws fresh single-use pair streams. ``mask`` is the
+    node-side operation, ``aggregate`` the collector side (including
+    dropout recovery), and ``masked_partial_sum`` models what an
+    interior relay of a reduction tree forwards — still fully masked.
+    """
+
+    spec: SecureAggregationSpec
+    participants: tuple[int, ...]
+
+    def __post_init__(self):
+        part = tuple(sorted(int(p) for p in self.participants))
+        if len(part) != len(set(part)):
+            raise ValueError(f"duplicate participants: {self.participants}")
+        if len(part) < 2:
+            raise ValueError(
+                "secure aggregation needs >= 2 participants: a single "
+                "node's mask would be empty and its payload clear"
+            )
+        object.__setattr__(self, "participants", part)
+
+    @property
+    def num_participants(self) -> int:
+        return len(self.participants)
+
+    def mask(self, i: int, values, *, tag: int = 0) -> np.ndarray:
+        """Node i's wire payload: fixed-point codes + its total mask."""
+        if i not in self.participants:
+            raise ValueError(f"node {i} is not in {self.participants}")
+        codes = encode_fixed(values, self.spec.frac_bits)
+        shaped = node_mask(
+            self.spec, i, self.participants, codes.size, tag=tag
+        ).reshape(codes.shape)
+        return codes + shaped
+
+    def residual_mask(
+        self, survivors, dropped, num_values: int, *, tag: int = 0
+    ) -> np.ndarray:
+        """Uncancelled mask residue left in a survivors-only sum.
+
+        Every (survivor s, dropped d) pair contributes its stream once
+        with s's sign and never with d's — the reconstruction step of
+        crash recovery re-derives exactly these streams.
+        """
+        res = np.zeros(int(num_values), np.uint64)
+        for s in survivors:
+            for d in dropped:
+                r = pair_mask(self.spec, s, d, num_values, tag=tag)
+                res = res + r if s < d else res - r
+        return res
+
+    def aggregate(
+        self, payloads: dict[int, np.ndarray], *, tag: int = 0
+    ) -> np.ndarray:
+        """Sum of delivered payloads, unmasked, back in float.
+
+        payloads: {node -> masked codes} for the nodes whose payloads
+        actually arrived. Pairs of delivered nodes cancel by
+        construction; for pairs broken by a dropout the residue is
+        reconstructed and subtracted (mask recovery). Equals the
+        unmasked fixed-point sum of the delivered values exactly.
+        """
+        if not payloads:
+            raise ValueError("no payloads delivered")
+        survivors = sorted(payloads)
+        unknown = [s for s in survivors if s not in self.participants]
+        if unknown:
+            raise ValueError(
+                f"payload from non-participant(s) {unknown}; "
+                f"cohort is {self.participants}"
+            )
+        total = np.zeros_like(next(iter(payloads.values())))
+        for s in survivors:
+            total = total + np.asarray(payloads[s], np.uint64)
+        dropped = [p for p in self.participants if p not in payloads]
+        if dropped:
+            total = total - self.residual_mask(
+                survivors, dropped, total.size, tag=tag
+            ).reshape(total.shape)
+        return decode_fixed(total, self.spec.frac_bits)
+
+    @staticmethod
+    def masked_partial_sum(payloads) -> np.ndarray:
+        """What a relay forwards: a mod-2^64 sum of masked payloads.
+
+        Until the cohort is complete the pair masks do not cancel, so
+        interior partial sums stay as opaque as the leaves — constant
+        message size is what buys the tree reduction its privacy.
+        """
+        payloads = list(payloads)
+        total = np.zeros_like(np.asarray(payloads[0], np.uint64))
+        for p in payloads:
+            total = total + np.asarray(p, np.uint64)
+        return total
+
+    def payload_bytes(self, num_values: int) -> int:
+        return self.spec.payload_bytes(num_values)

@@ -1,0 +1,811 @@
+"""Vertically partitioned DC-ELM (arXiv 1602.02899's workload).
+
+The paper splits data by *samples*: node i holds rows (X_i, T_i) and
+the stats plane reduces per-node moments (P_i, Q_i). The SMC
+privacy-preserving ELM setting splits by *features*: every node holds
+the same N rows but only a disjoint column slice X[:, lo_i:hi_i]
+(a bank sees balances, a bureau sees scores — same customers). Because
+the random feature map is affine before its nonlinearity,
+
+    H = g(X W + b) = g(sum_i X[:, lo_i:hi_i] W[lo_i:hi_i, :] + b),
+
+each node can compute its partial preactivation Z_i = X_i W_i locally
+and the network only needs the *sum* of the Z_i before the
+nonlinearity — exactly the reduction shape that pairwise-mask secure
+aggregation (core/secure.py) protects. After assembly the existing
+fused moment kernel (kernels/elm_stats — the ``preact`` variant)
+produces (P, Q) and every downstream consumer (finalize, DC-ELM
+consensus, online Woodbury streaming, serving) works unchanged.
+
+Bitwise reproducibility: blocked float matmul partial sums are NOT
+associative — ``X @ W`` and ``sum_i X_i @ W_i`` differ in the last ulp.
+``VerticalFeatureMap`` therefore owns the canonical contraction (a
+left fold over node-order partials), so "centralized" and
+"distributed" compute the same float sequence and the assembled (P, Q)
+match the centralized stats plane bit-for-bit in f64 (pinned in
+tests/test_vertical.py). The clear reduction ships *per-origin*
+contributions up a BFS spanning tree of the gossip graph so the root
+can fold in node order; the secure reduction ships masked fixed-point
+partial sums instead — constant message size and exact modular
+summation, at the cost of the fixed-point grid (2^-frac_bits).
+
+Crash semantics ride ``consensus.FaultModel``: nodes crashed at the
+reduction's start round are excluded from the cohort entirely; a node
+(or link) dying mid-reduction drops every origin whose up-tree path is
+broken, and in secure mode the aggregator reconstructs exactly the
+dropped pairs' mask streams (``SecureAggregator.residual_mask``) so
+the surviving sum is still exact — the masked-sum == unmasked-sum
+property tests/test_secure.py pins for arbitrary surviving subsets.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import stats as stats_lib
+from repro.core.compression import WireStats
+from repro.core.consensus import FaultModel, Graph
+from repro.core.features import ACTIVATIONS, RandomFeatureMap
+from repro.core.secure import SecureAggregationSpec, SecureAggregator
+
+
+# ---------------------------------------------------------------------------
+# Column partition + the canonical feature map
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ColumnPartition:
+    """Disjoint, covering column slices: node i owns [bounds[i], bounds[i+1])."""
+
+    bounds: tuple[int, ...]
+
+    def __post_init__(self):
+        b = tuple(int(x) for x in self.bounds)
+        if len(b) < 2 or b[0] != 0:
+            raise ValueError(
+                f"bounds must start at 0 and delimit >= 1 slice, got {b}"
+            )
+        if any(b[i] >= b[i + 1] for i in range(len(b) - 1)):
+            raise ValueError(
+                f"bounds must be strictly increasing (empty column "
+                f"slices are not allowed), got {b}"
+            )
+        object.__setattr__(self, "bounds", b)
+
+    @property
+    def num_nodes(self) -> int:
+        return len(self.bounds) - 1
+
+    @property
+    def in_dim(self) -> int:
+        return self.bounds[-1]
+
+    def cols(self, i: int) -> tuple[int, int]:
+        return self.bounds[i], self.bounds[i + 1]
+
+    @property
+    def widths(self) -> tuple[int, ...]:
+        return tuple(
+            self.bounds[i + 1] - self.bounds[i]
+            for i in range(self.num_nodes)
+        )
+
+    @classmethod
+    def even(cls, in_dim: int, num_nodes: int) -> "ColumnPartition":
+        """Split D columns as evenly as possible over V nodes."""
+        if not 1 <= num_nodes <= in_dim:
+            raise ValueError(
+                f"need 1 <= num_nodes <= in_dim, got V={num_nodes} "
+                f"over D={in_dim} columns"
+            )
+        base, extra = divmod(in_dim, num_nodes)
+        bounds, at = [0], 0
+        for i in range(num_nodes):
+            at += base + (1 if i < extra else 0)
+            bounds.append(at)
+        return cls(tuple(bounds))
+
+    @classmethod
+    def from_widths(cls, widths) -> "ColumnPartition":
+        bounds, at = [0], 0
+        for w in widths:
+            at += int(w)
+            bounds.append(at)
+        return cls(tuple(bounds))
+
+    def split(self, X: jax.Array) -> list[jax.Array]:
+        """Row-aligned column slices [X[:, lo_i:hi_i]] for all nodes."""
+        if X.shape[-1] != self.in_dim:
+            raise ValueError(
+                f"X has {X.shape[-1]} columns, partition covers "
+                f"{self.in_dim}"
+            )
+        return [
+            X[..., lo:hi]
+            for lo, hi in (self.cols(i) for i in range(self.num_nodes))
+        ]
+
+
+@dataclasses.dataclass(frozen=True)
+class VerticalFeatureMap:
+    """A ``RandomFeatureMap`` whose contraction is column-blocked.
+
+    Owns the *canonical* preactivation order: a left fold over the
+    node-order partials Z_i = X_i W_i. Distributed assembly replays
+    exactly this fold at the reduction root, so centralized-vs-
+    distributed parity is bitwise rather than "up to float
+    reassociation". Implements the feature-map interface
+    (``in_dim``/``num_features``/``__call__``), so the serving plane
+    and the stats plane's materialize path consume it unchanged;
+    ``stats.fusable_params`` returns None for it by design — fusing
+    X @ W in one pass is precisely what vertical mode cannot do.
+    """
+
+    base: RandomFeatureMap
+    partition: ColumnPartition
+
+    def __post_init__(self):
+        if not isinstance(self.base, RandomFeatureMap):
+            raise ValueError(
+                "vertical mode needs an affine feature map (g(XW + b)); "
+                f"got {type(self.base).__name__} — RBF/gaussian nodes "
+                "have no additive preactivation to assemble"
+            )
+        if self.partition.in_dim != self.base.in_dim:
+            raise ValueError(
+                f"partition covers {self.partition.in_dim} columns, "
+                f"feature map expects {self.base.in_dim}"
+            )
+
+    @property
+    def in_dim(self) -> int:
+        return self.base.in_dim
+
+    @property
+    def num_features(self) -> int:
+        return self.base.num_features
+
+    @property
+    def activation(self) -> str:
+        return self.base.activation
+
+    @property
+    def num_nodes(self) -> int:
+        return self.partition.num_nodes
+
+    @property
+    def bias(self) -> jax.Array:
+        return self.base.bias
+
+    def weight_shard(self, i: int) -> jax.Array:
+        """Node i's (hi - lo, L) weight rows — all it ever needs."""
+        lo, hi = self.partition.cols(i)
+        return self.base.weights[lo:hi]
+
+    def partial_preactivation(self, i: int, X_i: jax.Array) -> jax.Array:
+        """Z_i = X_i W_i, node i's local share of the preactivation."""
+        lo, hi = self.partition.cols(i)
+        if X_i.shape[-1] != hi - lo:
+            raise ValueError(
+                f"node {i} owns columns [{lo}, {hi}) ({hi - lo} wide), "
+                f"got a slice with {X_i.shape[-1]} columns"
+            )
+        return X_i @ self.weight_shard(i)
+
+    @staticmethod
+    def assemble(partials) -> jax.Array:
+        """The canonical left fold sum_i Z_i, in node order."""
+        partials = list(partials)
+        z = partials[0]
+        for p in partials[1:]:
+            z = z + p
+        return z
+
+    def preactivation(self, X: jax.Array) -> jax.Array:
+        """Z for full-width rows, via the same column-blocked fold."""
+        return self.assemble(
+            self.partial_preactivation(i, x)
+            for i, x in enumerate(self.partition.split(X))
+        )
+
+    def __call__(self, x: jax.Array) -> jax.Array:
+        g = ACTIVATIONS[self.activation]
+        return g(self.preactivation(x) + self.base.bias)
+
+    @classmethod
+    def from_shards(
+        cls, shards, bias: jax.Array, activation: str = "sigmoid"
+    ) -> "VerticalFeatureMap":
+        """Assemble the serving map from per-node weight shards.
+
+        shards: node-order list of (d_i, L) weight slices — what each
+        party holds locally. Concatenation recovers the full (D, L)
+        map, so a trained vertical federation can stand up the serving
+        plane (``serving.ELMServer``) on pooled shards + the consensus
+        beta without any party ever having seen another's columns.
+        """
+        shards = [jnp.asarray(s) for s in shards]
+        widths = [s.shape[0] for s in shards]
+        base = RandomFeatureMap(
+            weights=jnp.concatenate(shards, axis=0),
+            bias=jnp.asarray(bias),
+            activation=activation,
+        )
+        return cls(base=base, partition=ColumnPartition.from_widths(widths))
+
+
+def make_vertical_map(
+    key, in_dim: int, num_features: int, num_nodes: int,
+    *, activation: str = "sigmoid", scale: float = 1.0, dtype=jnp.float32,
+    partition: ColumnPartition | None = None,
+) -> VerticalFeatureMap:
+    """A partitioned random map (paper-style U(-1,1) weights).
+
+    ``partition`` defaults to an even column split; pass a
+    ``ColumnPartition.from_widths(...)`` for uneven feature ownership
+    (its widths must sum to ``in_dim`` and cover ``num_nodes`` nodes).
+    """
+    if partition is None:
+        partition = ColumnPartition.even(in_dim, num_nodes)
+    if partition.in_dim != in_dim or partition.num_nodes != num_nodes:
+        raise ValueError(
+            f"partition covers {partition.num_nodes} node(s) over "
+            f"{partition.in_dim} column(s); expected {num_nodes} over "
+            f"{in_dim}"
+        )
+    from repro.core.features import make_random_features
+
+    base = make_random_features(
+        key, in_dim, num_features, activation=activation, scale=scale,
+        dtype=dtype,
+    )
+    return VerticalFeatureMap(base=base, partition=partition)
+
+
+# ---------------------------------------------------------------------------
+# Spanning-tree reduction over the gossip graph
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SpanningTree:
+    """BFS tree of the gossip graph, rooted at the aggregator node."""
+
+    root: int
+    parent: tuple[int, ...]  # parent[v], -1 for the root
+    depth: tuple[int, ...]
+
+    @property
+    def num_nodes(self) -> int:
+        return len(self.parent)
+
+    @property
+    def max_depth(self) -> int:
+        return max(self.depth)
+
+    def children(self, v: int) -> list[int]:
+        return [u for u, p in enumerate(self.parent) if p == v]
+
+    @classmethod
+    def bfs(cls, graph: Graph, root: int = 0) -> "SpanningTree":
+        V = graph.num_nodes
+        parent = [-1] * V
+        depth = [-1] * V
+        depth[root] = 0
+        q = deque([root])
+        while q:
+            v = q.popleft()
+            for u in sorted(int(x) for x in graph.neighbors(v)):
+                if depth[u] < 0:
+                    depth[u] = depth[v] + 1
+                    parent[u] = v
+                    q.append(u)
+        if min(depth) < 0:
+            missing = [v for v in range(V) if depth[v] < 0]
+            raise ValueError(
+                f"graph is disconnected: nodes {missing} unreachable "
+                f"from root {root}; vertical assembly needs every "
+                "column slice"
+            )
+        return cls(root=root, parent=tuple(parent), depth=tuple(depth))
+
+
+@dataclasses.dataclass(frozen=True)
+class ReduceReport:
+    """What one vertical reduction did on the wire.
+
+    delivered: origins whose partial reached the root (root included).
+    dropped:   cohort members whose path was broken mid-reduction.
+    excluded:  nodes crashed before the reduction started (never in
+               the mask cohort).
+    wire:      exact byte accounting (convergecast + broadcast).
+    payloads:  captured wire messages {(src, dst): array} when
+               ``capture_payloads=True`` — what an eavesdropper on
+               every link sees; the privacy tests grep these.
+    """
+
+    delivered: tuple[int, ...]
+    dropped: tuple[int, ...]
+    excluded: tuple[int, ...]
+    wire: WireStats
+    payloads: dict | None = None
+
+
+def _crashed_at(faults: FaultModel | None, node: int, rnd: int) -> bool:
+    if faults is None:
+        return False
+    return any(
+        c.node == node and c.start <= rnd < c.start + c.duration
+        for c in faults.crashes
+    )
+
+
+def reduce_partials(
+    partials,
+    graph: Graph,
+    *,
+    secure: SecureAggregator | SecureAggregationSpec | None = None,
+    faults: FaultModel | None = None,
+    start_round: int = 0,
+    root: int = 0,
+    capture_payloads: bool = False,
+) -> tuple[jax.Array, ReduceReport]:
+    """Sum per-node partials over a BFS tree of ``graph``; broadcast back.
+
+    partials: node-order list of (N, L) arrays (one per graph node).
+
+    Clear mode forwards *per-origin* contributions so the root can
+    left-fold in node order — bitwise reproducible, message size grows
+    toward the root. Secure mode forwards one masked fixed-point
+    partial sum per hop — constant message size, exact modular
+    summation, payloads indistinguishable from noise (core/secure.py).
+
+    Scheduling: a node at tree depth d sends at round
+    ``start_round + (max_depth - d)``, i.e. after all its children. An
+    origin is delivered iff every hop node on its path is alive and
+    every hop edge is kept (``FaultModel``) at that hop's send round.
+    Dropped origins simply do not contribute; in secure mode the
+    aggregator additionally reconstructs and subtracts the dropped
+    pairs' mask residue (crash recovery). The down-tree broadcast of
+    the assembled sum is accounted on the wire but assumed retried to
+    success (one extra ``max_depth`` rounds).
+    """
+    partials = [jnp.asarray(p) for p in partials]
+    V = graph.num_nodes
+    if len(partials) != V:
+        raise ValueError(
+            f"{len(partials)} partials for a {V}-node graph"
+        )
+    shape = partials[0].shape
+    if any(p.shape != shape for p in partials):
+        raise ValueError(
+            f"partials disagree on shape: {[p.shape for p in partials]}"
+        )
+    tree = SpanningTree.bfs(graph, root=root)
+    depth_rounds = max(tree.max_depth, 1)
+
+    if _crashed_at(faults, root, start_round):
+        raise ValueError(
+            f"aggregator node {root} is crashed at round {start_round}; "
+            "re-root the reduction on a live node"
+        )
+    excluded = tuple(
+        v for v in range(V) if _crashed_at(faults, v, start_round)
+    )
+    cohort = [v for v in range(V) if v not in excluded]
+
+    # per-node send round: children strictly before parents
+    send_round = {
+        v: start_round + (tree.max_depth - tree.depth[v])
+        for v in range(V)
+    }
+    keep = None
+    if faults is not None:
+        keep = faults.edge_keep(start_round + depth_rounds + 1)
+
+    def hop_ok(v: int) -> bool:
+        """Can v push its buffer one hop up at its send round?"""
+        p = tree.parent[v]
+        if v in excluded or p in excluded:
+            return False
+        r = send_round[v]
+        if _crashed_at(faults, v, r) or _crashed_at(faults, p, r):
+            return False
+        return keep is None or bool(keep[r, v, p] > 0)
+
+    delivered = []
+    for v in cohort:
+        path_ok, at = True, v
+        while at != root:
+            if not hop_ok(at):
+                path_ok = False
+                break
+            at = tree.parent[at]
+        if path_ok:
+            delivered.append(v)
+    dropped = tuple(v for v in cohort if v not in delivered)
+
+    agg = None
+    if secure is not None and len(cohort) >= 2:
+        if isinstance(secure, SecureAggregator):
+            agg = SecureAggregator(secure.spec, tuple(cohort))
+        else:
+            agg = SecureAggregator(
+                SecureAggregationSpec.parse(secure), tuple(cohort)
+            )
+
+    num_vals = int(np.prod(shape))
+    captured: dict | None = {} if capture_payloads else None
+
+    # ---- convergecast (simulated per-edge, leaves first) --------------
+    links_live = links_sent = bytes_up = 0
+    per_round = np.zeros(depth_rounds + tree.max_depth, np.int64)
+    by_depth = sorted(
+        (v for v in cohort if v != root),
+        key=lambda v: -tree.depth[v],
+    )
+
+    def edge_live(v: int) -> bool:
+        p = tree.parent[v]
+        if v in excluded or p in excluded:
+            return False
+        r = send_round[v]
+        return keep is None or bool(keep[r, v, p] > 0)
+
+    if agg is None:
+        # buffers hold {origin: partial}; root folds in node order
+        buffers = {v: {v: partials[v]} for v in cohort}
+        for v in by_depth:
+            links_live += edge_live(v)
+            if hop_ok(v) and buffers[v]:
+                msg = buffers[v]
+                links_sent += 1
+                nbytes = len(msg) * num_vals * partials[v].dtype.itemsize
+                bytes_up += nbytes
+                per_round[send_round[v] - start_round] += nbytes
+                if captured is not None:
+                    captured[(v, tree.parent[v])] = {
+                        o: np.asarray(z) for o, z in msg.items()
+                    }
+                buffers[tree.parent[v]].update(msg)
+                buffers[v] = {}
+        root_buf = buffers[root]
+        Z = VerticalFeatureMap.assemble(
+            root_buf[o] for o in sorted(root_buf)
+        )
+    else:
+        tag = start_round
+        codes = {
+            v: agg.mask(v, np.asarray(partials[v], np.float64), tag=tag)
+            for v in cohort
+        }
+        buffers = {v: [codes[v]] for v in cohort}
+        for v in by_depth:
+            links_live += edge_live(v)
+            if hop_ok(v) and buffers[v]:
+                msg = SecureAggregator.masked_partial_sum(buffers[v])
+                links_sent += 1
+                nbytes = agg.payload_bytes(num_vals)
+                bytes_up += nbytes
+                per_round[send_round[v] - start_round] += nbytes
+                if captured is not None:
+                    captured[(v, tree.parent[v])] = msg
+                buffers[tree.parent[v]].append(msg)
+                buffers[v] = []
+        total = SecureAggregator.masked_partial_sum(buffers[root])
+        if dropped:
+            total = total - agg.residual_mask(
+                delivered, dropped, num_vals, tag=tag
+            ).reshape(shape)
+        from repro.core.secure import decode_fixed
+
+        Z = jnp.asarray(
+            decode_fixed(total, agg.spec.frac_bits), partials[0].dtype
+        )
+
+    # ---- broadcast of the assembled Z back down the tree --------------
+    down_bytes = 0
+    zbytes = num_vals * Z.dtype.itemsize
+    for v in cohort:
+        if v == root:
+            continue
+        down_bytes += zbytes
+        links_live += 1
+        links_sent += 1
+        per_round[depth_rounds + tree.depth[v] - 1] += zbytes
+
+    # the uncompressed baseline: what the same live links would have
+    # moved under the clear per-origin scheme at f64
+    clear_item = np.dtype(np.float64).itemsize
+    uncompressed = 0
+    for v in cohort:
+        if v == root:
+            continue
+        # one per-origin message carrying its delivered subtree
+        sub = sum(
+            1
+            for o in delivered
+            if o != root and _on_path(tree, o, v)
+        )
+        uncompressed += sub * num_vals * clear_item
+    uncompressed += (len(cohort) - 1) * zbytes
+
+    wire = WireStats(
+        rounds=depth_rounds + tree.max_depth,
+        links_live=links_live,
+        links_sent=links_sent,
+        bytes_on_wire=bytes_up + down_bytes,
+        bytes_uncompressed=uncompressed,
+        per_round_bytes=per_round,
+    )
+    report = ReduceReport(
+        delivered=tuple(sorted(set(delivered) | {root})),
+        dropped=dropped,
+        excluded=excluded,
+        wire=wire,
+        payloads=captured,
+    )
+    return Z, report
+
+
+def _on_path(tree: SpanningTree, origin: int, via: int) -> bool:
+    """True if origin's up-tree path passes through (or starts at) via."""
+    at = origin
+    while at != tree.root:
+        if at == via:
+            return True
+        at = tree.parent[at]
+    return False
+
+
+# ---------------------------------------------------------------------------
+# The vertical stats plane
+# ---------------------------------------------------------------------------
+
+
+def _check_slices(X_slices, fmap: VerticalFeatureMap):
+    if len(X_slices) != fmap.num_nodes:
+        raise ValueError(
+            f"{len(X_slices)} column slices for a {fmap.num_nodes}-node "
+            "partition"
+        )
+    rows = {int(x.shape[0]) for x in X_slices}
+    if len(rows) > 1:
+        raise ValueError(
+            f"column slices must be row-aligned (same samples on every "
+            f"node); got row counts {sorted(rows)}"
+        )
+
+
+def vertical_stats(
+    X_slices,
+    T: jax.Array,
+    fmap: VerticalFeatureMap,
+    *,
+    graph: Graph | None = None,
+    secure=None,
+    faults: FaultModel | None = None,
+    start_round: int = 0,
+    root: int = 0,
+    dtype=None,
+    use_kernel: bool | None = None,
+    capture_payloads: bool = False,
+    **kw,
+) -> tuple[stats_lib.SufficientStats, ReduceReport]:
+    """(P, Q, ||T||^2) from column-sliced nodes — the vertical plane.
+
+    Each node contributes Z_i = X_i W_i; the spanning-tree reduction
+    assembles Z = sum_i Z_i (masked fixed-point when ``secure`` is
+    set), and the fused preactivation->moment kernel
+    (``kernels.elm_stats_ops.fused_preact_moments``) produces the
+    moments without materializing H — the f64 fidelity path
+    materializes H = g(Z + b) instead, matching ``stats.raw_moments``'s
+    dtype policy so clear-mode vertical equals the centralized
+    horizontal plane on the same ``VerticalFeatureMap`` bit-for-bit.
+    """
+    _check_slices(X_slices, fmap)
+    if T.ndim == 1:
+        T = T[:, None]
+    if graph is None:
+        from repro.core.consensus import complete
+
+        graph = complete(fmap.num_nodes)
+    partials = [
+        fmap.partial_preactivation(i, x) for i, x in enumerate(X_slices)
+    ]
+    Z, report = reduce_partials(
+        partials, graph, secure=secure, faults=faults,
+        start_round=start_round, root=root,
+        capture_payloads=capture_payloads,
+    )
+    dtype = (
+        stats_lib.accum_dtype(Z, T) if dtype is None else jnp.dtype(dtype)
+    )
+    if dtype == jnp.float32:
+        from repro.kernels import elm_stats_ops
+
+        P, Q = elm_stats_ops.fused_preact_moments(
+            Z, fmap.bias, T, activation=fmap.activation,
+            use_kernel=use_kernel, **kw,
+        )
+    else:
+        H = ACTIVATIONS[fmap.activation](Z + fmap.bias)
+        P, Q = stats_lib.hidden_moments(H, T, dtype=dtype)
+    Tf = T.astype(dtype)
+    s = stats_lib.SufficientStats(
+        P=P.astype(dtype),
+        Q=Q.astype(dtype),
+        t_sq=jnp.sum(Tf * Tf),
+        count=jnp.asarray(T.shape[0], dtype),
+    )
+    return s, report
+
+
+def vertical_train(
+    X_slices,
+    T: jax.Array,
+    fmap: VerticalFeatureMap,
+    C: float,
+    **kw,
+) -> tuple[jax.Array, stats_lib.SufficientStats, ReduceReport]:
+    """Centralized-equivalent ridge readout from column-sliced nodes.
+
+    Returns (beta, stats, report): beta = (I/C + P)^{-1} Q via the
+    stats plane's Cholesky solve — the solution every DC-ELM node
+    converges to (Thm. 2), computed here in one shot at the root.
+    """
+    s, report = vertical_stats(X_slices, T, fmap, **kw)
+    beta = stats_lib.ridge_solve_moments(s.P, s.Q, C)
+    return beta, s, report
+
+
+def _scaled_node_stats(
+    s: stats_lib.SufficientStats, C: float, V: int
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Stacked (omegas, Qs, betas) giving every node 1/V of the stats.
+
+    With P_i = P/V and Q_i = Q/V the node init (paper eq. 21) yields
+    Omega_i Q_i = (I/(VC) + P/V)^{-1} (Q/V) = (I/C + P)^{-1} Q = beta*
+    — every node seeds *at* the centralized optimum, so the consensus
+    phase only has to hold it there (and absorb streaming updates).
+    """
+    Pn = s.P / V
+    Qn = s.Q / V
+    omega = stats_lib.omega_from_moments(Pn, C, V)
+    beta = omega @ Qn
+    tile = lambda a: jnp.broadcast_to(a, (V,) + a.shape)  # noqa: E731
+    return tile(omega), tile(Qn), tile(beta)
+
+
+def simulate_init(
+    X_slices,
+    T: jax.Array,
+    fmap: VerticalFeatureMap,
+    C: float,
+    graph: Graph,
+    *,
+    secure=None,
+    faults: FaultModel | None = None,
+    **kw,
+):
+    """Vertical DC-ELM node init — Algorithm 1 steps 1-3, columns-split.
+
+    Returns (DCELMState, SufficientStats, ReduceReport). The stats are
+    assembled once over the spanning tree (masked when ``secure``),
+    then every node is seeded with the 1/V-scaled moments so the
+    existing consensus machinery (``engine.simulated_dc_elm``,
+    streaming, faults, compression) composes unchanged on top.
+    """
+    from repro.core import dc_elm
+
+    s, report = vertical_stats(
+        X_slices, T, fmap, graph=graph, secure=secure, faults=faults, **kw
+    )
+    V = graph.num_nodes
+    omegas, Qs, betas = _scaled_node_stats(s, C, V)
+    del Qs
+    state = dc_elm.DCELMState(
+        betas=betas, omegas=omegas, k=jnp.zeros((), jnp.int32)
+    )
+    return state, s, report
+
+
+def stream_init(
+    eng,
+    X_slices,
+    T: jax.Array,
+    fmap: VerticalFeatureMap,
+    *,
+    graph: Graph | None = None,
+    secure=None,
+    faults: FaultModel | None = None,
+    **kw,
+):
+    """Vertical twin of ``ConsensusEngine.stream_init``.
+
+    Returns (StreamState, SufficientStats, ReduceReport). The engine's
+    ``secure`` field (``engine.with_secure_aggregation``) is picked up
+    when the ``secure=`` argument is not given explicitly.
+    """
+    from repro.core.engine import StreamState
+
+    C, V = eng._ridge_constants()
+    if secure is None:
+        secure = getattr(eng, "secure", None)
+    s, report = vertical_stats(
+        X_slices, T, fmap, graph=graph, secure=secure, faults=faults, **kw
+    )
+    omegas, Qs, betas = _scaled_node_stats(s, C, V)
+    return StreamState(omegas=omegas, Qs=Qs, betas=betas), s, report
+
+
+def stream_chunk(
+    eng,
+    state,
+    X_new_slices,
+    T_new: jax.Array,
+    fmap: VerticalFeatureMap,
+    *,
+    gamma,
+    num_iters: int,
+    graph: Graph | None = None,
+    secure=None,
+    faults: FaultModel | None = None,
+    start_round: int = 0,
+    remove: bool = False,
+    publish_to=None,
+    dtype=None,
+    **kw,
+):
+    """Online vertical chunk — Algorithm 2 over column-sliced rows.
+
+    New rows arrive at *every* node simultaneously (the same samples,
+    each node seeing only its columns). The chunk's preactivation is
+    assembled over the tree (masked when ``secure``), then the update
+    rides the horizontal machinery exactly: every node folds the
+    1/sqrt(V)-scaled hidden chunk into its Woodbury state, which keeps
+    the per-node stats at 1/V of the network totals — so the re-seeded
+    betas stay at the centralized optimum of the *updated* data.
+    ``remove=True`` retires the rows instead (eq. 26).
+
+    Returns ((StreamState, traces), ReduceReport).
+    """
+    _check_slices(X_new_slices, fmap)
+    if T_new.ndim == 1:
+        T_new = T_new[:, None]
+    if graph is None:
+        from repro.core.consensus import complete
+
+        graph = complete(fmap.num_nodes)
+    if secure is None:
+        secure = getattr(eng, "secure", None)
+    partials = [
+        fmap.partial_preactivation(i, x)
+        for i, x in enumerate(X_new_slices)
+    ]
+    dZ, report = reduce_partials(
+        partials, graph, secure=secure, faults=faults,
+        start_round=start_round, **kw,
+    )
+    dH = ACTIVATIONS[fmap.activation](dZ + fmap.bias)
+    if dtype is not None:
+        dH = dH.astype(dtype)
+    V = graph.num_nodes
+    scale = 1.0 / jnp.sqrt(jnp.asarray(float(V), dH.dtype))
+    tile = lambda a: jnp.broadcast_to(a, (V,) + a.shape)  # noqa: E731
+    chunk = (tile(dH * scale), tile(T_new.astype(dH.dtype) * scale))
+    out = eng.stream_chunk(
+        state,
+        added=None if remove else chunk,
+        removed=chunk if remove else None,
+        gamma=gamma,
+        num_iters=num_iters,
+        publish_to=publish_to,
+    )
+    return out, report

@@ -63,7 +63,7 @@ import jax.numpy as jnp
 from repro.analysis.roofline import HBM_BW, PEAK_FLOPS
 
 SCHEMA_VERSION = 1
-OPS = ("stats", "predict", "stacked", "gossip")
+OPS = ("stats", "preact_stats", "predict", "stacked", "gossip")
 IMPLS = ("scan", "pallas")
 
 #: working-set budgets for the pruning test (bytes): VMEM for the
@@ -81,11 +81,13 @@ TIE_FACTOR = 1.03
 #: miss (elm_stats_scan / elm_predict_scan / *_pallas signatures)
 DEFAULTS = {
     ("stats", "scan"): {"chunk": 2048},
+    ("preact_stats", "scan"): {"chunk": 2048},
     ("predict", "scan"): {"chunk": 4096},
     # stacked: the gathered (chunk, L, M) beta tiles dominate the
     # working set, so the default chunk sits below the single-beta scan
     ("stacked", "scan"): {"chunk": 2048},
     ("stats", "pallas"): {"block_n": 512, "block_l": 256},
+    ("preact_stats", "pallas"): {"block_n": 512, "block_l": 256},
     ("predict", "pallas"): {"block_n": 512, "block_l": 256},
     ("stacked", "pallas"): {"block_n": 256, "block_l": 256},
     # gossip: the point maps V -> N and d_max -> D (kernels/elm_gossip);
@@ -207,6 +209,10 @@ class TunePoint:
         N, D, L, M = self.N, self.D, self.L, self.M
         if self.op == "stats":
             return 2.0 * N * D * L + 2.0 * N * L * (L + M)
+        if self.op == "preact_stats":
+            # vertical mode: the feature matmul already happened across
+            # column-sliced nodes; only bias+activation+moments remain
+            return 2.0 * N * L * (L + M)
         if self.op == "gossip":
             # per round: neighbor-weighted gather-accumulate over D
             # slots plus the (L, L) @ (L, M) Omega contraction per node
@@ -286,6 +292,9 @@ def working_set_bytes(point: TunePoint, cfg: dict) -> float:
             return s * (c * D + D * L + c * L + c * M) + 4.0 * (
                 L * L + L * M
             )
+        if point.op == "preact_stats":
+            # Z chunk + H tile + T chunk + f32 moment carries
+            return s * (2 * c * L + c * M) + 4.0 * (L * L + L * M)
         if point.op == "stacked":
             # X chunk + W + H tile + stacked betas + gathered per-row
             # beta tiles (the term that caps the chunk) + Y chunk
@@ -300,6 +309,9 @@ def working_set_bytes(point: TunePoint, cfg: dict) -> float:
         return s * (bn * D + 2 * D * bl + 2 * bn * bl + bn * M) + 4.0 * (
             bl * bl + bl * M
         )
+    if point.op == "preact_stats":
+        # two Z tiles + two H tiles + T tile + f32 P/Q blocks
+        return s * (4 * bn * bl + bn * M) + 4.0 * (bl * bl + bl * M)
     if point.op == "stacked":
         # X tile + W block + H tile + (T, bl, M) beta block + gathered
         # (bn, bl, M) tiles + f32 out block
@@ -333,11 +345,18 @@ def hbm_bytes(point: TunePoint, cfg: dict) -> float:
     if point.impl == "scan":
         c = cfg["chunk"]
         steps = math.ceil(N / c)
-        base = s * (N * D + N * M)  # X and T stream through once
+        if point.op == "preact_stats":
+            base = s * (N * L + N * M)  # Z and T stream through once
+        else:
+            base = s * (N * D + N * M)  # X and T stream through once
         carry = 2.0 * 4 * (L * L + L * M) * steps  # P/Q read+write per step
         # the hidden tile spills past the cache budget -> extra round trip
         spill = s * N * L if s * c * L > CACHE_BUDGET / 2 else 0.0
-        out = 4.0 * (L * L + L * M) if point.op == "stats" else s * N * M
+        out = (
+            4.0 * (L * L + L * M)
+            if point.op in ("stats", "preact_stats")
+            else s * N * M
+        )
         if point.op == "stacked":
             # the gathered (c, L, M) beta tiles are materialized per
             # step: N*L*M of gather traffic across the whole run
@@ -353,6 +372,10 @@ def hbm_bytes(point: TunePoint, cfg: dict) -> float:
             + s * D * L * jblocks * math.ceil(N / bn)
             + 4.0 * (L * L + L * M)
         )
+    if point.op == "preact_stats":
+        # two (bn, bl) Z tiles per upper-triangle (i, j) block pair
+        zpasses = jblocks * (jblocks + 1) / 2
+        return s * 2.0 * N * bl * zpasses + 4.0 * (L * L + L * M)
     # predict/stacked: X re-streams once per j (L) block; the stacked
     # path additionally re-reads the (T, bl, M) beta block per grid
     # step and gathers (bn, bl, M) per-row tiles
@@ -413,6 +436,11 @@ def _problem(point: TunePoint):
         w = jnp.ones((1, V, d), dt)
         deg = jnp.full((1, V), float(d), dt)
         return betas, omegas, idx, w, deg, 0.01
+    if point.op == "preact_stats":
+        Z = jax.random.normal(ks[0], (point.N, point.L)).astype(dt)
+        b = jax.random.normal(ks[2], (point.L,)).astype(jnp.float32)
+        T = jax.random.normal(ks[3], (point.N, point.M)).astype(dt)
+        return Z, b, T
     X = jax.random.normal(ks[0], (point.N, point.D)).astype(dt)
     W = jax.random.normal(ks[1], (point.D, point.L)).astype(dt)
     b = jax.random.normal(ks[2], (point.L,)).astype(jnp.float32)
@@ -465,6 +493,15 @@ def candidate_fn(point: TunePoint, cfg: dict):
                     chunk=cfg["chunk"],
                 )
             )
+        if point.op == "preact_stats":
+            from repro.kernels.elm_stats_ref import preact_stats_scan
+
+            return jax.jit(
+                functools.partial(
+                    preact_stats_scan, activation="sigmoid",
+                    chunk=cfg["chunk"],
+                )
+            )
         if point.op == "stacked":
             from repro.kernels.elm_predict_ref import (
                 elm_predict_stacked_scan,
@@ -489,6 +526,14 @@ def candidate_fn(point: TunePoint, cfg: dict):
         return jax.jit(
             functools.partial(
                 elm_stats_pallas, activation="sigmoid", **cfg
+            )
+        )
+    if point.op == "preact_stats":
+        from repro.kernels.elm_stats import elm_preact_stats_pallas
+
+        return jax.jit(
+            functools.partial(
+                elm_preact_stats_pallas, activation="sigmoid", **cfg
             )
         )
     if point.op == "stacked":

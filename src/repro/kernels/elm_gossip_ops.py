@@ -34,6 +34,7 @@ import jax.numpy as jnp
 
 from repro.analysis.roofline import gossip_round_terms
 from repro.kernels import autotune
+from repro.kernels.elm_stats_ops import force_interpret
 from repro.kernels.elm_gossip_ref import (
     elm_gossip_scan,
     gossip_round_payload,
@@ -119,7 +120,7 @@ def fused_gossip_rounds(
     """
     V, L, M = betas.shape
     S, _, d_max = idx.shape
-    use = _on_tpu() if use_kernel is None else use_kernel
+    use = (_on_tpu() or force_interpret()) if use_kernel is None else use_kernel
     if betas.dtype != jnp.float32:
         use = False  # the kernel accumulates/stores f32 only
     if use:
@@ -191,7 +192,7 @@ def fused_gossip_round(
     """
     V, L, M = betas.shape
     d_max = idx_k.shape[-1]
-    use = _on_tpu() if use_kernel is None else use_kernel
+    use = (_on_tpu() or force_interpret()) if use_kernel is None else use_kernel
     if betas.dtype != jnp.float32 or payload.dtype != jnp.float32:
         use = False
     if use:

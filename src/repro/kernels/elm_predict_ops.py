@@ -43,7 +43,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import autotune
-from repro.kernels.elm_stats_ops import scan_kwargs
+from repro.kernels.elm_stats_ops import force_interpret, scan_kwargs
 
 
 def _on_tpu() -> bool:
@@ -64,7 +64,7 @@ def fused_predict(
     from repro.kernels.elm_predict_ref import predict_dtype
 
     out_dtype = predict_dtype(X, W, beta)
-    use = _on_tpu() if use_kernel is None else use_kernel
+    use = (_on_tpu() or force_interpret()) if use_kernel is None else use_kernel
     kw = autotune.resolve_config(
         kw, tuning, op="predict", impl="pallas" if use else "scan",
         N=X.shape[0], D=X.shape[1], L=W.shape[1], M=beta.shape[1],
@@ -137,7 +137,7 @@ def fused_predict_stacked(
     from repro.kernels.elm_predict_ref import stacked_dtype
 
     out_dtype = stacked_dtype(X, W, betas)
-    use = _on_tpu() if use_kernel is None else use_kernel
+    use = (_on_tpu() or force_interpret()) if use_kernel is None else use_kernel
     kw = autotune.resolve_config(
         kw, tuning, op="stacked", impl="pallas" if use else "scan",
         N=X.shape[0], D=X.shape[1], L=W.shape[1], M=betas.shape[2],

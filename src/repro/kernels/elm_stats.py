@@ -140,6 +140,153 @@ def _elm_stats_kernel(
         _accum()
 
 
+def preact_tile(z_ref, b_ref, *, activation, rows_in_tile, out_dtype):
+    """g(Z_tile + b_blk), rows past `rows_in_tile` masked to 0.
+
+    The vertical-mode twin of ``hidden_tile``: the feature matmul
+    already happened across column-sliced nodes (core/vertical.py
+    assembled Z = sum_i X_i W_i on the wire), so the tile only applies
+    bias + nonlinearity. The activation runs in f32 and the tile is
+    cast back to the operand dtype, matching the fused pipeline's
+    policy. No "rbf" branch: a gaussian node has no additive
+    preactivation form, so vertical mode rejects it upstream.
+    """
+    from repro.core.features import ACTIVATIONS  # shared registry, no cycle
+
+    z = z_ref[...].astype(jnp.float32)
+    b = b_ref[...].astype(jnp.float32)  # (1, bl)
+    h = ACTIVATIONS[activation](z + b)
+    bn = h.shape[0]
+    row_ids = jax.lax.broadcasted_iota(jnp.int32, (bn, 1), 0)
+    h = jnp.where(row_ids < rows_in_tile, h, 0.0)
+    return h.astype(out_dtype)
+
+
+def _elm_preact_kernel(
+    zi_ref, zj_ref, bi_ref, bj_ref, t_ref, p_ref, q_ref,
+    *, activation, num_rows, block_n, symmetric, operand_dtype,
+):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    n = pl.program_id(2)
+    rows_in_tile = num_rows - n * block_n  # clamped by the iota compare
+
+    @pl.when(n == 0)
+    def _init_p():
+        p_ref[...] = jnp.zeros_like(p_ref)
+
+    @pl.when((n == 0) & (j == 0))
+    def _init_q():
+        q_ref[...] = jnp.zeros_like(q_ref)
+
+    tile = functools.partial(
+        preact_tile,
+        activation=activation, rows_in_tile=rows_in_tile,
+        out_dtype=operand_dtype,
+    )
+
+    def _accum():
+        h_i = tile(zi_ref, bi_ref)
+        if symmetric:
+            # on the diagonal the j-tile IS the i-tile — reuse it
+            h_j = jax.lax.cond(
+                i == j, lambda: h_i, lambda: tile(zj_ref, bj_ref)
+            )
+        else:
+            h_j = tile(zj_ref, bj_ref)
+        p_ref[...] += jax.lax.dot_general(
+            h_i, h_j,
+            dimension_numbers=(((0,), (0,)), ((), ())),  # H_i^T H_j
+            preferred_element_type=jnp.float32,
+        )
+
+        @pl.when(j == (i if symmetric else 0))
+        def _accum_q():
+            t = t_ref[...]
+            q_ref[...] += jax.lax.dot_general(
+                h_i.astype(t.dtype), t,
+                dimension_numbers=(((0,), (0,)), ((), ())),  # H_i^T T
+                preferred_element_type=jnp.float32,
+            )
+
+    if symmetric:
+        pl.when(i <= j)(_accum)
+    else:
+        _accum()
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "activation", "block_l", "block_n", "interpret", "symmetric"
+    ),
+)
+def elm_preact_stats_pallas(
+    Z: jax.Array,
+    b: jax.Array,
+    T: jax.Array,
+    *,
+    activation: str = "sigmoid",
+    block_l: int = 256,
+    block_n: int = 512,
+    interpret: bool = False,
+    symmetric: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """(P, Q) = (H^T H, H^T T) with H = g(Z + b) fused in VMEM.
+
+    Z: (N, L) assembled preactivation, b: (L,), T: (N, M) -> P: (L, L)
+    f32, Q: (L, M) f32. The grid mirrors ``elm_stats_pallas`` — only
+    the tile producer changes (no feature matmul; Z streams straight
+    from HBM in (bn, bl) tiles). Padded L columns evaluate g(0) != 0
+    but land outside the [:L, :L] slice, exactly like padded W columns
+    in the fused pipeline; padded N rows are masked in-kernel.
+    """
+    N, L = Z.shape
+    M = T.shape[1]
+    bl = min(block_l, L)
+    bn = min(block_n, N)
+    pN, pL, pM = (-N) % bn, (-L) % bl, (-M) % 128
+    if pN or pL:
+        Z = jnp.pad(Z, ((0, pN), (0, pL)))
+    b2 = jnp.pad(b, (0, pL))[None, :].astype(jnp.float32)  # (1, L2), 2D
+    if pN or pM:
+        T = jnp.pad(T, ((0, pN), (0, pM)))
+    T = T.astype(jnp.promote_types(Z.dtype, T.dtype))
+    N2, L2, M2 = Z.shape[0], Z.shape[1], T.shape[1]
+    grid = (L2 // bl, L2 // bl, N2 // bn)
+    kernel = functools.partial(
+        _elm_preact_kernel,
+        activation=activation, num_rows=N, block_n=bn,
+        symmetric=symmetric, operand_dtype=Z.dtype,
+    )
+    P, Q = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, bl), lambda i, j, n: (n, i)),  # Z_i
+            pl.BlockSpec((bn, bl), lambda i, j, n: (n, j)),  # Z_j
+            pl.BlockSpec((1, bl), lambda i, j, n: (0, i)),   # b_i
+            pl.BlockSpec((1, bl), lambda i, j, n: (0, j)),   # b_j
+            pl.BlockSpec((bn, M2), lambda i, j, n: (n, 0)),  # T
+        ],
+        out_specs=[
+            pl.BlockSpec((bl, bl), lambda i, j, n: (i, j)),
+            pl.BlockSpec((bl, M2), lambda i, j, n: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((L2, L2), jnp.float32),
+            jax.ShapeDtypeStruct((L2, M2), jnp.float32),
+        ],
+        interpret=interpret,
+    )(Z, Z, b2, b2, T)
+    P = P[:L, :L]
+    Q = Q[:L, :M]
+    if symmetric:
+        upper = jnp.triu(P)
+        P = upper + upper.T - jnp.diag(jnp.diag(upper))
+    return P, Q
+
+
 @functools.partial(
     jax.jit,
     static_argnames=(

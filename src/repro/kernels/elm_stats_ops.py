@@ -29,6 +29,8 @@ an explicit config dict.
 
 from __future__ import annotations
 
+import os
+
 import jax
 
 from repro.kernels import autotune
@@ -36,6 +38,18 @@ from repro.kernels import autotune
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
+
+
+def force_interpret() -> bool:
+    """True when CI's pallas-interpret leg forces the kernel paths.
+
+    ``REPRO_FORCE_INTERPRET=1`` makes every kernel dispatcher whose
+    caller left ``use_kernel=None`` take its Pallas branch (interpret
+    mode off-TPU), so the kernel code paths are exercised on CPU
+    runners instead of only the scan/oracle fallbacks. An explicit
+    ``use_kernel=`` from the caller always wins.
+    """
+    return os.environ.get("REPRO_FORCE_INTERPRET", "").strip() not in ("", "0")
 
 
 def scan_kwargs(kw: dict) -> dict:
@@ -74,7 +88,7 @@ def fused_moments(
     For activation="rbf" pass W = centers^T and b = gamma. ``tuning``
     selects the block-knob policy (see module docstring).
     """
-    use = _on_tpu() if use_kernel is None else use_kernel
+    use = (_on_tpu() or force_interpret()) if use_kernel is None else use_kernel
     kw = autotune.resolve_config(
         kw, tuning, op="stats", impl="pallas" if use else "scan",
         N=X.shape[0], D=X.shape[1], L=W.shape[1], M=T.shape[1],
@@ -96,3 +110,46 @@ def fused_moments(
     from repro.kernels.elm_stats_ref import elm_stats_scan
 
     return elm_stats_scan(X, W, b, T, activation=activation, **scan_kwargs(kw))
+
+
+def fused_preact_moments(
+    Z, b, T, *, activation: str = "sigmoid",
+    use_kernel: bool | None = None, tuning="cached", **kw,
+):
+    """(P, Q) f32 from an assembled preactivation without materializing H.
+
+    The vertical-mode entry: Z = sum_i X_i W_i was already reduced
+    across column-sliced nodes (core/vertical.py), so the kernel only
+    applies bias + activation per tile before the moment accumulation.
+    Same backend/tuning policy as ``fused_moments``; "rbf" is rejected
+    (no additive preactivation form).
+    """
+    if activation == "rbf":
+        raise ValueError(
+            "rbf has no preactivation form; vertical mode supports "
+            "RandomFeatureMap activations only"
+        )
+    use = (_on_tpu() or force_interpret()) if use_kernel is None else use_kernel
+    kw = autotune.resolve_config(
+        kw, tuning, op="preact_stats", impl="pallas" if use else "scan",
+        N=Z.shape[0], D=0, L=Z.shape[1], M=T.shape[1],
+        dtype=Z.dtype,
+    )
+    if use:
+        from repro.kernels.elm_stats import elm_preact_stats_pallas
+
+        if kw.get("chunk") is not None:
+            raise ValueError(
+                "chunk is the scan-fallback knob; the Pallas kernel "
+                "takes block_n/block_l"
+            )
+        kw.pop("chunk", None)
+        return elm_preact_stats_pallas(
+            Z, b, T, activation=activation,
+            interpret=not _on_tpu(), **kw,
+        )
+    from repro.kernels.elm_stats_ref import preact_stats_scan
+
+    return preact_stats_scan(
+        Z, b, T, activation=activation, **scan_kwargs(kw)
+    )

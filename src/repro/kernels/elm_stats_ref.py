@@ -37,6 +37,75 @@ def elm_stats_reference(X, W, b, T, *, activation="sigmoid"):
     return gram_reference(H), cross_reference(H, T)
 
 
+def preact_reference(Z: jax.Array, b: jax.Array, activation: str) -> jax.Array:
+    """H = g(Z + b) from an assembled preactivation (vertical mode).
+
+    No "rbf" branch: gaussian nodes have no additive preactivation
+    form, so vertical mode rejects them before reaching the kernels.
+    """
+    from repro.core.features import ACTIVATIONS
+
+    if activation == "rbf":
+        raise ValueError(
+            "rbf has no preactivation form (h = exp(-gamma ||x - c||^2) "
+            "is not g(z + b) for any additive z); vertical mode supports "
+            "RandomFeatureMap activations only"
+        )
+    return ACTIVATIONS[activation](Z + b)
+
+
+def preact_stats_reference(Z, b, T, *, activation="sigmoid"):
+    """(P, Q) via materialized H = g(Z + b) — the unfused oracle."""
+    H = preact_reference(Z, b, activation)
+    return gram_reference(H), cross_reference(H, T)
+
+
+@functools.partial(jax.jit, static_argnames=("activation", "chunk"))
+def preact_stats_scan(Z, b, T, *, activation="sigmoid", chunk=2048):
+    """(P, Q) streamed over an assembled preactivation Z in chunks.
+
+    The vertical-mode twin of ``elm_stats_scan``: H = g(Z + b) is
+    produced per (chunk, L) tile and consumed by the f32 moment
+    accumulators, so the full (N, L) hidden matrix never exists.
+    Ragged tails are masked to exact zeros like the Pallas kernel.
+    """
+    N, L = Z.shape
+    M = T.shape[1]
+    chunk = min(chunk, N)
+    if chunk == N:
+        # single-chunk point: one fused jit, no scan machinery —
+        # bitwise-identical to the one-step scan (0 + x is exact)
+        h = preact_reference(Z, b, activation).astype(Z.dtype)
+        return gram_reference(h), cross_reference(h, T)
+    pN = (-N) % chunk
+    if pN:
+        Z = jnp.pad(Z, ((0, pN), (0, 0)))
+        T = jnp.pad(T, ((0, pN), (0, 0)))
+    K = Z.shape[0] // chunk
+    Zc = Z.reshape(K, chunk, L)
+    Tc = T.reshape(K, chunk, M)
+    starts = jnp.arange(K) * chunk
+    row_ids = jnp.arange(chunk)[:, None]
+
+    def step(carry, inp):
+        P, Q = carry
+        z, t, start = inp
+        h = preact_reference(z, b, activation)
+        if pN:  # only the padded tail needs masking (g(0) != 0)
+            h = jnp.where(row_ids + start < N, h, 0.0)
+        h = h.astype(z.dtype)
+        P = P + gram_reference(h)
+        Q = Q + cross_reference(h, t)
+        return (P, Q), None
+
+    zero = (
+        jnp.zeros((L, L), jnp.float32),
+        jnp.zeros((L, M), jnp.float32),
+    )
+    (P, Q), _ = jax.lax.scan(step, zero, (Zc, Tc, starts))
+    return P, Q
+
+
 @functools.partial(jax.jit, static_argnames=("activation", "chunk"))
 def elm_stats_scan(X, W, b, T, *, activation="sigmoid", chunk=2048):
     """(P, Q) streamed over N in `chunk`-row tiles (H never full-size).

@@ -4,6 +4,7 @@ from __future__ import annotations
 
 import jax
 
+from repro.kernels.elm_stats_ops import force_interpret
 from repro.kernels.gram_ref import cross_reference, gram_reference
 
 
@@ -12,7 +13,7 @@ def _on_tpu() -> bool:
 
 
 def gram(H, *, use_kernel: bool | None = None, **kw):
-    use = _on_tpu() if use_kernel is None else use_kernel
+    use = (_on_tpu() or force_interpret()) if use_kernel is None else use_kernel
     if use:
         from repro.kernels.gram import gram_pallas
 
@@ -21,7 +22,7 @@ def gram(H, *, use_kernel: bool | None = None, **kw):
 
 
 def cross(H, T, *, use_kernel: bool | None = None, **kw):
-    use = _on_tpu() if use_kernel is None else use_kernel
+    use = (_on_tpu() or force_interpret()) if use_kernel is None else use_kernel
     if use:
         from repro.kernels.gram import cross_pallas
 

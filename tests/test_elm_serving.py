@@ -45,6 +45,7 @@ def _problem(N, D, L, M, dtype, activation, seed=0):
 # ---------------------------------------------------------------------------
 
 
+@pytest.mark.interpret
 @pytest.mark.parametrize(
     "activation", ["sigmoid", "tanh", "relu", "sin", "identity", "rbf"]
 )
@@ -61,6 +62,7 @@ def test_kernel_parity_activations(activation):
     assert _relerr(scan, ref) < 2e-5
 
 
+@pytest.mark.interpret
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 @pytest.mark.parametrize(
     "shape",

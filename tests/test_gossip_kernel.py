@@ -168,6 +168,7 @@ def test_time_varying_snapshots_parity():
 # ---------------------------------------------------------------------------
 
 
+@pytest.mark.interpret
 def test_pallas_single_round_matches_reference():
     g = build("hypercube", 8)
     adj = _adj(g)
@@ -184,6 +185,7 @@ def test_pallas_single_round_matches_reference():
     np.testing.assert_allclose(got, want, **TOL)
 
 
+@pytest.mark.interpret
 @pytest.mark.parametrize("compress", [None, "bf16"])
 def test_pallas_scanned_rounds_match_scan(compress):
     g = build("hypercube", 8)
@@ -200,6 +202,7 @@ def test_pallas_scanned_rounds_match_scan(compress):
     np.testing.assert_allclose(got, want, **TOL)
 
 
+@pytest.mark.interpret
 @pytest.mark.parametrize("compress", [None, "bf16"])
 def test_pallas_multiround_arm_matches_scan(compress):
     gs = alternating_halves(8)
@@ -219,6 +222,7 @@ def test_pallas_multiround_arm_matches_scan(compress):
     np.testing.assert_allclose(got, want, **TOL)
 
 
+@pytest.mark.interpret
 def test_pallas_explicit_payload_round():
     g = build("hypercube", 8)
     adj = _adj(g)

@@ -1,0 +1,243 @@
+"""Secure aggregation: mask algebra, crash recovery, leakage.
+
+The pairwise additive masks live in uint64 mod-2^64 arithmetic over a
+fixed-point encoding, so full-cohort cancellation is *exact* and every
+assertion here about mask algebra is bitwise, not approximate. The
+only approximation in the whole protocol is the fixed-point grid
+(2^-frac_bits), pinned explicitly where it appears.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import consensus, vertical
+from repro.core.consensus import FaultModel, NodeCrash
+from repro.core.secure import (
+    SecureAggregationSpec,
+    SecureAggregator,
+    decode_fixed,
+    encode_fixed,
+    node_mask,
+    pair_mask,
+)
+
+
+def _values(rng, n=64, scale=10.0):
+    return (rng.standard_normal(n) * scale).astype(np.float64)
+
+
+# ---------------------------------------------------------------------------
+# Fixed-point codec
+# ---------------------------------------------------------------------------
+
+
+def test_fixed_point_roundtrip_on_grid():
+    spec = SecureAggregationSpec(seed=0)
+    rng = np.random.default_rng(0)
+    x = _values(rng)
+    back = decode_fixed(encode_fixed(x, spec.frac_bits), spec.frac_bits)
+    assert np.abs(back - x).max() <= spec.resolution
+    # values already on the grid roundtrip bitwise
+    grid = np.round(x * 2.0**spec.frac_bits) / 2.0**spec.frac_bits
+    again = decode_fixed(encode_fixed(grid, spec.frac_bits), spec.frac_bits)
+    np.testing.assert_array_equal(again, grid)
+
+
+def test_fixed_point_headroom_check():
+    with pytest.raises(ValueError, match="fixed-point range"):
+        encode_fixed(np.array([2.0e12]), 32)
+
+
+def test_spec_parse_forms():
+    assert SecureAggregationSpec.parse(True).seed == 0
+    assert SecureAggregationSpec.parse(7).seed == 7
+    spec = SecureAggregationSpec(seed=3, frac_bits=20)
+    assert SecureAggregationSpec.parse(spec) is spec
+    # None means "secure, default spec" at the parse layer; the off/on
+    # decision (secure=None disables) lives in reduce_partials
+    assert SecureAggregationSpec.parse(None).seed == 0
+
+
+# ---------------------------------------------------------------------------
+# Mask algebra
+# ---------------------------------------------------------------------------
+
+
+def test_pair_masks_are_symmetric_and_seeded():
+    spec = SecureAggregationSpec(seed=5)
+    a = pair_mask(spec, 2, 7, 32, tag=1)
+    b = pair_mask(spec, 7, 2, 32, tag=1)
+    np.testing.assert_array_equal(a, b)  # shared edge PRNG
+    c = pair_mask(spec, 2, 7, 32, tag=2)
+    assert not np.array_equal(a, c)  # fresh masks per round tag
+
+
+def test_full_cohort_masks_cancel_bitwise():
+    spec = SecureAggregationSpec(seed=9)
+    parts = list(range(5))
+    total = np.zeros(48, np.uint64)
+    for i in parts:
+        total = total + node_mask(spec, i, parts, 48, tag=3)
+    np.testing.assert_array_equal(total, np.zeros(48, np.uint64))
+
+
+def test_aggregate_matches_plain_sum_full_cohort():
+    spec = SecureAggregationSpec(seed=1)
+    rng = np.random.default_rng(1)
+    vals = {i: _values(rng) for i in range(4)}
+    agg = SecureAggregator(spec, tuple(range(4)))
+    payloads = {i: agg.mask(i, v, tag=0) for i, v in vals.items()}
+    got = agg.aggregate(payloads, tag=0)
+    want = sum(vals.values())
+    # exact up to the fixed-point grid (one rounding per node)
+    assert np.abs(got - want).max() <= 4 * spec.resolution
+
+
+# ---------------------------------------------------------------------------
+# Leakage: payloads never expose raw partials
+# ---------------------------------------------------------------------------
+
+
+def test_masked_payload_never_equals_raw_encoding():
+    """No gossip payload may equal any node's raw (encoded) partials."""
+    spec = SecureAggregationSpec(seed=2)
+    rng = np.random.default_rng(2)
+    vals = {i: _values(rng) for i in range(4)}
+    raw = {i: encode_fixed(v, spec.frac_bits) for i, v in vals.items()}
+    agg = SecureAggregator(spec, tuple(range(4)))
+    payloads = {i: agg.mask(i, v, tag=0) for i, v in vals.items()}
+    for i, p in payloads.items():
+        for j, r in raw.items():
+            assert not np.array_equal(p, r), (i, j)
+
+
+def test_tree_reduction_payloads_stay_masked():
+    """Every captured wire payload differs from every raw partial."""
+    rng = np.random.default_rng(3)
+    V, N, L = 5, 20, 8
+    partials = [rng.standard_normal((N, L)) for _ in range(V)]
+    spec = SecureAggregationSpec(seed=4)
+    g = consensus.ring(V)
+    Z, rep = vertical.reduce_partials(
+        partials, g, secure=spec, capture_payloads=True
+    )
+    want = np.sum(np.stack(partials), axis=0)
+    # grid error plus one f32 rounding (Z lands in the default jnp dtype)
+    np.testing.assert_allclose(np.asarray(Z), want, rtol=1e-5, atol=1e-5)
+    raw = [
+        encode_fixed(p.reshape(-1).astype(np.float64), spec.frac_bits)
+        for p in partials
+    ]
+    assert rep.payloads  # capture actually recorded wire traffic
+    for (src, dst), payload in rep.payloads.items():
+        for j, r in enumerate(raw):
+            assert not np.array_equal(payload, r), (src, dst, j)
+
+
+# ---------------------------------------------------------------------------
+# Crash-time mask recovery (FaultModel interaction)
+# ---------------------------------------------------------------------------
+
+
+def test_crash_mid_round_recovers_survivor_sum():
+    """Deterministic regression: node 3 crashes mid-reduction.
+
+    The recovered aggregate must equal the sum over *delivered* nodes
+    (no mask residue, no corruption from the dropped node's partial).
+    """
+    rng = np.random.default_rng(7)
+    V, N, L = 5, 16, 6
+    partials = [rng.standard_normal((N, L)) for _ in range(V)]
+    spec = SecureAggregationSpec(seed=11)
+    g = consensus.line(V)  # line graph: deep tree, mid-path crash hurts
+    fm = FaultModel(
+        graph=g, crashes=(NodeCrash(node=3, start=1, duration=10),)
+    )
+    Z, rep = vertical.reduce_partials(
+        partials, g, secure=spec, faults=fm, start_round=0
+    )
+    assert 3 not in rep.delivered
+    want = np.sum(np.stack([partials[i] for i in rep.delivered]), axis=0)
+    np.testing.assert_allclose(np.asarray(Z), want, rtol=1e-5, atol=1e-5)
+    # clear-mode reduction under the same faults agrees (same cohort)
+    Zc, repc = vertical.reduce_partials(partials, g, faults=fm)
+    assert repc.delivered == rep.delivered
+    np.testing.assert_allclose(np.asarray(Z), np.asarray(Zc), atol=1e-5,
+                               rtol=1e-5)
+
+
+def test_crashed_at_start_is_excluded_not_dropped():
+    """Nodes dead before the round never agree masks: exact bitwise
+    parity with the survivor-only clear reduction (no grid error from
+    a recovery step, because no recovery is needed)."""
+    rng = np.random.default_rng(8)
+    V = 4
+    partials = [rng.standard_normal((8, 4)) for _ in range(V)]
+    spec = SecureAggregationSpec(seed=12)
+    g = consensus.ring(V)
+    fm = FaultModel(
+        graph=g, crashes=(NodeCrash(node=2, start=0, duration=99),)
+    )
+    Z, rep = vertical.reduce_partials(
+        partials, g, secure=spec, faults=fm, start_round=0
+    )
+    assert rep.excluded == (2,) and rep.dropped == ()
+    survivors = [p for i, p in enumerate(partials) if i != 2]
+    want = np.sum(np.stack(survivors), axis=0)
+    np.testing.assert_allclose(np.asarray(Z), want, rtol=1e-5, atol=1e-5)
+
+
+def test_residual_mask_closes_the_books():
+    """residual_mask(survivors, dropped) is exactly the sum of the
+    dropped nodes' mask contributions toward the survivors."""
+    spec = SecureAggregationSpec(seed=13)
+    parts = (0, 1, 2, 3, 4)
+    agg = SecureAggregator(spec, parts)
+    dropped, survivors = (1, 4), (0, 2, 3)
+    n = 16
+    resid = agg.residual_mask(survivors, dropped, n, tag=5)
+    want = np.zeros(n, np.uint64)
+    for d in dropped:
+        for s in survivors:
+            r = pair_mask(spec, d, s, n, tag=5)
+            # sign as seen from the *survivor* side
+            want = want + r if s < d else want - r
+    np.testing.assert_array_equal(resid, want)
+
+
+def test_masked_sum_equals_unmasked_sum_over_surviving_subsets():
+    """Property (hypothesis): for any surviving subset handled by
+    recovery, decode(sum(masked) - residual) == sum(unmasked)."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @given(
+        v=st.integers(2, 7),
+        seed=st.integers(0, 2**30),
+        tag=st.integers(0, 5),
+        data=st.data(),
+    )
+    @settings(max_examples=25, deadline=None)
+    def prop(v, seed, tag, data):
+        rng = np.random.default_rng(seed)
+        vals = {i: _values(rng, n=12) for i in range(v)}
+        spec = SecureAggregationSpec(seed=seed % 997)
+        agg = SecureAggregator(spec, tuple(range(v)))
+        survivors = data.draw(
+            st.sets(st.integers(0, v - 1), min_size=1, max_size=v)
+        )
+        payloads = {
+            i: agg.mask(i, vals[i], tag=tag) for i in sorted(survivors)
+        }
+        got = agg.aggregate(payloads, tag=tag)
+        want = sum(vals[i] for i in survivors)
+        assert np.abs(got - want).max() <= v * spec.resolution
+
+    prop()
+
+
+def test_payload_byte_accounting():
+    spec = SecureAggregationSpec(seed=0)
+    assert spec.payload_bytes(100) == 800  # uint64 per value
+    agg = SecureAggregator(spec, (0, 1, 2))
+    assert agg.payload_bytes(100) == 800

@@ -27,6 +27,7 @@ def _problem(N, D, L, M, activation="sigmoid", dtype=jnp.float32, seed=0):
 # ---------------------------------------------------------------------------
 
 
+@pytest.mark.interpret
 @pytest.mark.parametrize("activation", ALL_ACTIVATIONS)
 def test_fused_kernel_matches_oracle_all_activations(activation):
     fmap, X, T = _problem(100, 5, 33, 3, activation)
@@ -39,6 +40,7 @@ def test_fused_kernel_matches_oracle_all_activations(activation):
     np.testing.assert_allclose(Q1, Q0, rtol=2e-3, atol=2e-3)
 
 
+@pytest.mark.interpret
 @pytest.mark.parametrize(
     "N,D,L,M", [(64, 4, 32, 2), (300, 7, 100, 1), (33, 3, 7, 5),
                 (128, 16, 64, 8)]
@@ -56,6 +58,7 @@ def test_fused_kernel_shape_sweep_ragged(N, D, L, M):
     np.testing.assert_allclose(Q1, Q0, rtol=2e-3, atol=2e-3)
 
 
+@pytest.mark.interpret
 @pytest.mark.parametrize("activation", ["sigmoid", "rbf"])
 def test_fused_kernel_bf16_operands(activation):
     fmap, X, T = _problem(128, 6, 40, 2, activation)
@@ -74,6 +77,7 @@ def test_fused_kernel_bf16_operands(activation):
     np.testing.assert_allclose(Q1, Q0, rtol=5e-2, atol=5e-2 * 128**0.5)
 
 
+@pytest.mark.interpret
 def test_fused_kernel_keeps_f32_target_precision():
     """bf16 features + f32 targets with a large offset: the kernel must
     not quantize T down to bf16 — pinned against the scan path, which
@@ -93,6 +97,7 @@ def test_fused_kernel_keeps_f32_target_precision():
     np.testing.assert_allclose(P1, P2, rtol=1e-5, atol=1e-4)
 
 
+@pytest.mark.interpret
 def test_fused_kernel_symmetric_matches_full():
     fmap, X, T = _problem(96, 5, 48, 2)
     W, b, act = stats.fusable_params(fmap)

@@ -1,0 +1,66 @@
+#!/usr/bin/env python3
+"""Coverage floor gate (stdlib only; CI's coverage job).
+
+Reads the Cobertura ``coverage.xml`` that pytest-cov writes and fails
+when line coverage drops below the committed floor:
+
+    PYTHONPATH=src python -m pytest --cov=repro --cov-report=xml ...
+    python tools/coverage_gate.py [--xml coverage.xml]
+                                  [--floor coverage_floor.txt]
+
+The floor lives in ``coverage_floor.txt`` at the repo root — a single
+number (percent). Raise it as coverage grows; never lower it to make
+CI pass (fix the missing tests instead, or revert the change that
+dropped it). The gate prints per-package rates so a regression is
+attributable from the job log alone.
+
+Exit code 0 = at or above the floor, 1 = below (or missing inputs).
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import xml.etree.ElementTree as ET
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--xml", default=str(REPO / "coverage.xml"))
+    ap.add_argument("--floor", default=str(REPO / "coverage_floor.txt"))
+    args = ap.parse_args()
+
+    floor_path = Path(args.floor)
+    xml_path = Path(args.xml)
+    if not floor_path.exists():
+        print(f"coverage floor file missing: {floor_path}")
+        return 1
+    if not xml_path.exists():
+        print(f"coverage report missing: {xml_path} (run pytest --cov)")
+        return 1
+
+    floor = float(floor_path.read_text().strip())
+    root = ET.parse(xml_path).getroot()
+    rate = float(root.get("line-rate", 0.0)) * 100.0
+
+    for pkg in root.iter("package"):
+        pr = float(pkg.get("line-rate", 0.0)) * 100.0
+        print(f"  {pkg.get('name'):<40s} {pr:6.1f}%")
+    print(f"total line coverage: {rate:.2f}% (floor {floor:.2f}%)")
+
+    if rate < floor:
+        print(
+            f"\nCOVERAGE REGRESSION: {rate:.2f}% < floor {floor:.2f}% — "
+            "add tests for the uncovered lines (or revert the change "
+            "that dropped them); do not lower coverage_floor.txt"
+        )
+        return 1
+    print("coverage gate OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
